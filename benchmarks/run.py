@@ -1,0 +1,254 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  * bench_strong_scaling   — paper fig. 6: N-body / RSim / WaveSim speedup
+                             vs device count, ad-hoc baseline vs IDAG runtime
+  * bench_overlap          — paper fig. 7: scheduler/executor overlap
+  * bench_lookahead        — §4.3: resize elision (allocation counts + wall)
+  * bench_executor_latency — §4.1: out-of-order engine issue latency
+  * bench_roofline         — §Roofline: three terms per (arch x shape) cell
+                             from the dry-run artifacts
+
+Output: ``name,us_per_call,derived`` CSV rows on stdout.
+
+Run: PYTHONPATH=src python -m benchmarks.run [bench_name ...]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.core import (Box, Region, Runtime, all_range, fixed, neighborhood,
+                        one_to_one, read, read_write, write)  # noqa: E402
+
+CSV: list[str] = []
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    row = f"{name},{us:.1f},{derived}"
+    CSV.append(row)
+    print(row, flush=True)
+
+
+# ---------------------------------------------------------------------------
+# simulated-kernel applications (strong scaling is about RUNTIME overhead;
+# kernel time is a deterministic sleep ∝ work/devices, as on a real cluster)
+
+KERNEL_UNIT = 10e-6   # seconds of simulated compute per work unit
+
+
+def _nbody_app(rt: Runtime, N: int, steps: int, devices: int) -> None:
+    P = rt.buffer((N, 3), init=np.zeros((N, 3)), name="P")
+    V = rt.buffer((N, 3), init=np.zeros((N, 3)), name="V")
+
+    def timestep(chunk, p, v):
+        n = chunk.max[0] - chunk.min[0]
+        time.sleep(KERNEL_UNIT * n * N / 4096)     # O(N^2) / P
+        v.set(chunk, v.get(chunk) + 1.0)
+
+    def update(chunk, v, p):
+        time.sleep(KERNEL_UNIT * (chunk.max[0] - chunk.min[0]) / 64)
+        p.set(chunk, p.get(chunk) + v.get(chunk))
+
+    for _ in range(steps):
+        rt.submit("timestep", (N, 3),
+                  [read(P, all_range()), read_write(V, one_to_one())],
+                  timestep)
+        rt.submit("update", (N, 3),
+                  [read(V, one_to_one()), read_write(P, one_to_one())],
+                  update)
+    rt.sync(timeout=300)
+
+
+def _rsim_app(rt: Runtime, T: int, W: int, devices: int) -> None:
+    R = rt.buffer((T, W), init=np.zeros((T, W)), name="R")
+
+    def row_cols(t):
+        def rm(chunk, shape):
+            return Region.from_box(
+                Box((t, chunk.min[1]), (t + 1, chunk.max[1])))
+        return rm
+
+    for t in range(T):
+        def radiosity(chunk, prev, row, t=t):
+            time.sleep(KERNEL_UNIT * max(t, 1) * (chunk.max[1] - chunk.min[1])
+                       / W * 8)
+            row.set(Box((t, chunk.min[1]), (t + 1, chunk.max[1])),
+                    np.full(chunk.max[1] - chunk.min[1], float(t)))
+
+        rt.submit(f"rad{t}", Box((0, 0), (1, W)),
+                  [read(R, fixed(Box((0, 0), (max(t, 1), W)))),
+                   write(R, row_cols(t))], radiosity, split_dims=(1,))
+    rt.sync(timeout=300)
+
+
+def _wavesim_app(rt: Runtime, H: int, W: int, steps: int, devices: int) -> None:
+    B = [rt.buffer((H, W), init=np.zeros((H, W)), name=f"u{i}")
+         for i in range(3)]
+
+    def step_kernel(chunk, um, u, un):
+        time.sleep(KERNEL_UNIT * (chunk.max[0] - chunk.min[0]) / 32)
+        un.set(chunk, um.get(chunk))
+
+    for s in range(steps):
+        um, u, un = B[s % 3], B[(s + 1) % 3], B[(s + 2) % 3]
+        rt.submit(f"wave{s}", (H, W),
+                  [read(um, one_to_one()), read(u, neighborhood((1, 0))),
+                   write(un, one_to_one())], step_kernel)
+    rt.sync(timeout=300)
+
+
+def _run_app(app, kind: str, nodes: int, devs: int, **kw) -> float:
+    """kind: 'idag' (full runtime) or 'adhoc' (baseline: no lookahead, one
+    queue per device, one host thread — memory ops serialize with kernels)."""
+    lookahead = kind == "idag"
+    qpd = 2 if kind == "idag" else 1
+    ht = 4 if kind == "idag" else 1
+    t0 = time.perf_counter()
+    with Runtime(num_nodes=nodes, devices_per_node=devs, lookahead=lookahead,
+                 queues_per_device=qpd, host_threads=ht) as rt:
+        app(rt, devices=nodes * devs, **kw)
+    return time.perf_counter() - t0
+
+
+def bench_strong_scaling() -> None:
+    """Paper fig. 6 analogue (simulated kernels, in-process ranks)."""
+    grids = [(1, 1), (1, 2), (2, 2), (4, 2), (4, 4)]
+    apps = [
+        ("nbody", _nbody_app, dict(N=2048, steps=6)),
+        ("rsim", _rsim_app, dict(T=48, W=4096)),
+        ("wavesim", _wavesim_app, dict(H=4096, W=64, steps=16)),
+    ]
+    for name, app, kw in apps:
+        base = {}
+        for kind in ("adhoc", "idag"):
+            t1 = _run_app(app, kind, 1, 1, **kw)
+            base[kind] = t1
+            emit(f"strong_scaling/{name}/{kind}/1x1", t1 * 1e6, "speedup=1.00")
+            for nodes, devs in grids[1:]:
+                t = _run_app(app, kind, nodes, devs, **kw)
+                emit(f"strong_scaling/{name}/{kind}/{nodes}x{devs}",
+                     t * 1e6, f"speedup={base[kind] / t:.2f}")
+        emit(f"strong_scaling/{name}/summary", 0.0,
+             f"idag_vs_adhoc_1dev={base['adhoc'] / base['idag']:.2f}")
+
+
+def bench_overlap() -> None:
+    """Paper fig. 7: scheduling overlaps execution (single node, 4 devices)."""
+    for name, app, kw in [
+        ("nbody", _nbody_app, dict(N=1024, steps=8)),
+        ("rsim", _rsim_app, dict(T=32, W=2048)),
+        ("wavesim", _wavesim_app, dict(H=2048, W=64, steps=12)),
+    ]:
+        t0 = time.perf_counter()
+        with Runtime(num_nodes=1, devices_per_node=4, trace=True) as rt:
+            app(rt, devices=4, **kw)
+            tr = rt.tracer
+        wall = time.perf_counter() - t0
+        f = tr.overlap_fraction("sched-N0", "N0.")
+        emit(f"overlap/{name}", wall * 1e6,
+             f"sched_busy_while_exec={f:.2f}")
+        if name == "rsim":
+            print(tr.timeline_text(70))
+
+
+def bench_lookahead() -> None:
+    """§4.3 resize elision on the RSim growing pattern."""
+    for la in (False, True):
+        t0 = time.perf_counter()
+        with Runtime(num_nodes=1, devices_per_node=2, lookahead=la) as rt:
+            _rsim_app(rt, T=48, W=4096, devices=2)
+            allocs = rt.total_allocs()
+        wall = time.perf_counter() - t0
+        emit(f"lookahead/{'on' if la else 'off'}", wall * 1e6,
+             f"allocs={allocs}")
+
+
+def bench_executor_latency() -> None:
+    """§4.1: per-instruction overhead of the out-of-order engine."""
+    n_tasks = 300
+    with Runtime(num_nodes=1, devices_per_node=2) as rt:
+        B = rt.buffer((64,), init=np.zeros(64), name="b")
+        t0 = time.perf_counter()
+        for i in range(n_tasks):
+            rt.submit(f"k{i}", (64,), [read_write(B, one_to_one())],
+                      lambda c, v: None)
+        rt.sync(timeout=300)
+        wall = time.perf_counter() - t0
+        n_instr = rt.total_instructions()
+        lat = rt.executors[0]._issue_latency
+        issue_us = float(np.mean(lat) * 1e6) if lat else 0.0
+    emit("executor/task_throughput", wall / n_tasks * 1e6,
+         f"instr={n_instr}")
+    emit("executor/issue_latency", issue_us, "mean per-instruction select")
+
+
+# ---------------------------------------------------------------------------
+# roofline (TPU v5e constants; see DESIGN.md §6)
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 4 * 50e9   # per-chip aggregate link bandwidth
+
+
+def roofline_terms(rec: dict) -> dict:
+    """All terms in seconds (per step; dry-run numbers are per-device)."""
+    coll_bytes = sum(rec.get("collectives", {}).values())
+    compute = rec["flops"] / PEAK
+    memory = rec["bytes_accessed"] / HBM
+    collective = coll_bytes / ICI
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", collective), key=lambda kv: kv[1])
+    mult = 6 if rec["kind"] == "train" else 2   # fwd+bwd vs fwd-only
+    D = (rec["seq_len"] * rec["global_batch"] if rec["kind"] != "decode"
+         else rec["global_batch"])
+    model_flops = mult * rec["params_active"] * D
+    useful = model_flops / max(rec["flops"] * rec["chips"], 1)
+    step_time = max(compute, memory, collective)
+    mfu = model_flops / (rec["chips"] * PEAK * step_time) if step_time else 0
+    return dict(compute=compute, memory=memory, collective=collective,
+                dominant=dom[0], useful_fraction=useful, mfu=mfu,
+                step_time=step_time)
+
+
+def bench_roofline(art_dir: Path | None = None) -> None:
+    art_dir = art_dir or ROOT / "artifacts" / "dryrun"
+    for f in sorted(art_dir.glob("*__single.json")):
+        rec = json.loads(f.read_text())
+        if "error" in rec or "skipped" in rec:
+            emit(f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
+                 "skipped" if "skipped" in rec else "ERROR")
+            continue
+        t = roofline_terms(rec)
+        emit(f"roofline/{rec['arch']}/{rec['shape']}",
+             t["step_time"] * 1e6,
+             f"dom={t['dominant']};mfu={t['mfu']:.3f};"
+             f"c={t['compute']:.4f};m={t['memory']:.4f};"
+             f"n={t['collective']:.4f};useful={t['useful_fraction']:.2f}")
+
+
+BENCHES = {
+    "bench_strong_scaling": bench_strong_scaling,
+    "bench_overlap": bench_overlap,
+    "bench_lookahead": bench_lookahead,
+    "bench_executor_latency": bench_executor_latency,
+    "bench_roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""RSim radiosity pattern: a buffer that grows by one row per time step —
+the adversarial case for ad-hoc memory management (paper §4.3 / §5).
+
+Run with and without scheduler lookahead to see resize elision:
+
+    PYTHONPATH=src python examples/rsim_lookahead.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import Runtime, fixed, read, write
+from repro.core.region import Box, Region
+
+T, W = 64, 4096
+
+
+def row_cols(t):
+    def rm(chunk, shape):
+        return Region.from_box(Box((t, chunk.min[1]), (t + 1, chunk.max[1])))
+    rm.__name__ = f"row_cols({t})"
+    return rm
+
+
+def run(lookahead: bool):
+    t0 = time.perf_counter()
+    with Runtime(num_nodes=1, devices_per_node=2, lookahead=lookahead) as q:
+        R = q.buffer((T, W), init=np.zeros((T, W)), name="radiosity")
+        for t in range(T):
+            def radiosity(chunk, prev, row, t=t):
+                lo, hi = chunk.min[1], chunk.max[1]
+                if t == 0:
+                    vals = np.ones(hi - lo)
+                else:
+                    vals = prev.get(Box((0, lo), (t, hi))).sum(0) * 0.5 + 1.0
+                row.set(Box((t, lo), (t + 1, hi)), vals)
+
+            q.submit(f"radiosity{t}", Box((0, 0), (1, W)),
+                     [read(R, fixed(Box((0, 0), (max(t, 1), W)))),
+                      write(R, row_cols(t))],
+                     radiosity, split_dims=(1,))
+        out = q.gather(R)
+        allocs = q.total_allocs()
+        stats = q.schedulers[0].lookahead.stats
+    wall = time.perf_counter() - t0
+    return out, allocs, stats, wall
+
+
+def main() -> None:
+    out_on, allocs_on, stats_on, wall_on = run(lookahead=True)
+    out_off, allocs_off, _, wall_off = run(lookahead=False)
+    assert np.allclose(out_on, out_off)
+    print(f"{T} growing-row steps on 2 devices ({W} cols)")
+    print(f"  lookahead ON : {allocs_on:3d} device allocations, "
+          f"{wall_on * 1e3:7.1f} ms  (queued {stats_on.commands_queued_peak} "
+          f"commands, {stats_on.flushes} flush)")
+    print(f"  lookahead OFF: {allocs_off:3d} device allocations, "
+          f"{wall_off * 1e3:7.1f} ms  (resize chains: alloc+copy+free per "
+          f"step)")
+    print("lookahead eliminated "
+          f"{allocs_off - allocs_on} resize allocations "
+          f"({(1 - allocs_on / allocs_off) * 100:.0f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""The paper's contribution: Celerity-style TDAG -> CDAG -> IDAG scheduling
+with lookahead, out-of-order execution and receive arbitration (see DESIGN.md).
+"""
+
+from .allocation import Allocation, PINNED_HOST, USER_HOST, device_memory
+from .buffer import (AccessMode, Accessor, VirtualBuffer, read, read_write,
+                     write)
+from .command_graph import Command, CommandGraphGenerator, CommandType, generate_cdag
+from .executor import BoundsError, BufferView, Executor
+from .instruction_graph import (IdagGenerator, Instruction, InstructionType,
+                                Pilot)
+from .lookahead import LookaheadScheduler
+from .range_mapper import (all_range, fixed, fixed_row, neighborhood,
+                           one_to_one, rows_upto, slice_dim)
+from .region import Box, Region, RegionMap, split_box
+from .runtime import Runtime
+from .task_graph import DepKind, Task, TaskGraph, TaskType
+from .tracing import Tracer
+
+__all__ = [
+    "Allocation", "PINNED_HOST", "USER_HOST", "device_memory",
+    "AccessMode", "Accessor", "VirtualBuffer", "read", "read_write", "write",
+    "Command", "CommandGraphGenerator", "CommandType", "generate_cdag",
+    "BoundsError", "BufferView", "Executor",
+    "IdagGenerator", "Instruction", "InstructionType", "Pilot",
+    "LookaheadScheduler",
+    "all_range", "fixed", "fixed_row", "neighborhood", "one_to_one",
+    "rows_upto", "slice_dim",
+    "Box", "Region", "RegionMap", "split_box",
+    "Runtime",
+    "DepKind", "Task", "TaskGraph", "TaskType",
+    "Tracer",
+]

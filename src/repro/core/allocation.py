@@ -1,0 +1,54 @@
+"""Allocation and memory-id model (paper §3.2).
+
+Memory ids: ``M0`` = user-controlled host memory, ``M1`` = DMA-capable
+(page-locked) host memory, ``M2+d`` = dedicated memory of device ``d``.
+Concrete addresses only exist at execution time; the graph refers to
+allocations by numeric *allocation ids*.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .region import Box
+
+USER_HOST = 0    # M0
+PINNED_HOST = 1  # M1
+
+
+def device_memory(device: int) -> int:
+    return 2 + device
+
+
+def is_device_memory(mid: int) -> bool:
+    return mid >= 2
+
+
+_alloc_ids = itertools.count(1)
+
+
+@dataclass
+class Allocation:
+    """A backing allocation for a buffer subregion in one memory."""
+
+    mid: int
+    bid: Optional[int]            # buffer id; None for scratch
+    box: Box                      # buffer-space box this allocation backs
+    dtype: object = "float64"     # numpy dtype of the backing array
+    aid: int = field(default_factory=lambda: next(_alloc_ids))
+    live: bool = True
+
+    def nbytes(self) -> int:
+        import numpy as np
+        return self.box.volume() * np.dtype(self.dtype).itemsize
+
+    def offset_of(self, b: Box) -> tuple[int, ...]:
+        """Offset of buffer-space box ``b`` inside this allocation."""
+        if not self.box.contains(b):
+            raise ValueError(f"{b} not contained in allocation {self.box}")
+        return tuple(x - o for x, o in zip(b.min, self.box.min))
+
+    def __repr__(self) -> str:
+        return f"A{self.aid}<M{self.mid},B{self.bid},{self.box}>"

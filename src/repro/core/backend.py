@@ -1,0 +1,169 @@
+"""Backend submission queues (paper §4, fig. 5).
+
+The executor offloads actual work to *backend* lanes so submission latency
+stays off its polling loop:
+
+* ``InOrderQueue`` — models a SYCL in-order queue: one worker thread drains a
+  FIFO.  The executor's *eager issue* rule (§4.1) relies on this FIFO
+  guarantee: an instruction whose incomplete dependencies are all enqueued on
+  the same in-order queue may be submitted immediately.
+* ``HostPool`` — a pool of host worker threads for host tasks and host-side
+  copies (no ordering guarantee; used only for *direct* issue).
+
+Both report completions through a shared thread-safe completion list that the
+executor drains in its polling loop, mirroring the event-polling approach the
+paper adopts from [18]/[4].
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+@dataclass
+class WorkItem:
+    fn: Callable[[], None]
+    tag: object = None                     # typically the Instruction
+    submitted_at: float = field(default_factory=time.perf_counter)
+
+
+class CompletionSink:
+    """Thread-safe sink of finished work items, drained by the executor."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._done: list[tuple[object, Optional[BaseException], float]] = []
+        self.event = threading.Event()
+
+    def push(self, tag: object, err: Optional[BaseException], latency: float) -> None:
+        with self._lock:
+            self._done.append((tag, err, latency))
+        self.event.set()
+
+    def drain(self) -> list[tuple[object, Optional[BaseException], float]]:
+        with self._lock:
+            out, self._done = self._done, []
+        self.event.clear()
+        return out
+
+
+class InOrderQueue:
+    """A FIFO worker thread — the analogue of a SYCL in-order queue."""
+
+    def __init__(self, name: str, sink: CompletionSink):
+        self.name = name
+        self.sink = sink
+        self._q: "queue.SimpleQueue[Optional[WorkItem]]" = queue.SimpleQueue()
+        self._pending = 0                   # submitted, not yet completed
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._run, name=name, daemon=True)
+        self._thread.start()
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return self._pending
+
+    def submit(self, item: WorkItem) -> None:
+        with self._lock:
+            self._pending += 1
+        self._q.put(item)
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            err: Optional[BaseException] = None
+            t0 = time.perf_counter()
+            try:
+                item.fn()
+            except BaseException as e:  # noqa: BLE001 — reported to executor
+                err = e
+            with self._lock:
+                self._pending -= 1
+            self.sink.push(item.tag, err, time.perf_counter() - t0)
+
+    def shutdown(self) -> None:
+        self._q.put(None)
+        self._thread.join(timeout=5)
+
+
+class HostPool:
+    """N host worker threads sharing one FIFO (no per-item ordering)."""
+
+    def __init__(self, name: str, num_threads: int, sink: CompletionSink):
+        self.name = name
+        self.sink = sink
+        self._q: "queue.SimpleQueue[Optional[WorkItem]]" = queue.SimpleQueue()
+        self._threads = [threading.Thread(target=self._run, name=f"{name}-{i}",
+                                          daemon=True)
+                         for i in range(num_threads)]
+        for t in self._threads:
+            t.start()
+
+    def submit(self, item: WorkItem) -> None:
+        self._q.put(item)
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.put(None)           # propagate shutdown to siblings
+                return
+            err: Optional[BaseException] = None
+            t0 = time.perf_counter()
+            try:
+                item.fn()
+            except BaseException as e:  # noqa: BLE001
+                err = e
+            self.sink.push(item.tag, err, time.perf_counter() - t0)
+
+    def shutdown(self) -> None:
+        self._q.put(None)
+        for t in self._threads:
+            t.join(timeout=5)
+
+
+class Backend:
+    """All backend lanes of one node: per-device in-order queues + host pool.
+
+    ``queues_per_device`` > 1 enables the paper's scheme of multiple in-order
+    queues per device so independent copy/kernel instructions overlap (§4.1).
+    A device instruction is routed round-robin unless eager issue pins it to
+    the queue its dependencies are already on.
+    """
+
+    def __init__(self, num_devices: int, *, queues_per_device: int = 2,
+                 host_threads: int = 4):
+        self.sink = CompletionSink()
+        self.num_devices = num_devices
+        self.queues_per_device = queues_per_device
+        self.device_queues: list[list[InOrderQueue]] = [
+            [InOrderQueue(f"D{d}.q{i}", self.sink) for i in range(queues_per_device)]
+            for d in range(num_devices)
+        ]
+        self.host_pool = HostPool("host", host_threads, self.sink)
+        self._rr = [0] * num_devices
+
+    def pick_device_queue(self, device: int,
+                          preferred: Optional[InOrderQueue] = None) -> InOrderQueue:
+        if preferred is not None:
+            return preferred
+        qs = self.device_queues[device]
+        # prefer an idle queue, else round-robin
+        for q in qs:
+            if q.pending == 0:
+                return q
+        self._rr[device] = (self._rr[device] + 1) % len(qs)
+        return qs[self._rr[device]]
+
+    def shutdown(self) -> None:
+        for qs in self.device_queues:
+            for q in qs:
+                q.shutdown()
+        self.host_pool.shutdown()

@@ -1,0 +1,264 @@
+"""Command graph (CDAG) generation — paper §2.4.
+
+The CDAG distributes each task's kernel index space onto cluster nodes and
+models the peer-to-peer communication (push / await-push) needed to satisfy
+the resulting data dependencies.  Generation is a *replicated deterministic*
+process: every node computes the same global ownership information, but only
+materializes the commands it will itself execute.  Push commands carry the
+precise target and region; await-push commands only know the *union* of
+subregions that will arrive for a task (the paper's scalability trade-off,
+§3.4) — which is what later forces split-receive handling in the IDAG.
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .buffer import VirtualBuffer
+from .region import Box, Region, RegionMap, split_box
+from .task_graph import DepKind, Task, TaskGraph, TaskType
+
+
+class CommandType(enum.Enum):
+    EXECUTION = "execution"
+    PUSH = "push"
+    AWAIT_PUSH = "await_push"
+    HORIZON = "horizon"
+    EPOCH = "epoch"
+
+
+_cmd_ids = itertools.count()
+
+
+@dataclass
+class Command:
+    ctype: CommandType
+    node: int
+    task: Optional[Task] = None
+    chunk: Optional[Box] = None                 # EXECUTION: this node's chunk
+    buffer: Optional[VirtualBuffer] = None      # PUSH/AWAIT_PUSH
+    region: Optional[Region] = None             # PUSH: precise; AWAIT: union
+    target: Optional[int] = None                # PUSH only
+    transfer_id: Optional[tuple[int, int]] = None  # (task id, buffer id)
+    cid: int = field(default_factory=lambda: next(_cmd_ids))
+    dependencies: list[tuple["Command", DepKind]] = field(default_factory=list)
+    dependents: list["Command"] = field(default_factory=list)
+
+    def add_dependency(self, dep: "Command", kind: DepKind) -> None:
+        if dep is self:
+            return
+        for d, _ in self.dependencies:
+            if d is dep:
+                return
+        self.dependencies.append((dep, kind))
+        dep.dependents.append(self)
+
+    def __hash__(self) -> int:
+        return self.cid
+
+    def __repr__(self) -> str:
+        t = f":{self.task.name}" if self.task else ""
+        return f"C{self.cid}<{self.ctype.value}{t}@N{self.node}>"
+
+
+@dataclass
+class _NodeBufferState:
+    last_writers: RegionMap                     # region -> local Command
+    last_readers: list[tuple[Region, Command]] = field(default_factory=list)
+
+
+class CommandGraphGenerator:
+    """Generates per-node command graphs from a TDAG stream."""
+
+    def __init__(self, num_nodes: int):
+        self.num_nodes = num_nodes
+        self.commands: list[list[Command]] = [[] for _ in range(num_nodes)]
+        # replicated global ownership: buffer -> RegionMap(region -> owner rank)
+        self._ownership: dict[int, RegionMap] = {}
+        self._buffers: dict[int, VirtualBuffer] = {}
+        self._node_state: list[dict[int, _NodeBufferState]] = [dict() for _ in range(num_nodes)]
+        self._init_epochs: list[Command] = []
+        self._last_horizon: list[Optional[Command]] = [None] * num_nodes
+        self._last_epoch: list[Optional[Command]] = [None] * num_nodes
+        self.errors: list[str] = []
+        for n in range(num_nodes):
+            epoch = Command(CommandType.EPOCH, node=n, task=None)
+            self.commands[n].append(epoch)
+            self._init_epochs.append(epoch)
+            self._last_epoch[n] = epoch
+
+    # ------------------------------------------------------------------
+    def _ownership_map(self, buf: VirtualBuffer) -> RegionMap:
+        m = self._ownership.get(buf.bid)
+        if m is None:
+            # buffers with initial values are replicated on every node at t=0;
+            # we mark rank 0 as canonical owner and all nodes as up-to-date.
+            m = RegionMap(buf.full_box, default=frozenset(range(self.num_nodes))
+                          if buf.initial_value is not None else None)
+            self._ownership[buf.bid] = m
+            self._buffers[buf.bid] = buf
+        return m
+
+    def _node_buf(self, node: int, buf: VirtualBuffer) -> _NodeBufferState:
+        st = self._node_state[node].get(buf.bid)
+        if st is None:
+            st = _NodeBufferState(
+                last_writers=RegionMap(buf.full_box, default=self._init_epochs[node]))
+            self._node_state[node][buf.bid] = st
+        return st
+
+    # ------------------------------------------------------------------
+    def process(self, task: Task) -> list[Command]:
+        if task.ttype == TaskType.HORIZON:
+            return self._emit_sync(task, CommandType.HORIZON)
+        if task.ttype == TaskType.EPOCH:
+            return self._emit_sync(task, CommandType.EPOCH)
+        return self._process_kernel(task)
+
+    def _emit_sync(self, task: Task, ctype: CommandType) -> list[Command]:
+        out = []
+        for n in range(self.num_nodes):
+            cmd = Command(ctype, node=n, task=task)
+            for c in self.commands[n]:
+                if not c.dependents:
+                    cmd.add_dependency(c, DepKind.SYNC)
+            self.commands[n].append(cmd)
+            if ctype == CommandType.HORIZON:
+                self._last_horizon[n] = cmd
+            else:
+                self._last_epoch[n] = cmd
+                self._last_horizon[n] = None
+            # horizon compaction of per-node tracking structures
+            for st in self._node_state[n].values():
+                st.last_writers.update(st.last_writers.covered(), cmd)
+                st.last_writers.coalesce()
+                st.last_readers = []
+            out.append(cmd)
+        return out
+
+    # ------------------------------------------------------------------
+    def _process_kernel(self, task: Task) -> list[Command]:
+        chunks = split_box(task.index_space, self.num_nodes,
+                           dims=task.split_dims, granularity=task.granularity)
+        # node i executes chunk i (static assignment); nodes beyond the chunk
+        # count execute nothing for this task.
+        node_chunks: dict[int, Box] = {i: c for i, c in enumerate(chunks)}
+        new_cmds: list[Command] = []
+
+        # --- pass 1: writer-ownership + overlapping-write detection -------
+        writes_per_node: dict[int, dict[int, Region]] = {}
+        for n, chunk in node_chunks.items():
+            for acc in task.accessors:
+                if acc.mode.is_producer:
+                    reg = acc.mapped_region(chunk)
+                    writes_per_node.setdefault(acc.buffer.bid, {})[n] = \
+                        writes_per_node.get(acc.buffer.bid, {}).get(n, Region.empty()).union(reg)
+        for bid, per_node in writes_per_node.items():
+            nodes = list(per_node)
+            for i in range(len(nodes)):
+                for j in range(i + 1, len(nodes)):
+                    if per_node[nodes[i]].overlaps(per_node[nodes[j]]):
+                        self.errors.append(
+                            f"overlapping writes to {self._buffers.get(bid, bid)} by nodes "
+                            f"{nodes[i]} and {nodes[j]} in task {task.name}")
+
+        # --- pass 2: reads → pushes / await-pushes ------------------------
+        exec_cmds: dict[int, Command] = {}
+        for n, chunk in node_chunks.items():
+            cmd = Command(CommandType.EXECUTION, node=n, task=task, chunk=chunk)
+            exec_cmds[n] = cmd
+
+        for n, chunk in node_chunks.items():
+            cmd = exec_cmds[n]
+            for acc in task.accessors:
+                if not acc.mode.is_consumer:
+                    continue
+                buf = acc.buffer
+                need = acc.mapped_region(chunk)
+                own = self._ownership_map(buf)
+                missing_union = Region.empty()
+                for sub, owner in own.query(need):
+                    if owner is None:
+                        continue  # uninitialized — TDAG already warned
+                    owners = owner if isinstance(owner, frozenset) else frozenset([owner])
+                    if n in owners:
+                        continue
+                    src = min(owners)  # deterministic sender choice
+                    missing_union = missing_union.union(sub)
+                    # sender-side push (materialized on the sender node)
+                    push = Command(CommandType.PUSH, node=src, task=task, buffer=buf,
+                                   region=sub, target=n,
+                                   transfer_id=(task.tid, buf.bid))
+                    sst = self._node_buf(src, buf)
+                    for ssub, writer in sst.last_writers.query(sub):
+                        push.add_dependency(writer, DepKind.TRUE)
+                    sst.last_readers.append((sub, push))
+                    self.commands[src].append(push)
+                    new_cmds.append(push)
+                if not missing_union.is_empty():
+                    ap = Command(CommandType.AWAIT_PUSH, node=n, task=task, buffer=buf,
+                                 region=missing_union,
+                                 transfer_id=(task.tid, buf.bid))
+                    nst = self._node_buf(n, buf)
+                    # anti-dep: receive overwrites stale local data
+                    for ssub, writer in nst.last_writers.query(missing_union):
+                        ap.add_dependency(writer, DepKind.ANTI)
+                    for rreg, reader in nst.last_readers:
+                        if rreg.overlaps(missing_union):
+                            ap.add_dependency(reader, DepKind.ANTI)
+                    nst.last_writers.update(missing_union, ap)
+                    self.commands[n].append(ap)
+                    new_cmds.append(ap)
+                    cmd.add_dependency(ap, DepKind.TRUE)
+                    # received data is now also up-to-date on n (replicated info)
+                    for sub, owner in own.query(missing_union):
+                        owners = owner if isinstance(owner, frozenset) else frozenset([owner])
+                        own.update(sub, owners | {n})
+
+        # --- pass 3: local deps + ownership update for writes -------------
+        for n, chunk in node_chunks.items():
+            cmd = exec_cmds[n]
+            for acc in task.accessors:
+                buf = acc.buffer
+                nst = self._node_buf(n, buf)
+                if acc.mode.is_consumer:
+                    need = acc.mapped_region(chunk)
+                    for sub, writer in nst.last_writers.query(need):
+                        cmd.add_dependency(writer, DepKind.TRUE)
+                    nst.last_readers.append((need, cmd))
+                if acc.mode.is_producer:
+                    wreg = acc.mapped_region(chunk)
+                    for rreg, reader in nst.last_readers:
+                        if reader is not cmd and rreg.overlaps(wreg):
+                            cmd.add_dependency(reader, DepKind.ANTI)
+                    for sub, writer in nst.last_writers.query(wreg):
+                        cmd.add_dependency(writer, DepKind.OUTPUT)
+                    nst.last_writers.update(wreg, cmd)
+                    nst.last_readers = [(r, t) for r, t in nst.last_readers
+                                        if not r.difference(wreg).is_empty() or t is cmd]
+            if not cmd.dependencies and self._last_epoch[n] is not None:
+                cmd.add_dependency(self._last_epoch[n], DepKind.SYNC)
+            if self._last_horizon[n] is not None:
+                cmd.add_dependency(self._last_horizon[n], DepKind.SYNC)
+            self.commands[n].append(cmd)
+            new_cmds.append(cmd)
+
+        # global ownership update: writers become exclusive owners
+        for acc in task.accessors:
+            if acc.mode.is_producer:
+                own = self._ownership_map(acc.buffer)
+                for n, chunk in node_chunks.items():
+                    own.update(acc.mapped_region(chunk), frozenset([n]))
+        return new_cmds
+
+
+def generate_cdag(tdag: TaskGraph, num_nodes: int) -> CommandGraphGenerator:
+    gen = CommandGraphGenerator(num_nodes)
+    for task in tdag.tasks:
+        if task.name == "init" and task.ttype == TaskType.EPOCH:
+            continue
+        gen.process(task)
+    return gen

@@ -1,0 +1,168 @@
+"""Communicator: peer-to-peer transfers + pilot messages (paper §3.4/§4.2).
+
+Faithfully models the MPI-level protocol: senders transmit *pilot messages*
+(source, transfer id, box, message id) ahead of the payload; the receiver's
+*receive arbitration* state machine matches pilots against pending
+``receive`` / ``split receive`` instructions and "posts the Irecv" — here,
+registers the landing slice — as soon as source and geometry are known.  An
+``await receive`` completes when its subregion is fully covered by landed
+payloads, regardless of inbound geometry (cases a/b/c in §3.4).
+
+The wire is an in-process thread-safe mailbox (one real CPU; see DESIGN.md
+§2).  On a real deployment the same interface maps to MPI/ICI transports.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from .instruction_graph import Instruction, InstructionType, Pilot
+from .region import Box, Region
+
+
+@dataclass
+class Payload:
+    source: int
+    msg_id: int
+    transfer_id: tuple[int, int]
+    box: Box
+    data: np.ndarray
+
+
+class Communicator:
+    """Shared mailbox fabric between in-process ranks."""
+
+    def __init__(self, num_nodes: int):
+        self.num_nodes = num_nodes
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self.pilot_box: list[list[Pilot]] = [[] for _ in range(num_nodes)]
+        self.payload_box: list[list[Payload]] = [[] for _ in range(num_nodes)]
+        self.bytes_sent = 0
+        self.num_messages = 0
+
+    # -- sender side -------------------------------------------------------
+    def post_pilot(self, pilot: Pilot) -> None:
+        with self._cv:
+            self.pilot_box[pilot.target].append(pilot)
+            self._cv.notify_all()
+
+    def isend(self, target: int, payload: Payload) -> None:
+        with self._cv:
+            self.payload_box[target].append(payload)
+            self.bytes_sent += payload.data.nbytes
+            self.num_messages += 1
+            self._cv.notify_all()
+
+    # -- receiver side -----------------------------------------------------
+    def poll(self, node: int) -> tuple[list[Pilot], list[Payload]]:
+        with self._cv:
+            pilots, self.pilot_box[node] = self.pilot_box[node], []
+            payloads, self.payload_box[node] = self.payload_box[node], []
+            return pilots, payloads
+
+    def wait_any(self, node: int, timeout: float = 0.001) -> None:
+        with self._cv:
+            if not self.pilot_box[node] and not self.payload_box[node]:
+                self._cv.wait(timeout)
+
+
+@dataclass
+class _PendingReceive:
+    instr: Instruction                 # RECEIVE or SPLIT_RECEIVE
+    remaining: Region                  # region still to be covered
+    awaits: list[Instruction] = field(default_factory=list)  # AWAIT_RECEIVE children
+
+
+class ReceiveArbiter:
+    """Per-node receive-arbitration state machine (paper §4.2).
+
+    Matches inbound pilots/payloads to receive instructions by transfer id,
+    writes landed payloads into the destination allocation, and reports
+    instruction completions.
+    """
+
+    def __init__(self, node: int, comm: Communicator, store):
+        self.node = node
+        self.comm = comm
+        self.store = store                      # allocation id -> ndarray
+        self.pending: dict[tuple[int, int], list[_PendingReceive]] = defaultdict(list)
+        self.early_payloads: dict[tuple[int, int], list[Payload]] = defaultdict(list)
+        self.received: dict[tuple[int, int], Region] = defaultdict(Region.empty)
+
+    def begin(self, instr: Instruction) -> None:
+        if instr.itype in (InstructionType.RECEIVE, InstructionType.SPLIT_RECEIVE):
+            pr = _PendingReceive(instr=instr, remaining=instr.recv_region)
+            self.pending[instr.transfer_id].append(pr)
+        elif instr.itype == InstructionType.AWAIT_RECEIVE:
+            for pr in self.pending.get(instr.transfer_id, []):
+                if pr.instr is instr.split_parent:
+                    pr.awaits.append(instr)
+                    return
+            # parent may already be fully received
+            self.pending[instr.transfer_id].append(
+                _PendingReceive(instr=instr.split_parent, remaining=Region.empty(),
+                                awaits=[instr]))
+
+    def _land(self, pr: _PendingReceive, payload: Payload) -> None:
+        alloc = pr.instr.recv_alloc
+        arr = self.store[alloc.aid]
+        off = alloc.offset_of(payload.box)
+        slices = tuple(slice(o, o + s) for o, s in zip(off, payload.box.shape))
+        arr[slices] = payload.data
+
+    def step(self, completions: list[Instruction]) -> None:
+        """Drain mailboxes; append completed instructions to ``completions``."""
+        pilots, payloads = self.comm.poll(self.node)
+        # pilots tell us geometry early; with the mailbox transport the
+        # payload itself carries geometry, so pilots only update accounting.
+        for p in payloads:
+            self.early_payloads[p.transfer_id].append(p)
+        for tid, plist in list(self.early_payloads.items()):
+            prs = self.pending.get(tid, [])
+            if not prs:
+                continue
+            still: list[Payload] = []
+            for payload in plist:
+                landed = False
+                for pr in prs:
+                    if pr.remaining.is_empty():
+                        continue
+                    inter = pr.remaining.intersect(Region.from_box(payload.box))
+                    if inter.is_empty():
+                        continue
+                    self._land(pr, payload)
+                    pr.remaining = pr.remaining.difference(Region.from_box(payload.box))
+                    self.received[tid] = self.received[tid].union(Region.from_box(payload.box))
+                    landed = True
+                    break
+                if not landed:
+                    still.append(payload)
+            self.early_payloads[tid] = still
+        # completion checks
+        for tid, prs in list(self.pending.items()):
+            done_prs = []
+            for pr in prs:
+                if pr.remaining.is_empty() and pr.instr.state == "issued":
+                    if pr.instr.itype == InstructionType.RECEIVE:
+                        completions.append(pr.instr)
+                        done_prs.append(pr)
+                    elif pr.instr.itype == InstructionType.SPLIT_RECEIVE:
+                        completions.append(pr.instr)
+                        # keep entry for awaits
+                # await-receive: complete when its subregion is covered
+                for aw in list(pr.awaits):
+                    if aw.state == "issued" and self.received[tid].contains(aw.recv_region):
+                        completions.append(aw)
+                        pr.awaits.remove(aw)
+                if (pr.remaining.is_empty() and not pr.awaits
+                        and pr.instr.state == "done"):
+                    done_prs.append(pr)
+            for pr in done_prs:
+                if pr in prs:
+                    prs.remove(pr)

@@ -1,0 +1,381 @@
+"""Executor: out-of-order instruction dispatch (paper §4.1).
+
+The *out-of-order engine* receives the topologically-ordered instruction
+stream from the scheduler together with completion events from the backend,
+and selects the next instruction to issue:
+
+* **direct** issue — all dependencies have completed;
+* **eager** issue — all *incomplete* dependencies are already pending on the
+  same single in-order backend queue; the queue's FIFO semantics then
+  guarantee ordering without waiting for completion events.
+
+Receive-type instructions are handed to the per-node ``ReceiveArbiter``
+(§4.2) instead of a backend lane; the executor polls the arbiter in its main
+loop.  The executor itself does no data processing — it only routes.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+from .allocation import Allocation
+from .backend import Backend, InOrderQueue, WorkItem
+from .buffer import AccessMode
+from .communicator import Communicator, Payload, ReceiveArbiter
+from .instruction_graph import AccessorBinding, Instruction, InstructionType
+from .region import Box, Region
+
+
+class BoundsError(RuntimeError):
+    """Raised after a kernel when accesses fell outside the declared region."""
+
+
+class BufferView:
+    """Kernel-facing accessor backed by one contiguous allocation (§3.2).
+
+    Indexing is in *global buffer coordinates*; the view translates to the
+    allocation's local frame.  With ``check_bounds`` the view records any
+    access outside the range-mapper-declared region and the executor raises
+    a :class:`BoundsError` with the offending bounding box after the kernel
+    exits (paper §4.4 "Accessor Bounds Checking").
+    """
+
+    __slots__ = ("array", "offset", "region", "writable", "check_bounds",
+                 "oob_min", "oob_max")
+
+    def __init__(self, array: np.ndarray, alloc: Allocation,
+                 binding: AccessorBinding, check_bounds: bool):
+        self.array = array
+        self.offset = alloc.box.min
+        self.region = binding.region
+        self.writable = binding.accessor.mode.is_producer
+        self.check_bounds = check_bounds
+        self.oob_min: Optional[list[int]] = None
+        self.oob_max: Optional[list[int]] = None
+
+    # -- box-level access (the fast path used by example kernels) ----------
+    def get(self, box: Box) -> np.ndarray:
+        self._check(box)
+        sl = tuple(slice(a - o, b - o) for a, b, o in
+                   zip(box.min, box.max, self.offset))
+        return self.array[sl]
+
+    def set(self, box: Box, values) -> None:
+        if not self.writable:
+            raise PermissionError("write through read-only accessor")
+        self._check(box)
+        sl = tuple(slice(a - o, b - o) for a, b, o in
+                   zip(box.min, box.max, self.offset))
+        self.array[sl] = values
+
+    def _check(self, box: Box) -> None:
+        if not self.check_bounds:
+            return
+        if not self.region.contains_box(box):
+            if self.oob_min is None:
+                self.oob_min, self.oob_max = list(box.min), list(box.max)
+            else:
+                self.oob_min = [min(a, b) for a, b in zip(self.oob_min, box.min)]
+                self.oob_max = [max(a, b) for a, b in zip(self.oob_max, box.max)]
+
+    # -- element access sugar ----------------------------------------------
+    def __getitem__(self, idx):
+        box = self._idx_box(idx)
+        return self.get(box).reshape(self._idx_shape(idx, box))
+
+    def __setitem__(self, idx, values):
+        box = self._idx_box(idx)
+        self.set(box, np.asarray(values).reshape(box.shape))
+
+    def _idx_box(self, idx) -> Box:
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        lo, hi = [], []
+        for d, i in enumerate(idx):
+            if isinstance(i, slice):
+                start = 0 if i.start is None else i.start
+                stop = (self.offset[d] + self.array.shape[d]) if i.stop is None else i.stop
+                lo.append(start)
+                hi.append(stop)
+            else:
+                lo.append(int(i))
+                hi.append(int(i) + 1)
+        return Box(tuple(lo), tuple(hi))
+
+    @staticmethod
+    def _idx_shape(idx, box: Box):
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        shape = []
+        for d, i in enumerate(idx):
+            if isinstance(i, slice):
+                shape.append(box.shape[d])
+        return tuple(shape) if shape else ()
+
+
+class Executor:
+    """Per-node executor thread harboring the out-of-order engine."""
+
+    def __init__(self, node: int, num_devices: int, comm: Communicator,
+                 *, queues_per_device: int = 2, host_threads: int = 4,
+                 check_bounds: bool = False, tracer=None):
+        self.node = node
+        self.comm = comm
+        self.backend = Backend(num_devices, queues_per_device=queues_per_device,
+                               host_threads=host_threads)
+        self.store: dict[int, np.ndarray] = {}       # allocation id -> ndarray
+        self.arbiter = ReceiveArbiter(node, comm, self.store)
+        self.check_bounds = check_bounds
+        self.tracer = tracer
+        self.errors: list[BaseException] = []
+
+        self._inbox: deque[Instruction] = deque()
+        self._inbox_lock = threading.Lock()
+        self._registered: dict[int, Instruction] = {}
+        self._remaining: dict[int, int] = {}          # iid -> unmet dep count
+        self._waiting: list[Instruction] = []         # registered, not issued
+        self._issued_on: dict[int, InOrderQueue] = {} # iid -> queue (devices)
+        self._completed_epochs: set[int] = set()      # command ids of epochs
+        self._epoch_cv = threading.Condition()
+        self._done_count = 0
+        self._issue_latency: list[float] = []         # per-instr selection lat.
+        self._queue_latency_ewma: dict[str, float] = {}
+        self._stop = False
+        self._drained = threading.Event()
+        self._thread = threading.Thread(target=self._run, name=f"exec-N{node}",
+                                        daemon=True)
+        self._thread.start()
+
+    # -- scheduler-facing API ----------------------------------------------
+    def submit(self, instrs: list[Instruction]) -> None:
+        with self._inbox_lock:
+            self._inbox.extend(instrs)
+        self.backend.sink.event.set()  # wake the loop
+
+    def wait_epoch(self, cid: int, timeout: float = 60.0) -> None:
+        deadline = time.monotonic() + timeout
+        with self._epoch_cv:
+            while cid not in self._completed_epochs:
+                if self.errors:
+                    raise RuntimeError(f"executor N{self.node} failed") from self.errors[0]
+                rem = deadline - time.monotonic()
+                if rem <= 0:
+                    raise TimeoutError(f"epoch C{cid} not reached on N{self.node}")
+                self._epoch_cv.wait(min(rem, 0.05))
+
+    def shutdown(self) -> None:
+        self._stop = True
+        self.backend.sink.event.set()
+        self._thread.join(timeout=10)
+        self.backend.shutdown()
+
+    # -- main loop -----------------------------------------------------------
+    def _run(self) -> None:
+        completions: list[Instruction] = []
+        while True:
+            progressed = False
+            # 1. ingest newly scheduled instructions
+            with self._inbox_lock:
+                fresh = list(self._inbox)
+                self._inbox.clear()
+            for instr in fresh:
+                self._register(instr)
+                progressed = True
+            # 2. try to issue waiting instructions (direct or eager)
+            if self._try_issue_all():
+                progressed = True
+            # 3. drain backend completions
+            for tag, err, lat in self.backend.sink.drain():
+                if err is not None:
+                    self.errors.append(err)
+                self._mark_done(tag, lat)
+                progressed = True
+            # 4. poll receive arbitration
+            completions.clear()
+            self.arbiter.step(completions)
+            for instr in completions:
+                self._mark_done(instr, 0.0)
+                progressed = True
+            if self._stop and not self._waiting and not fresh:
+                with self._inbox_lock:
+                    empty = not self._inbox
+                if empty:
+                    self._drained.set()
+                    return
+            if not progressed:
+                self.backend.sink.event.wait(0.0002)
+                self.backend.sink.event.clear()
+
+    # -- registration and issue ----------------------------------------------
+    def _register(self, instr: Instruction) -> None:
+        unmet = 0
+        for dep, _ in instr.dependencies:
+            if dep.state != "done":
+                unmet += 1
+        self._registered[instr.iid] = instr
+        self._remaining[instr.iid] = unmet
+        self._waiting.append(instr)
+
+    def _try_issue_all(self) -> bool:
+        issued_any = False
+        still: list[Instruction] = []
+        for instr in self._waiting:
+            t0 = time.perf_counter()
+            if self._remaining.get(instr.iid, 0) == 0:
+                self._issue(instr)                       # direct issue
+                issued_any = True
+            else:
+                eager_q = self._eager_queue(instr)
+                if eager_q is not None:
+                    self._issue(instr, queue=eager_q)    # eager issue
+                    issued_any = True
+                else:
+                    still.append(instr)
+                    continue
+            self._issue_latency.append(time.perf_counter() - t0)
+        self._waiting = still
+        return issued_any
+
+    def _eager_queue(self, instr: Instruction) -> Optional[InOrderQueue]:
+        """Eager-issue rule (§4.1): all incomplete deps pending on ONE
+        in-order queue; instruction itself targets the same device."""
+        if instr.queue[0] != "device":
+            return None
+        q: Optional[InOrderQueue] = None
+        for dep, _ in instr.dependencies:
+            if dep.state == "done":
+                continue
+            dq = self._issued_on.get(dep.iid)
+            if dq is None:
+                return None          # dep not yet submitted anywhere
+            if q is None:
+                q = dq
+            elif q is not dq:
+                return None          # spread over several queues
+        if q is None:
+            return None
+        # same device required: queue name "D<d>.q<i>"
+        if not q.name.startswith(f"D{instr.queue[1]}."):
+            return None
+        return q
+
+    # -- issue routing ---------------------------------------------------------
+    def _issue(self, instr: Instruction, queue: Optional[InOrderQueue] = None) -> None:
+        instr.state = "issued"
+        if self.tracer is not None:
+            self.tracer.issue(self.node, instr)
+        it = instr.itype
+        if it in (InstructionType.RECEIVE, InstructionType.SPLIT_RECEIVE,
+                  InstructionType.AWAIT_RECEIVE):
+            self.arbiter.begin(instr)       # completion via arbiter polling
+            return
+        if it in (InstructionType.HORIZON, InstructionType.EPOCH):
+            self._mark_done(instr, 0.0)     # pure graph-sync: complete inline
+            return
+        fn = self._executable(instr)
+        item = WorkItem(fn=fn, tag=instr)
+        if instr.queue[0] == "device":
+            q = self.backend.pick_device_queue(instr.queue[1], preferred=queue)
+            self._issued_on[instr.iid] = q
+            q.submit(item)
+        elif it == InstructionType.SEND:
+            # comm lane: sends are tiny (mailbox post) — host pool is fine
+            self.backend.host_pool.submit(item)
+        else:
+            self.backend.host_pool.submit(item)
+
+    def _mark_done(self, instr: Instruction, latency: float) -> None:
+        if instr.state == "done":
+            return
+        instr.state = "done"
+        self._done_count += 1
+        self._issued_on.pop(instr.iid, None)
+        self._remaining.pop(instr.iid, None)
+        if self.tracer is not None:
+            self.tracer.complete(self.node, instr)
+        qname = ".".join(map(str, instr.queue))
+        e = self._queue_latency_ewma.get(qname, latency)
+        self._queue_latency_ewma[qname] = 0.9 * e + 0.1 * latency
+        for dep in instr.dependents:
+            if dep.iid in self._remaining:
+                self._remaining[dep.iid] -= 1
+        if instr.itype == InstructionType.EPOCH and instr.command is not None:
+            with self._epoch_cv:
+                self._completed_epochs.add(instr.command.cid)
+                self._epoch_cv.notify_all()
+
+    # -- instruction semantics ---------------------------------------------------
+    def _executable(self, instr: Instruction) -> Callable[[], None]:
+        it = instr.itype
+        if it == InstructionType.ALLOC:
+            return lambda: self._exec_alloc(instr)
+        if it == InstructionType.FREE:
+            return lambda: self._exec_free(instr)
+        if it == InstructionType.COPY:
+            return lambda: self._exec_copy(instr)
+        if it == InstructionType.SEND:
+            return lambda: self._exec_send(instr)
+        if it in (InstructionType.DEVICE_KERNEL, InstructionType.HOST_TASK):
+            return lambda: self._exec_kernel(instr)
+        raise AssertionError(f"unroutable instruction {instr}")
+
+    def _arr(self, alloc: Allocation) -> np.ndarray:
+        """Backing array; lazily seeds M0 allocations with user init data."""
+        arr = self.store.get(alloc.aid)
+        if arr is None:
+            init = getattr(alloc, "initial_data", None)
+            if init is None:
+                raise KeyError(f"allocation {alloc} not materialized on N{self.node}")
+            arr = self.store[alloc.aid] = np.array(init, copy=True)
+        return arr
+
+    def _exec_alloc(self, instr: Instruction) -> None:
+        a = instr.allocation
+        self.store[a.aid] = np.empty(a.box.shape, dtype=np.dtype(a.dtype))
+
+    def _exec_free(self, instr: Instruction) -> None:
+        self.store.pop(instr.allocation.aid, None)
+
+    def _exec_copy(self, instr: Instruction) -> None:
+        src, dst, box = instr.src_alloc, instr.dst_alloc, instr.copy_box
+        sarr, darr = self._arr(src), self._arr(dst)
+        ssl = tuple(slice(a - o, b - o) for a, b, o in
+                    zip(box.min, box.max, src.box.min))
+        dsl = tuple(slice(a - o, b - o) for a, b, o in
+                    zip(box.min, box.max, dst.box.min))
+        darr[dsl] = sarr[ssl]
+
+    def _exec_send(self, instr: Instruction) -> None:
+        alloc, box = instr.recv_alloc, instr.send_box
+        arr = self._arr(alloc)
+        sl = tuple(slice(a - o, b - o) for a, b, o in
+                   zip(box.min, box.max, alloc.box.min))
+        self.comm.isend(instr.dest, Payload(
+            source=self.node, msg_id=instr.msg_id,
+            transfer_id=instr.transfer_id, box=box, data=arr[sl].copy()))
+
+    def _exec_kernel(self, instr: Instruction) -> None:
+        views = []
+        for b in instr.bindings:
+            arr = self._arr(b.allocation)
+            views.append(BufferView(arr, b.allocation, b, self.check_bounds))
+        if instr.kernel_fn is not None:
+            instr.kernel_fn(instr.chunk, *views)
+        if self.check_bounds:
+            for v, b in zip(views, instr.bindings):
+                if v.oob_min is not None:
+                    raise BoundsError(
+                        f"kernel '{instr.name}' accessed "
+                        f"{Box(tuple(v.oob_min), tuple(v.oob_max))} outside "
+                        f"declared region {b.region} of buffer "
+                        f"{b.accessor.buffer.name}")
+
+    # -- introspection -------------------------------------------------------
+    def straggler_report(self) -> dict[str, float]:
+        """Per-queue EWMA completion latency (straggler mitigation input)."""
+        return dict(self._queue_latency_ewma)

@@ -1,0 +1,627 @@
+"""Instruction graph (IDAG) generation — the paper's core contribution (§3).
+
+Compiles each node's command stream into micro-operations: ``alloc / copy /
+free / send / receive / split-receive / await-receive / device-kernel /
+host-task / horizon / epoch``.  Key mechanisms implemented faithfully:
+
+* hierarchical work assignment — the command chunk is split a second time
+  over the node's local devices (§3.1);
+* virtualized buffers with multiple disjoint backing allocations per
+  (buffer, memory); every accessor must be backed by one *contiguous*
+  allocation, triggering alloc→copy→free resize chains when access patterns
+  grow (§3.2, fig. 3);
+* local coherence with producer- and consumer-split copies (§3.3);
+* outbound transfers: producer-split sends + pilot messages; inbound:
+  receive vs split-receive/await-receive under the union-only constraint of
+  await-push commands (§3.4);
+* horizon/epoch instructions for pruning and synchronization (§3.5);
+* allocation widening driven by the scheduler lookahead (§4.3).
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .allocation import (Allocation, PINNED_HOST, USER_HOST, device_memory,
+                         is_device_memory)
+from .buffer import Accessor, VirtualBuffer
+from .command_graph import Command, CommandType
+from .region import Box, Region, RegionMap, split_box
+from .task_graph import DepKind, TaskType
+
+
+class InstructionType(enum.Enum):
+    ALLOC = "alloc"
+    COPY = "copy"
+    FREE = "free"
+    SEND = "send"
+    RECEIVE = "receive"
+    SPLIT_RECEIVE = "split_receive"
+    AWAIT_RECEIVE = "await_receive"
+    DEVICE_KERNEL = "device_kernel"
+    HOST_TASK = "host_task"
+    HORIZON = "horizon"
+    EPOCH = "epoch"
+
+
+_instr_ids = itertools.count()
+
+
+@dataclass
+class AccessorBinding:
+    """Executor-facing: which allocation backs an accessor for one kernel."""
+    accessor: Accessor
+    allocation: Allocation
+    region: Region                # buffer-space region the kernel may touch
+
+
+@dataclass
+class Pilot:
+    """Pilot message: announces an inbound transfer to the receiver (§3.4)."""
+    source: int
+    target: int
+    transfer_id: tuple[int, int]  # (task id, buffer id)
+    box: Box                      # buffer-space box being sent
+    msg_id: int
+
+
+@dataclass
+class Instruction:
+    itype: InstructionType
+    node: int
+    # queue affinity: ("device", d) | ("host",) | ("comm",) — executor routing
+    queue: tuple = ("host",)
+    # ALLOC / FREE
+    allocation: Optional[Allocation] = None
+    # COPY
+    src_alloc: Optional[Allocation] = None
+    dst_alloc: Optional[Allocation] = None
+    copy_box: Optional[Box] = None           # buffer-space box to copy
+    # SEND
+    dest: Optional[int] = None
+    msg_id: Optional[int] = None
+    send_box: Optional[Box] = None
+    # RECEIVE / SPLIT_RECEIVE / AWAIT_RECEIVE
+    transfer_id: Optional[tuple[int, int]] = None
+    recv_region: Optional[Region] = None
+    recv_alloc: Optional[Allocation] = None
+    split_parent: Optional["Instruction"] = None
+    # DEVICE_KERNEL / HOST_TASK
+    kernel_fn: Optional[Callable] = None
+    chunk: Optional[Box] = None
+    bindings: tuple[AccessorBinding, ...] = ()
+    device: Optional[int] = None
+    name: str = ""
+    command: Optional[Command] = None
+    iid: int = field(default_factory=lambda: next(_instr_ids))
+    dependencies: list[tuple["Instruction", DepKind]] = field(default_factory=list)
+    dependents: list["Instruction"] = field(default_factory=list)
+    # set by the executor:
+    state: str = "pending"
+
+    def add_dependency(self, dep: "Instruction", kind: DepKind) -> None:
+        if dep is self:
+            return
+        for d, _ in self.dependencies:
+            if d is dep:
+                return
+        self.dependencies.append((dep, kind))
+        dep.dependents.append(self)
+
+    def __hash__(self) -> int:
+        return self.iid
+
+    def __repr__(self) -> str:
+        extra = ""
+        if self.itype == InstructionType.DEVICE_KERNEL:
+            extra = f":{self.name}@D{self.device}"
+        elif self.itype in (InstructionType.ALLOC, InstructionType.FREE):
+            extra = f":{self.allocation}"
+        elif self.itype == InstructionType.COPY:
+            extra = f":{self.src_alloc and self.src_alloc.aid}->{self.dst_alloc and self.dst_alloc.aid}"
+        return f"I{self.iid}<{self.itype.value}{extra}>"
+
+
+@dataclass
+class _MemState:
+    """Per (buffer, memory) instruction-level tracking."""
+    producers: RegionMap          # region -> original producer Instruction
+    readers: list[tuple[Region, Instruction]] = field(default_factory=list)
+
+
+class IdagGenerator:
+    """Per-node instruction graph generator."""
+
+    def __init__(self, node: int, num_devices: int, *, d2d: bool = True,
+                 alloc_hints: Optional[dict] = None):
+        self.node = node
+        self.num_devices = num_devices
+        self.d2d = d2d
+        self.instructions: list[Instruction] = []
+        self.pilots: list[Pilot] = []
+        self.warnings: list[str] = []
+        self._allocs: dict[tuple[int, int], list[Allocation]] = {}
+        self._coherence: dict[int, RegionMap] = {}      # region -> frozenset(mids)
+        self._mem: dict[tuple[int, int], _MemState] = {}
+        self._buffers: dict[int, VirtualBuffer] = {}
+        self._msg_ids = itertools.count(node * 1_000_000)
+        self._last_horizon: Optional[Instruction] = None
+        self._last_epoch: Optional[Instruction] = None
+        # lookahead-provided widening requirements: (bid, mid) -> Region
+        self.alloc_hints: dict[tuple[int, int], Region] = alloc_hints or {}
+        self._init_epoch = self._emit(Instruction(
+            InstructionType.EPOCH, node=node, queue=("host",), name="init"))
+        self._last_epoch = self._init_epoch
+
+    # -- small helpers ---------------------------------------------------
+    def _emit(self, instr: Instruction) -> Instruction:
+        self.instructions.append(instr)
+        return instr
+
+    def _register(self, buf: VirtualBuffer) -> None:
+        if buf.bid not in self._buffers:
+            self._buffers[buf.bid] = buf
+            if buf.initial_value is not None:
+                # data present in user host memory M0, produced by init epoch
+                a = Allocation(mid=USER_HOST, bid=buf.bid, box=buf.full_box,
+                               dtype=buf.dtype)
+                a.initial_data = buf.initial_value  # type: ignore[attr-defined]
+                self._allocs[(buf.bid, USER_HOST)] = [a]
+                self._coherence[buf.bid] = RegionMap(buf.full_box,
+                                                     default=frozenset([USER_HOST]))
+                ms = self._memstate(buf.bid, USER_HOST)
+                ms.producers.update(buf.full_region, self._init_epoch)
+            else:
+                self._coherence[buf.bid] = RegionMap(buf.full_box, default=frozenset())
+
+    def _memstate(self, bid: int, mid: int) -> _MemState:
+        ms = self._mem.get((bid, mid))
+        if ms is None:
+            buf = self._buffers[bid]
+            ms = _MemState(producers=RegionMap(buf.full_box, default=self._init_epoch))
+            self._mem[(bid, mid)] = ms
+        return ms
+
+    def _queue_for_mem(self, mid: int) -> tuple:
+        if is_device_memory(mid):
+            return ("device", mid - 2)
+        return ("host",)
+
+    # -- allocation management (§3.2) -------------------------------------
+    def would_allocate_box(self, bid: int, mid: int, box: Box) -> bool:
+        for a in self._allocs.get((bid, mid), []):
+            if a.live and a.box.contains(box):
+                return False
+        return True
+
+    def ensure_allocation(self, buf: VirtualBuffer, mid: int, box: Box) -> Allocation:
+        """Return a live allocation whose box contains ``box``; emit
+        alloc/copy/free resize chains if needed (fig. 3)."""
+        self._register(buf)
+        allocs = self._allocs.setdefault((buf.bid, mid), [])
+        for a in allocs:
+            if a.live and a.box.contains(box):
+                return a
+        # need a new allocation: merge with all overlapping live allocations
+        # AND with lookahead widening hints, to a fixpoint — widening may
+        # newly overlap allocations that the original request did not
+        # (found by hypothesis, tests/test_lookahead_property.py)
+        hint = self.alloc_hints.get((buf.bid, mid))
+        new_box = box
+        while True:
+            overlapping = [a for a in allocs
+                           if a.live and a.box.overlaps(new_box)]
+            grown = new_box
+            for a in overlapping:
+                grown = grown.union_bbox(a.box)
+            if hint is not None and not hint.is_empty():
+                for hb in hint.boxes:
+                    if hb.overlaps(grown) or any(a.box.overlaps(hb)
+                                                 for a in overlapping):
+                        grown = grown.union_bbox(hb)
+                hint_bb = hint.bounding_box()
+                if hint_bb.overlaps(grown):
+                    grown = grown.union_bbox(hint_bb)
+            if grown == new_box:
+                break
+            new_box = grown
+        new_alloc = Allocation(mid=mid, bid=buf.bid, box=new_box, dtype=buf.dtype)
+        alloc_instr = self._emit(Instruction(
+            InstructionType.ALLOC, node=self.node, queue=self._queue_for_mem(mid),
+            allocation=new_alloc, name=f"alloc {buf.name} M{mid} {new_box}"))
+        if self._last_horizon is not None:
+            alloc_instr.add_dependency(self._last_horizon, DepKind.SYNC)
+        elif self._last_epoch is not None:
+            alloc_instr.add_dependency(self._last_epoch, DepKind.SYNC)
+        new_alloc.alloc_instr = alloc_instr  # type: ignore[attr-defined]
+        ms = self._memstate(buf.bid, mid)
+        # migrate live data from the old allocations into the new one
+        coherent_here = self._region_coherent_in(buf.bid, mid)
+        for old in overlapping:
+            live_region = coherent_here.intersect_box(old.box)
+            for sub, producer in ms.producers.query(live_region):
+                for b in sub.boxes:
+                    cp = self._emit_copy(buf, old, new_alloc, b, producer)
+            free_instr = self._emit(Instruction(
+                InstructionType.FREE, node=self.node, queue=self._queue_for_mem(mid),
+                allocation=old, name=f"free {old}"))
+            # free only after all users of the old allocation are done
+            for r, reader in ms.readers:
+                if r.overlaps(Region.from_box(old.box)):
+                    free_instr.add_dependency(reader, DepKind.ANTI)
+            for sub, producer in ms.producers.query(Region.from_box(old.box)):
+                free_instr.add_dependency(producer, DepKind.ANTI)
+            old.live = False
+        self._allocs[(buf.bid, mid)] = [a for a in allocs if a.live] + [new_alloc]
+        # producers of migrated regions are now the copies — but since the
+        # copies carry the same data, we keep the original producer mapping;
+        # dependency-wise, subsequent readers in this memory must depend on
+        # the migration copies, which we ensure by updating producers to them.
+        return new_alloc
+
+    def _live_allocation(self, bid: int, mid: int, box: Box) -> Allocation:
+        """The live allocation containing ``box`` (must exist)."""
+        for a in self._allocs.get((bid, mid), []):
+            if a.live and a.box.contains(box):
+                return a
+        raise AssertionError(f"no live allocation covers B{bid} M{mid} {box}")
+
+    def _emit_copy(self, buf: VirtualBuffer, src: Allocation, dst: Allocation,
+                   box: Box, producer: Instruction) -> Instruction:
+        # copies between device memories run on the (src) device queue;
+        # host<->device copies run on the device queue; host-host on host.
+        q = self._queue_for_mem(dst.mid if is_device_memory(dst.mid) else src.mid)
+        cp = self._emit(Instruction(
+            InstructionType.COPY, node=self.node, queue=q,
+            src_alloc=src, dst_alloc=dst, copy_box=box,
+            name=f"copy {buf.name} {box} M{src.mid}->M{dst.mid}"))
+        cp.add_dependency(producer, DepKind.TRUE)
+        for a in (src, dst):
+            ai = getattr(a, "alloc_instr", None)
+            if ai is not None:
+                cp.add_dependency(ai, DepKind.TRUE)
+        # WAR/WAW against the destination region in dst memory
+        dms = self._memstate(buf.bid, dst.mid)
+        breg = Region.from_box(box)
+        for r, reader in dms.readers:
+            if r.overlaps(breg):
+                cp.add_dependency(reader, DepKind.ANTI)
+        for sub, w in dms.producers.query(breg):
+            cp.add_dependency(w, DepKind.OUTPUT)
+        dms.producers.update(breg, cp)
+        # reading the source region
+        sms = self._memstate(buf.bid, src.mid)
+        sms.readers.append((breg, cp))
+        return cp
+
+    def _region_coherent_in(self, bid: int, mid: int) -> Region:
+        out = Region.empty()
+        for r, mids in self._coherence[bid].entries:
+            if mids and mid in mids:
+                out = out.union(r)
+        return out
+
+    # -- coherence (§3.3) --------------------------------------------------
+    def make_coherent(self, buf: VirtualBuffer, mid: int, region: Region) -> list[Instruction]:
+        """Emit producer-split copies so ``region`` is up-to-date in ``mid``."""
+        self._register(buf)
+        copies: list[Instruction] = []
+        coh = self._coherence[buf.bid]
+        stale = Region.empty()
+        for sub, mids in coh.query(region):
+            if not mids or mid in mids:
+                continue
+            stale = stale.union(sub)
+        if stale.is_empty():
+            return copies
+        dst = self.ensure_allocation(buf, mid, region.bounding_box())
+        for sub, mids in coh.query(stale):
+            if not mids:
+                continue
+            src_mid = self._pick_source(mids, mid)
+            if (is_device_memory(src_mid) and is_device_memory(mid)
+                    and not self.d2d):
+                # no P2P: stage through pinned host memory (§3.3)
+                copies += self.make_coherent(buf, PINNED_HOST, sub)
+                src_mid = PINNED_HOST
+            src_ms = self._memstate(buf.bid, src_mid)
+            for src_alloc in self._allocs.get((buf.bid, src_mid), []):
+                if not src_alloc.live:
+                    continue
+                part = sub.intersect_box(src_alloc.box)
+                # producer split: one copy per original-producer entry
+                for psub, producer in src_ms.producers.query(part):
+                    for b in psub.boxes:
+                        copies.append(self._emit_copy(buf, src_alloc, dst, b, producer))
+            coh.update(sub, (frozenset(mids) | {mid}))
+        return copies
+
+    def _pick_source(self, mids: frozenset, target: int) -> int:
+        """Prefer same-kind memory, then pinned host, then user host."""
+        mids = set(mids)
+        if is_device_memory(target):
+            dev = [m for m in mids if is_device_memory(m)]
+            if dev and self.d2d:
+                return min(dev)
+            if PINNED_HOST in mids:
+                return PINNED_HOST
+            if USER_HOST in mids:
+                return USER_HOST
+            return min(mids)
+        for pref in (PINNED_HOST, USER_HOST):
+            if pref in mids:
+                return pref
+        return min(mids)
+
+    # -- command compilation ------------------------------------------------
+    def compile(self, cmd: Command) -> list[Instruction]:
+        before = len(self.instructions)
+        if cmd.ctype == CommandType.EXECUTION:
+            self._compile_execution(cmd)
+        elif cmd.ctype == CommandType.PUSH:
+            self._compile_push(cmd)
+        elif cmd.ctype == CommandType.AWAIT_PUSH:
+            self._compile_await_push(cmd)
+        elif cmd.ctype == CommandType.HORIZON:
+            self._compile_sync(cmd, InstructionType.HORIZON)
+        elif cmd.ctype == CommandType.EPOCH:
+            self._compile_sync(cmd, InstructionType.EPOCH)
+        return self.instructions[before:]
+
+    def would_allocate(self, cmd: Command) -> bool:
+        """Cheap query used by the lookahead scheduler (§4.3)."""
+        reqs = self.allocation_requirements(cmd)
+        return any(self.would_allocate_box(bid, mid, box)
+                   for (bid, mid), region in reqs.items()
+                   for box in [region.bounding_box()])
+
+    def allocation_requirements(self, cmd: Command) -> dict[tuple[int, int], Region]:
+        """(bid, mid) -> contiguous requirement regions for this command."""
+        reqs: dict[tuple[int, int], Region] = {}
+
+        def add(bid: int, mid: int, box: Box) -> None:
+            key = (bid, mid)
+            reqs[key] = reqs.get(key, Region.empty()).union(Region.from_box(box))
+
+        if cmd.ctype == CommandType.EXECUTION and cmd.task is not None:
+            is_host = cmd.task.ttype == TaskType.HOST
+            chunks = ([cmd.chunk] if is_host else
+                      split_box(cmd.chunk, self.num_devices,
+                                dims=cmd.task.split_dims,
+                                granularity=cmd.task.granularity))
+            for d, ch in enumerate(chunks):
+                mid = PINNED_HOST if is_host else device_memory(d)
+                for acc in cmd.task.accessors:
+                    reg = acc.mapped_region(ch)
+                    if not reg.is_empty():
+                        add(acc.buffer.bid, mid, reg.bounding_box())
+        elif cmd.ctype == CommandType.PUSH:
+            add(cmd.buffer.bid, PINNED_HOST, cmd.region.bounding_box())
+        elif cmd.ctype == CommandType.AWAIT_PUSH:
+            add(cmd.buffer.bid, PINNED_HOST, cmd.region.bounding_box())
+        return reqs
+
+    # -- execution commands (§3.1, §3.3) -------------------------------------
+    def _compile_execution(self, cmd: Command) -> None:
+        task = cmd.task
+        is_host = task.ttype == TaskType.HOST
+        chunks = ([cmd.chunk] if is_host else
+                  split_box(cmd.chunk, self.num_devices,
+                            dims=task.split_dims, granularity=task.granularity))
+        # overlapping-write detection between local devices (paper §4.4)
+        if len(chunks) > 1:
+            for acc in task.accessors:
+                if not acc.mode.is_producer:
+                    continue
+                for i in range(len(chunks)):
+                    for j in range(i + 1, len(chunks)):
+                        ri = acc.mapped_region(chunks[i])
+                        rj = acc.mapped_region(chunks[j])
+                        if ri.overlaps(rj):
+                            self.warnings.append(
+                                f"overlapping write to {acc.buffer.name} by "
+                                f"devices D{i} and D{j} in task {task.name}")
+        for d, ch in enumerate(chunks):
+            mid = PINNED_HOST if is_host else device_memory(d)
+            bindings: list[AccessorBinding] = []
+            deps: list[Instruction] = []
+            # phase 1: settle ALL allocations first — a later accessor's
+            # resize may free the allocation an earlier accessor would have
+            # bound to (found by hypothesis, tests/test_lookahead_property)
+            for acc in task.accessors:
+                self._register(acc.buffer)
+                reg = acc.mapped_region(ch)
+                if not reg.is_empty():
+                    self.ensure_allocation(acc.buffer, mid, reg.bounding_box())
+            # phase 2: coherence + bindings against the settled allocations
+            for acc in task.accessors:
+                buf = acc.buffer
+                reg = acc.mapped_region(ch)
+                if reg.is_empty():
+                    continue
+                alloc = self._live_allocation(buf.bid, mid, reg.bounding_box())
+                if acc.mode.is_consumer:
+                    deps.extend(self.make_coherent(buf, mid, reg))
+                bindings.append(AccessorBinding(acc, alloc, reg))
+            itype = InstructionType.HOST_TASK if is_host else InstructionType.DEVICE_KERNEL
+            qd = ("host",) if is_host else ("device", d)
+            instr = Instruction(
+                itype, node=self.node, queue=qd, kernel_fn=task.kernel_fn,
+                chunk=ch, bindings=tuple(bindings),
+                device=None if is_host else d, name=task.name, command=cmd)
+            for b in bindings:
+                ai = getattr(b.allocation, "alloc_instr", None)
+                if ai is not None:
+                    instr.add_dependency(ai, DepKind.TRUE)
+                ms = self._memstate(b.accessor.buffer.bid, mid)
+                if b.accessor.mode.is_consumer:
+                    for sub, producer in ms.producers.query(b.region):
+                        instr.add_dependency(producer, DepKind.TRUE)
+                    ms.readers.append((b.region, instr))
+                if b.accessor.mode.is_producer:
+                    for r, reader in ms.readers:
+                        if reader is not instr and r.overlaps(b.region):
+                            instr.add_dependency(reader, DepKind.ANTI)
+                    for sub, w in ms.producers.query(b.region):
+                        instr.add_dependency(w, DepKind.OUTPUT)
+            if self._last_horizon is not None:
+                instr.add_dependency(self._last_horizon, DepKind.SYNC)
+            elif not instr.dependencies and self._last_epoch is not None:
+                instr.add_dependency(self._last_epoch, DepKind.SYNC)
+            self._emit(instr)
+            # post-emit state updates: writes establish new producers/coherence
+            for b in bindings:
+                if b.accessor.mode.is_producer:
+                    bid = b.accessor.buffer.bid
+                    ms = self._memstate(bid, mid)
+                    ms.producers.update(b.region, instr)
+                    ms.readers = [(r, t) for r, t in ms.readers
+                                  if t is instr or not r.difference(b.region).is_empty()]
+                    self._coherence[bid].update(b.region, frozenset([mid]))
+
+    # -- outbound transfers (§3.4) -------------------------------------------
+    def _compile_push(self, cmd: Command) -> None:
+        buf = cmd.buffer
+        self._register(buf)
+        # stage into pinned host memory, then one send per producer-rect
+        self.make_coherent(buf, PINNED_HOST, cmd.region)
+        ms = self._memstate(buf.bid, PINNED_HOST)
+        for alloc in self._allocs.get((buf.bid, PINNED_HOST), []):
+            if not alloc.live:
+                continue
+            part = cmd.region.intersect_box(alloc.box)
+            for psub, producer in ms.producers.query(part):
+                for b in psub.boxes:  # producer split
+                    msg_id = next(self._msg_ids)
+                    send = Instruction(
+                        InstructionType.SEND, node=self.node, queue=("comm",),
+                        dest=cmd.target, msg_id=msg_id, send_box=b,
+                        recv_alloc=alloc, transfer_id=cmd.transfer_id,
+                        name=f"send {buf.name} {b} ->N{cmd.target}", command=cmd)
+                    send.add_dependency(producer, DepKind.TRUE)
+                    ai = getattr(alloc, "alloc_instr", None)
+                    if ai is not None:
+                        send.add_dependency(ai, DepKind.TRUE)
+                    if self._last_horizon is not None:
+                        send.add_dependency(self._last_horizon, DepKind.SYNC)
+                    self._emit(send)
+                    ms.readers.append((Region.from_box(b), send))
+                    self.pilots.append(Pilot(source=self.node, target=cmd.target,
+                                             transfer_id=cmd.transfer_id, box=b,
+                                             msg_id=msg_id))
+
+    # -- inbound transfers (§3.4) ----------------------------------------------
+    def _compile_await_push(self, cmd: Command) -> None:
+        buf = cmd.buffer
+        self._register(buf)
+        # must be able to receive the whole union contiguously (case b)
+        alloc = self.ensure_allocation(buf, PINNED_HOST, cmd.region.bounding_box())
+        ms = self._memstate(buf.bid, PINNED_HOST)
+
+        consumer_regions = self._consumer_split_regions(cmd)
+        anti_deps: list[Instruction] = []
+        for r, reader in ms.readers:
+            if r.overlaps(cmd.region):
+                anti_deps.append(reader)
+        for sub, w in ms.producers.query(cmd.region):
+            anti_deps.append(w)
+
+        def wire(instr: Instruction) -> Instruction:
+            ai = getattr(alloc, "alloc_instr", None)
+            if ai is not None:
+                instr.add_dependency(ai, DepKind.TRUE)
+            for a in anti_deps:
+                instr.add_dependency(a, DepKind.ANTI)
+            if self._last_horizon is not None:
+                instr.add_dependency(self._last_horizon, DepKind.SYNC)
+            return self._emit(instr)
+
+        if len(consumer_regions) <= 1:
+            recv = wire(Instruction(
+                InstructionType.RECEIVE, node=self.node, queue=("comm",),
+                transfer_id=cmd.transfer_id, recv_region=cmd.region,
+                recv_alloc=alloc, name=f"recv {buf.name} {cmd.region}", command=cmd))
+            ms.producers.update(cmd.region, recv)
+        else:
+            split = wire(Instruction(
+                InstructionType.SPLIT_RECEIVE, node=self.node, queue=("comm",),
+                transfer_id=cmd.transfer_id, recv_region=cmd.region,
+                recv_alloc=alloc, name=f"split-recv {buf.name} {cmd.region}",
+                command=cmd))
+            for creg in consumer_regions:
+                aw = self._emit(Instruction(
+                    InstructionType.AWAIT_RECEIVE, node=self.node, queue=("comm",),
+                    transfer_id=cmd.transfer_id, recv_region=creg,
+                    recv_alloc=alloc, split_parent=split,
+                    name=f"await-recv {buf.name} {creg}", command=cmd))
+                aw.add_dependency(split, DepKind.TRUE)
+                ms.producers.update(creg, aw)
+        self._coherence[buf.bid].update(cmd.region, frozenset([PINNED_HOST]))
+
+    def _consumer_split_regions(self, cmd: Command) -> list[Region]:
+        """Subregions per local consumer (device chunk) of an await-push."""
+        regions: list[Region] = []
+        for dep in cmd.dependents:
+            if dep.ctype != CommandType.EXECUTION or dep.task is None:
+                continue
+            chunks = split_box(dep.chunk, self.num_devices,
+                               dims=dep.task.split_dims,
+                               granularity=dep.task.granularity)
+            for ch in chunks:
+                for acc in dep.task.accessors:
+                    if acc.buffer.bid != cmd.buffer.bid or not acc.mode.is_consumer:
+                        continue
+                    part = acc.mapped_region(ch).intersect(cmd.region)
+                    if not part.is_empty():
+                        regions.append(part)
+        # dedupe; if all consumers want the whole region, no split (§3.4)
+        uniq: list[Region] = []
+        for r in regions:
+            if not any(r == u for u in uniq):
+                uniq.append(r)
+        if len(uniq) <= 1 or all(u.contains(cmd.region) for u in uniq):
+            return uniq[:1]
+        return uniq
+
+    # -- synchronization (§3.5) ---------------------------------------------
+    def _compile_sync(self, cmd: Command, itype: InstructionType) -> None:
+        instr = Instruction(itype, node=self.node, queue=("host",),
+                            name=itype.value, command=cmd)
+        for i in self.instructions:
+            if not i.dependents:
+                instr.add_dependency(i, DepKind.SYNC)
+        self._emit(instr)
+        if itype == InstructionType.HORIZON:
+            self._last_horizon = instr
+        else:
+            self._last_epoch = instr
+            self._last_horizon = None
+        # horizon compaction: prior producers collapse onto the sync point
+        for ms in self._mem.values():
+            ms.producers.update(ms.producers.covered(), instr)
+            ms.producers.coalesce()
+            ms.readers = []
+
+    # -- shutdown -------------------------------------------------------------
+    def free_all(self) -> list[Instruction]:
+        """Emit frees for all live allocations (buffer destruction, §3.2)."""
+        out = []
+        for (bid, mid), allocs in self._allocs.items():
+            for a in allocs:
+                if not a.live or mid == USER_HOST:
+                    continue
+                fr = self._emit(Instruction(
+                    InstructionType.FREE, node=self.node,
+                    queue=self._queue_for_mem(mid), allocation=a,
+                    name=f"free {a}"))
+                ms = self._memstate(bid, mid)
+                for r, reader in ms.readers:
+                    fr.add_dependency(reader, DepKind.ANTI)
+                for sub, w in ms.producers.query(Region.from_box(a.box)):
+                    fr.add_dependency(w, DepKind.ANTI)
+                a.live = False
+                out.append(fr)
+        return out

@@ -1,0 +1,124 @@
+"""Scheduler lookahead and resize elision (paper §4.3).
+
+Commands are generated eagerly, but instruction-graph generation is
+heuristically postponed while changing memory-allocation patterns are
+observed:
+
+* a freshly generated command is queried with ``would_allocate`` (cheap
+  region query) and marked *allocating* if compiling it now would emit an
+  ``alloc`` instruction;
+* as long as no allocating command is queued, commands pass straight
+  through;
+* once an allocating command is queued, the queue holds until **two
+  horizons** pass with no further allocating command (or an epoch forces a
+  flush) — indicative of the task chain reaching an allocation steady state;
+* on flush, every queued command's allocation requirements are merged into
+  per-(buffer, memory) *widening hints* so the first ``alloc`` already covers
+  everything observed in the window — eliding the resize chains of fig. 3.
+
+The RSim growing-row pattern keeps re-arming the heuristic, so its whole
+command graph is queued before the first instruction is emitted — exactly
+the behaviour the paper reports (§4.3, fig. 7).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .command_graph import Command, CommandType
+from .instruction_graph import IdagGenerator, Instruction
+from .region import Region
+
+
+@dataclass
+class LookaheadStats:
+    commands_seen: int = 0
+    commands_queued_peak: int = 0
+    flushes: int = 0
+    allocating_commands: int = 0
+
+
+class LookaheadScheduler:
+    """Command queue between CDAG generation and IDAG compilation."""
+
+    def __init__(self, idag: IdagGenerator, *, enabled: bool = True,
+                 horizon_flush: int = 2):
+        self.idag = idag
+        self.enabled = enabled
+        self.horizon_flush = horizon_flush
+        self.queue: list[Command] = []
+        self._horizons_since_alloc = 0
+        self._have_allocating = False
+        # requirements of already-queued commands: compiling a new command
+        # "right away" means compiling it *after* the queued window, so a
+        # requirement covered by the pending window is not newly allocating.
+        self._pending: dict[tuple[int, int], Region] = {}
+        self.stats = LookaheadStats()
+
+    # ------------------------------------------------------------------
+    def _is_allocating(self, cmd: Command) -> bool:
+        if cmd.ctype not in (CommandType.EXECUTION, CommandType.PUSH,
+                             CommandType.AWAIT_PUSH):
+            return False
+        out = False
+        for (bid, mid), region in self.idag.allocation_requirements(cmd).items():
+            bb = region.bounding_box()
+            covered = not self.idag.would_allocate_box(bid, mid, bb)
+            pend = self._pending.get((bid, mid))
+            if not covered and pend is not None:
+                covered = pend.bounding_box().contains(bb)
+            if not covered:
+                out = True
+            key = (bid, mid)
+            self._pending[key] = self._pending.get(key, Region.empty()).union(region)
+        return out
+
+    def push(self, cmd: Command) -> list[Instruction]:
+        """Feed one command; returns any instructions that became ready."""
+        self.stats.commands_seen += 1
+        if not self.enabled:
+            return self.idag.compile(cmd)
+
+        allocating = self._is_allocating(cmd)
+        if allocating:
+            self.stats.allocating_commands += 1
+
+        if not self._have_allocating and not allocating:
+            # steady state: pass through immediately (no latency added)
+            return self.idag.compile(cmd)
+
+        self.queue.append(cmd)
+        self.stats.commands_queued_peak = max(self.stats.commands_queued_peak,
+                                              len(self.queue))
+        if allocating:
+            self._have_allocating = True
+            self._horizons_since_alloc = 0
+        elif cmd.ctype == CommandType.HORIZON:
+            self._horizons_since_alloc += 1
+            if self._horizons_since_alloc >= self.horizon_flush:
+                return self.flush()
+        if cmd.ctype == CommandType.EPOCH:
+            return self.flush()   # user synchronization: cannot hold back
+        return []
+
+    # ------------------------------------------------------------------
+    def flush(self) -> list[Instruction]:
+        """Compile all queued commands with widened allocation hints."""
+        if not self.queue:
+            return []
+        self.stats.flushes += 1
+        # merge allocation requirements of the whole window into hints
+        hints: dict[tuple[int, int], Region] = dict(self.idag.alloc_hints)
+        for cmd in self.queue:
+            for key, region in self.idag.allocation_requirements(cmd).items():
+                hints[key] = hints.get(key, Region.empty()).union(region)
+        self.idag.alloc_hints = hints
+        out: list[Instruction] = []
+        for cmd in self.queue:
+            out.extend(self.idag.compile(cmd))
+        self.queue.clear()
+        self._pending.clear()
+        self._have_allocating = False
+        self._horizons_since_alloc = 0
+        return out

@@ -1,0 +1,383 @@
+"""Box/region algebra for buffer subrange tracking.
+
+Celerity tracks dataflow at the granularity of individual buffer elements by
+operating on *regions*: finite unions of pairwise-disjoint, half-open,
+axis-aligned N-dimensional boxes.  Every layer of the scheduler (task graph,
+command graph, instruction graph) is built on this algebra, so it must be
+exact — the hypothesis test-suite checks it against a brute-force bitmap
+oracle.
+
+Boxes are represented as ``(min, max)`` tuples of per-dimension integers with
+half-open semantics ``min <= i < max``.  Empty boxes are normalized away.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Iterable, Iterator, Sequence
+
+
+@dataclass(frozen=True)
+class Box:
+    """A half-open axis-aligned box ``[min, max)`` in N dimensions."""
+
+    min: tuple[int, ...]
+    max: tuple[int, ...]
+
+    def __post_init__(self) -> None:
+        if len(self.min) != len(self.max):
+            raise ValueError(f"rank mismatch: {self.min} vs {self.max}")
+
+    @staticmethod
+    def make(min_: Sequence[int], max_: Sequence[int]) -> "Box":
+        return Box(tuple(int(m) for m in min_), tuple(int(m) for m in max_))
+
+    @staticmethod
+    def full(shape: Sequence[int]) -> "Box":
+        return Box((0,) * len(shape), tuple(int(s) for s in shape))
+
+    @property
+    def rank(self) -> int:
+        return len(self.min)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(b - a for a, b in zip(self.min, self.max))
+
+    def volume(self) -> int:
+        v = 1
+        for a, b in zip(self.min, self.max):
+            if b <= a:
+                return 0
+            v *= b - a
+        return v
+
+    def empty(self) -> bool:
+        return any(b <= a for a, b in zip(self.min, self.max))
+
+    def contains(self, other: "Box") -> bool:
+        if other.empty():
+            return True
+        return all(a <= oa and ob <= b for a, oa, ob, b in
+                   zip(self.min, other.min, other.max, self.max))
+
+    def contains_point(self, pt: Sequence[int]) -> bool:
+        return all(a <= p < b for a, p, b in zip(self.min, pt, self.max))
+
+    def intersect(self, other: "Box") -> "Box":
+        lo = tuple(max(a, b) for a, b in zip(self.min, other.min))
+        hi = tuple(min(a, b) for a, b in zip(self.max, other.max))
+        hi = tuple(max(l, h) for l, h in zip(lo, hi))  # clamp to empty
+        return Box(lo, hi)
+
+    def overlaps(self, other: "Box") -> bool:
+        return not self.intersect(other).empty()
+
+    def union_bbox(self, other: "Box") -> "Box":
+        if self.empty():
+            return other
+        if other.empty():
+            return self
+        return Box(tuple(min(a, b) for a, b in zip(self.min, other.min)),
+                   tuple(max(a, b) for a, b in zip(self.max, other.max)))
+
+    def translate(self, offset: Sequence[int]) -> "Box":
+        return Box(tuple(a + o for a, o in zip(self.min, offset)),
+                   tuple(b + o for b, o in zip(self.max, offset)))
+
+    def clamp(self, bounds: "Box") -> "Box":
+        return self.intersect(bounds)
+
+    def difference(self, other: "Box") -> list["Box"]:
+        """``self \\ other`` as a list of disjoint boxes (axis-sweep split)."""
+        inter = self.intersect(other)
+        if inter.empty():
+            return [] if self.empty() else [self]
+        if inter == self:
+            return []
+        out: list[Box] = []
+        cur = self
+        for d in range(self.rank):
+            # slab below the intersection along dim d
+            if cur.min[d] < inter.min[d]:
+                lo, hi = list(cur.min), list(cur.max)
+                hi[d] = inter.min[d]
+                out.append(Box(tuple(lo), tuple(hi)))
+            # slab above
+            if inter.max[d] < cur.max[d]:
+                lo, hi = list(cur.min), list(cur.max)
+                lo[d] = inter.max[d]
+                out.append(Box(tuple(lo), tuple(hi)))
+            # narrow current to the intersection along dim d and continue
+            lo, hi = list(cur.min), list(cur.max)
+            lo[d], hi[d] = inter.min[d], inter.max[d]
+            cur = Box(tuple(lo), tuple(hi))
+        return [b for b in out if not b.empty()]
+
+    def __str__(self) -> str:  # compact debug form: [0,4)x[2,8)
+        return "x".join(f"[{a},{b})" for a, b in zip(self.min, self.max))
+
+
+def _merge_adjacent(boxes: list[Box]) -> list[Box]:
+    """Greedily merge boxes that differ in exactly one dimension and touch."""
+    boxes = [b for b in boxes if not b.empty()]
+    changed = True
+    while changed:
+        changed = False
+        out: list[Box] = []
+        used = [False] * len(boxes)
+        for i, a in enumerate(boxes):
+            if used[i]:
+                continue
+            acc = a
+            for j in range(i + 1, len(boxes)):
+                if used[j]:
+                    continue
+                b = boxes[j]
+                m = _try_merge(acc, b)
+                if m is not None:
+                    acc = m
+                    used[j] = True
+                    changed = True
+            out.append(acc)
+        boxes = out
+    return boxes
+
+
+def _try_merge(a: Box, b: Box) -> Box | None:
+    """Merge two boxes into one iff their union is exactly a box."""
+    diff_dim = -1
+    for d in range(a.rank):
+        if a.min[d] == b.min[d] and a.max[d] == b.max[d]:
+            continue
+        if diff_dim >= 0:
+            return None
+        diff_dim = d
+    if diff_dim < 0:
+        return a  # identical
+    d = diff_dim
+    if a.max[d] == b.min[d]:
+        return Box(a.min, tuple(list(a.max[:d]) + [b.max[d]] + list(a.max[d + 1:])))
+    if b.max[d] == a.min[d]:
+        return Box(tuple(list(a.min[:d]) + [b.min[d]] + list(a.min[d + 1:])), a.max)
+    return None
+
+
+class Region:
+    """A finite union of pairwise-disjoint boxes. Immutable."""
+
+    __slots__ = ("boxes", "_hash")
+
+    def __init__(self, boxes: Iterable[Box] = ()):  # normalizes to disjoint
+        disjoint: list[Box] = []
+        for b in boxes:
+            if b.empty():
+                continue
+            pending = [b]
+            for existing in disjoint:
+                nxt: list[Box] = []
+                for p in pending:
+                    nxt.extend(p.difference(existing))
+                pending = nxt
+                if not pending:
+                    break
+            disjoint.extend(pending)
+        self.boxes: tuple[Box, ...] = tuple(_merge_adjacent(disjoint))
+        self._hash: int | None = None
+
+    # -- constructors -----------------------------------------------------
+    @staticmethod
+    def from_box(b: Box) -> "Region":
+        return Region([b])
+
+    @staticmethod
+    def empty() -> "Region":
+        return Region()
+
+    # -- predicates --------------------------------------------------------
+    def is_empty(self) -> bool:
+        return not self.boxes
+
+    def volume(self) -> int:
+        return sum(b.volume() for b in self.boxes)
+
+    @property
+    def rank(self) -> int:
+        return self.boxes[0].rank if self.boxes else 0
+
+    def bounding_box(self) -> Box:
+        if not self.boxes:
+            raise ValueError("empty region has no bounding box")
+        bb = self.boxes[0]
+        for b in self.boxes[1:]:
+            bb = bb.union_bbox(b)
+        return bb
+
+    def contains(self, other: "Region") -> bool:
+        return other.difference(self).is_empty()
+
+    def contains_box(self, b: Box) -> bool:
+        return Region([b]).difference(self).is_empty()
+
+    def overlaps(self, other: "Region") -> bool:
+        return not self.intersect(other).is_empty()
+
+    # -- algebra -----------------------------------------------------------
+    def union(self, other: "Region") -> "Region":
+        if self.is_empty():
+            return other
+        if other.is_empty():
+            return self
+        return Region(itertools.chain(self.boxes, other.boxes))
+
+    def intersect(self, other: "Region") -> "Region":
+        out = []
+        for a in self.boxes:
+            for b in other.boxes:
+                i = a.intersect(b)
+                if not i.empty():
+                    out.append(i)
+        return Region(out)
+
+    def intersect_box(self, box: Box) -> "Region":
+        return Region(a.intersect(box) for a in self.boxes)
+
+    def difference(self, other: "Region") -> "Region":
+        cur = list(self.boxes)
+        for b in other.boxes:
+            nxt: list[Box] = []
+            for a in cur:
+                nxt.extend(a.difference(b))
+            cur = nxt
+            if not cur:
+                break
+        return Region(cur)
+
+    # -- dunder ------------------------------------------------------------
+    def __iter__(self) -> Iterator[Box]:
+        return iter(self.boxes)
+
+    def __len__(self) -> int:
+        return len(self.boxes)
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, Region):
+            return NotImplemented
+        return (self.difference(other).is_empty()
+                and other.difference(self).is_empty())
+
+    def __hash__(self) -> int:
+        # canonical: hash of sorted box volume/bbox signature (cheap, collision-ok)
+        if self._hash is None:
+            self._hash = hash((self.volume(),
+                               tuple(sorted((b.min, b.max) for b in self.boxes))))
+        return self._hash
+
+    def __str__(self) -> str:
+        return "{" + ", ".join(str(b) for b in self.boxes) + "}"
+
+    __repr__ = __str__
+
+
+class RegionMap:
+    """Maps every point of a bounded index space to a value.
+
+    Implemented as a list of ``(Region, value)`` entries with disjoint
+    regions.  ``update(region, value)`` overwrites previous values in that
+    region — exactly the structure Celerity uses to track last writers,
+    up-to-date memories, etc.
+    """
+
+    __slots__ = ("bounds", "entries", "default")
+
+    def __init__(self, bounds: Box, default=None):
+        self.bounds = bounds
+        self.default = default
+        self.entries: list[tuple[Region, object]] = []
+        if default is not None:
+            self.entries.append((Region.from_box(bounds), default))
+
+    def update(self, region: Region, value) -> None:
+        region = region.intersect_box(self.bounds)
+        if region.is_empty():
+            return
+        new_entries: list[tuple[Region, object]] = []
+        for r, v in self.entries:
+            rem = r.difference(region)
+            if not rem.is_empty():
+                new_entries.append((rem, v))
+        new_entries.append((region, value))
+        self.entries = new_entries
+
+    def query(self, region: Region) -> list[tuple[Region, object]]:
+        """All (subregion, value) pairs intersecting ``region``."""
+        out = []
+        for r, v in self.entries:
+            i = r.intersect(region)
+            if not i.is_empty():
+                out.append((i, v))
+        return out
+
+    def covered(self) -> Region:
+        out = Region.empty()
+        for r, _ in self.entries:
+            out = out.union(r)
+        return out
+
+    def coalesce(self) -> None:
+        """Merge entries that share the same value (bounds complexity)."""
+        by_val: dict[int, tuple[object, Region]] = {}
+        order: list[int] = []
+        for r, v in self.entries:
+            k = id(v) if not isinstance(v, (int, str, tuple, frozenset)) else hash((type(v).__name__, v))
+            if k in by_val:
+                by_val[k] = (v, by_val[k][1].union(r))
+            else:
+                by_val[k] = (v, r)
+                order.append(k)
+        self.entries = [(r, v) for k in order for v, r in [by_val[k]]]
+
+
+def split_box(box: Box, num_chunks: int, dims: Sequence[int] = (0,),
+              granularity: Sequence[int] | None = None) -> list[Box]:
+    """Split ``box`` into at most ``num_chunks`` boxes along ``dims``.
+
+    This is Celerity's static work-assignment split: chunks are as even as
+    possible, aligned to ``granularity`` in each split dimension, and empty
+    chunks are dropped (small index spaces yield fewer chunks than requested).
+    Multi-dim splits factor ``num_chunks`` greedily over ``dims``.
+    """
+    if num_chunks <= 1 or box.empty():
+        return [box] if not box.empty() else []
+    if len(dims) == 1:
+        d = dims[0]
+        extent = box.max[d] - box.min[d]
+        gran = (granularity[0] if granularity else 1) or 1
+        units = (extent + gran - 1) // gran
+        n = min(num_chunks, units)
+        out = []
+        base, rem = divmod(units, n)
+        cursor = box.min[d]
+        for i in range(n):
+            take = (base + (1 if i < rem else 0)) * gran
+            lo, hi = list(box.min), list(box.max)
+            lo[d] = cursor
+            hi[d] = min(cursor + take, box.max[d])
+            cursor = hi[d]
+            b = Box(tuple(lo), tuple(hi))
+            if not b.empty():
+                out.append(b)
+        return out
+    # 2-D split: factor num_chunks as close to square as possible
+    d0, d1 = dims[0], dims[1]
+    best = (num_chunks, 1)
+    for f in range(1, int(num_chunks ** 0.5) + 1):
+        if num_chunks % f == 0:
+            best = (num_chunks // f, f)
+    rows = split_box(box, best[0], (d0,), granularity)
+    out = []
+    for r in rows:
+        out.extend(split_box(r, best[1], (d1,),
+                             (granularity[1:] if granularity and len(granularity) > 1 else None)))
+    return out

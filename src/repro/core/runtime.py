@@ -1,0 +1,235 @@
+"""User-facing Celerity-style runtime (paper §2, architecture §4 / fig. 5).
+
+The main thread submits *command groups* and creates task objects (TDAG).
+Each simulated cluster node ("rank") runs its own **scheduler thread** —
+replicated-deterministic CDAG generation plus per-node IDAG compilation with
+lookahead — and its own **executor thread** with backend lanes.  All
+inter-thread hand-off is via SPSC queues; pilot messages are posted by the
+scheduler as soon as sends are compiled, ahead of execution (§4.2).
+
+A single process hosts all ranks (one physical CPU in this container); the
+protocol — pilots, receive arbitration, push/await-push asymmetry — is the
+paper's, byte for byte.  See DESIGN.md §2 for the deviation record.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from .buffer import Accessor, VirtualBuffer
+from .command_graph import CommandGraphGenerator, CommandType
+from .communicator import Communicator
+from .executor import Executor
+from .instruction_graph import IdagGenerator
+from .lookahead import LookaheadScheduler
+from .region import Box
+from .task_graph import Task, TaskGraph, TaskType
+from .tracing import Tracer
+
+
+@dataclass
+class _EpochRequest:
+    task: Task
+    futures: list["queue.SimpleQueue"]
+
+
+class _NodeScheduler:
+    """Scheduler thread of one rank: TDAG stream -> CDAG -> lookahead -> IDAG."""
+
+    def __init__(self, node: int, rt: "Runtime"):
+        self.node = node
+        self.rt = rt
+        self.cdag = CommandGraphGenerator(rt.num_nodes)
+        self.idag = IdagGenerator(node, rt.devices_per_node, d2d=rt.d2d)
+        self.lookahead = LookaheadScheduler(self.idag, enabled=rt.lookahead)
+        self.inbox: "queue.SimpleQueue" = queue.SimpleQueue()
+        # bootstrap instructions (initial epoch) emitted at construction
+        rt.executors[node].submit(list(self.idag.instructions))
+        self._thread = threading.Thread(target=self._run,
+                                        name=f"sched-N{node}", daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        rt = self.rt
+        while True:
+            msg = self.inbox.get()
+            if msg is None:
+                return
+            t0 = rt.tracer.now() if rt.tracer else 0.0
+            if isinstance(msg, _EpochRequest):
+                task = msg.task
+            else:
+                task = msg
+            cmds = self.cdag.process(task)
+            t1 = rt.tracer.now() if rt.tracer else 0.0
+            my_epoch_cid: Optional[int] = None
+            instrs = []
+            for cmd in cmds:
+                if cmd.node != self.node:
+                    continue
+                if cmd.ctype == CommandType.EPOCH:
+                    my_epoch_cid = cmd.cid
+                instrs.extend(self.lookahead.push(cmd))
+            # pilots are transmitted as soon as the sends are compiled (§3.4)
+            self._post_new_pilots()
+            if instrs:
+                rt.executors[self.node].submit(instrs)
+            t2 = rt.tracer.now() if rt.tracer else 0.0
+            if rt.tracer:
+                rt.tracer.span(f"sched-N{self.node}", "cdag", task.name, t0, t1)
+                rt.tracer.span(f"sched-N{self.node}", "idag", task.name, t1, t2)
+            if isinstance(msg, _EpochRequest):
+                msg.futures[self.node].put(my_epoch_cid)
+
+    _pilot_cursor = 0
+
+    def _post_new_pilots(self) -> None:
+        pilots = self.idag.pilots
+        while self._pilot_cursor < len(pilots):
+            self.rt.comm.post_pilot(pilots[self._pilot_cursor])
+            self._pilot_cursor += 1
+
+    def shutdown(self) -> None:
+        self.inbox.put(None)
+        self._thread.join(timeout=10)
+
+
+class Runtime:
+    """The distributed queue a user program submits command groups to."""
+
+    def __init__(self, num_nodes: int = 1, devices_per_node: int = 1, *,
+                 lookahead: bool = True, d2d: bool = True,
+                 check_bounds: bool = False, trace: bool = False,
+                 horizon_step: int = 4, queues_per_device: int = 2,
+                 host_threads: int = 4):
+        self.num_nodes = num_nodes
+        self.devices_per_node = devices_per_node
+        self.lookahead = lookahead
+        self.d2d = d2d
+        self.tracer = Tracer() if trace else None
+        self.tdag = TaskGraph(horizon_step=horizon_step)
+        self.comm = Communicator(num_nodes)
+        self.executors = [Executor(n, devices_per_node, self.comm,
+                                   queues_per_device=queues_per_device,
+                                   host_threads=host_threads,
+                                   check_bounds=check_bounds,
+                                   tracer=self.tracer)
+                          for n in range(num_nodes)]
+        self.schedulers = [_NodeScheduler(n, self) for n in range(num_nodes)]
+        self._shut = False
+
+    # -- user API ------------------------------------------------------------
+    def buffer(self, shape: Sequence[int], dtype=np.float64, *,
+               name: str = "", init: Optional[np.ndarray] = None) -> VirtualBuffer:
+        return VirtualBuffer(shape=tuple(shape), dtype=np.dtype(dtype),
+                             name=name, initial_value=init)
+
+    def submit(self, name: str, index_space, accessors: Sequence[Accessor],
+               kernel_fn: Callable | None = None, *,
+               ttype: TaskType = TaskType.KERNEL,
+               split_dims: Sequence[int] = (0,),
+               granularity: Sequence[int] = (1,)) -> Task:
+        t0 = self.tracer.now() if self.tracer else 0.0
+        task = self.tdag.submit(name, index_space, accessors, kernel_fn,
+                                ttype=ttype, split_dims=split_dims,
+                                granularity=granularity)
+        if self.tracer:
+            self.tracer.span("main", "task", name, t0, self.tracer.now())
+        # the TDAG may have auto-emitted a horizon right after this task
+        self._broadcast()
+        return task
+
+    _sent = 0
+
+    def _broadcast(self) -> None:
+        newly = self.tdag.tasks[self._sent:]
+        for task in newly:
+            if task.ttype == TaskType.EPOCH and task.name == "init":
+                self._sent += 1
+                continue
+            for sched in self.schedulers:
+                sched.inbox.put(task)
+            self._sent += 1
+
+    def sync(self, timeout: float = 120.0) -> None:
+        """Emit an epoch and block until every rank has executed it."""
+        epoch = self.tdag.emit_epoch("sync")
+        futures = [queue.SimpleQueue() for _ in range(self.num_nodes)]
+        # flush any tasks emitted before the epoch, then the epoch itself
+        newly = self.tdag.tasks[self._sent:]
+        for task in newly:
+            if task is epoch:
+                req = _EpochRequest(task=epoch, futures=futures)
+                for sched in self.schedulers:
+                    sched.inbox.put(req)
+            else:
+                for sched in self.schedulers:
+                    sched.inbox.put(task)
+            self._sent += 1
+        for n, ex in enumerate(self.executors):
+            cid = futures[n].get(timeout=timeout)
+            if cid is not None:
+                ex.wait_epoch(cid, timeout=timeout)
+        errs = [e for ex in self.executors for e in ex.errors]
+        if errs:
+            raise RuntimeError("executor failure") from errs[0]
+
+    def gather(self, buf: VirtualBuffer, timeout: float = 120.0) -> np.ndarray:
+        """Assemble the current buffer contents on the caller's side."""
+        from .buffer import read as read_acc
+        from .range_mapper import one_to_one
+        out = np.empty(buf.shape, dtype=buf.dtype)
+        lock = threading.Lock()
+
+        def collect(chunk: Box, view) -> None:
+            data = view.get(chunk)
+            sl = tuple(slice(a, b) for a, b in zip(chunk.min, chunk.max))
+            with lock:
+                out[sl] = data
+
+        self.submit(f"gather {buf.name}", buf.shape,
+                    [read_acc(buf, one_to_one())], collect,
+                    ttype=TaskType.HOST)
+        self.sync(timeout=timeout)
+        return out
+
+    # -- diagnostics -----------------------------------------------------------
+    @property
+    def warnings(self) -> list[str]:
+        w = list(self.tdag.warnings)
+        for s in self.schedulers:
+            w.extend(s.cdag.errors)
+            w.extend(s.idag.warnings)
+        return w
+
+    def total_instructions(self) -> int:
+        return sum(len(s.idag.instructions) for s in self.schedulers)
+
+    def total_allocs(self) -> int:
+        from .instruction_graph import InstructionType
+        return sum(1 for s in self.schedulers for i in s.idag.instructions
+                   if i.itype == InstructionType.ALLOC)
+
+    def shutdown(self) -> None:
+        if self._shut:
+            return
+        self._shut = True
+        try:
+            self.sync()
+        except Exception:
+            pass
+        for s in self.schedulers:
+            s.shutdown()
+        for ex in self.executors:
+            ex.shutdown()
+
+    def __enter__(self) -> "Runtime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -1,0 +1,214 @@
+"""Task graph (TDAG) generation — paper §2.3/§2.4, horizons per §3.5.
+
+Each task represents a cluster-collective operation (usually a kernel).  The
+TDAG is generated identically on all nodes; dependencies are computed at
+buffer-element granularity as if the program executed on a single device.
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+from .buffer import Accessor, AccessMode, VirtualBuffer
+from .region import Box, Region, RegionMap
+
+
+class TaskType(enum.Enum):
+    KERNEL = "kernel"          # device kernel (data-parallel over index space)
+    HOST = "host"              # host task (runs in a host thread)
+    EPOCH = "epoch"            # graph-based synchronization with main thread
+    HORIZON = "horizon"        # tracking-complexity bound / pruning point
+
+
+class DepKind(enum.Enum):
+    TRUE = "true"        # read-after-write (dataflow)
+    ANTI = "anti"        # write-after-read
+    OUTPUT = "output"    # write-after-write
+    SYNC = "sync"        # epoch/horizon graph-synchronization
+
+
+_task_ids = itertools.count()
+
+
+@dataclass
+class Task:
+    ttype: TaskType
+    name: str = ""
+    index_space: Optional[Box] = None            # kernel tasks only
+    accessors: tuple[Accessor, ...] = ()
+    kernel_fn: Optional[Callable] = None          # (arrays..., chunk) -> outputs
+    split_dims: tuple[int, ...] = (0,)            # user hint: split axes
+    granularity: tuple[int, ...] = (1,)           # split alignment hint
+    tid: int = field(default_factory=lambda: next(_task_ids))
+    dependencies: list[tuple["Task", DepKind]] = field(default_factory=list)
+    dependents: list["Task"] = field(default_factory=list)
+    critical_path: int = 0
+
+    def add_dependency(self, dep: "Task", kind: DepKind) -> None:
+        if dep is self:
+            return
+        for d, _ in self.dependencies:
+            if d is dep:
+                return
+        self.dependencies.append((dep, kind))
+        dep.dependents.append(self)
+        self.critical_path = max(self.critical_path, dep.critical_path + 1)
+
+    def __hash__(self) -> int:
+        return self.tid
+
+    def __repr__(self) -> str:
+        return f"T{self.tid}<{self.ttype.value}:{self.name}>"
+
+
+@dataclass
+class _BufferState:
+    """Per-buffer tracking for TDAG dependency generation."""
+    last_writers: RegionMap                     # Region -> Task
+    last_readers: list[tuple[Region, Task]] = field(default_factory=list)
+    initialized: Region = field(default_factory=Region.empty)
+
+
+class TaskGraph:
+    """Generates the TDAG from a stream of submissions.
+
+    Horizon tasks are emitted when the maximum critical-path length grows by
+    ``horizon_step`` since the last horizon (Thoman et al. [23]); the horizon
+    then *replaces* all previous writers/readers as the dependency frontier,
+    bounding tracking structures.
+    """
+
+    def __init__(self, horizon_step: int = 4, max_front_width: int = 16):
+        self.tasks: list[Task] = []
+        self.horizon_step = horizon_step
+        self.max_front_width = max_front_width
+        self._buffers: dict[int, _BufferState] = {}
+        self._buffer_objs: dict[int, VirtualBuffer] = {}
+        self._last_horizon: Optional[Task] = None
+        self._prev_horizon: Optional[Task] = None
+        self._last_epoch: Optional[Task] = None
+        self._cp_at_last_horizon = 0
+        self.warnings: list[str] = []
+        # initial epoch — everything hangs off it
+        self._last_epoch = self._append(Task(TaskType.EPOCH, name="init"))
+
+    # ------------------------------------------------------------------
+    def _append(self, task: Task) -> Task:
+        self.tasks.append(task)
+        return task
+
+    def _state(self, buf: VirtualBuffer) -> _BufferState:
+        st = self._buffers.get(buf.bid)
+        if st is None:
+            st = _BufferState(last_writers=RegionMap(buf.full_box, default=self._last_epoch))
+            if buf.initial_value is not None:
+                st.initialized = buf.full_region
+            self._buffers[buf.bid] = st
+            self._buffer_objs[buf.bid] = buf
+        return st
+
+    # ------------------------------------------------------------------
+    def submit(self, name: str, index_space: Box | Sequence[int],
+               accessors: Sequence[Accessor], kernel_fn: Callable | None = None,
+               ttype: TaskType = TaskType.KERNEL,
+               split_dims: Sequence[int] = (0,),
+               granularity: Sequence[int] = (1,)) -> Task:
+        """Submit a command group; returns the created task."""
+        if not isinstance(index_space, Box):
+            index_space = Box.full(tuple(index_space))
+        task = Task(ttype, name=name, index_space=index_space,
+                    accessors=tuple(accessors), kernel_fn=kernel_fn,
+                    split_dims=tuple(split_dims), granularity=tuple(granularity))
+
+        for acc in task.accessors:
+            st = self._state(acc.buffer)
+            region = acc.mapped_region(index_space)
+            if acc.mode.is_consumer:
+                # uninitialized-read detection (paper §4.4)
+                produced = Region.empty()
+                for r, _ in st.last_writers.entries:
+                    produced = produced.union(r)
+                known = st.initialized.union(self._written_region(st))
+                missing = region.difference(known)
+                if not missing.is_empty():
+                    self.warnings.append(
+                        f"uninitialized read of {acc.buffer.name} region {missing} in task {name}")
+                # true dependencies on last writers
+                for sub, writer in st.last_writers.query(region):
+                    task.add_dependency(writer, DepKind.TRUE)
+                st.last_readers.append((region, task))
+            if acc.mode.is_producer:
+                # anti-deps on readers of the overwritten region
+                for rregion, reader in st.last_readers:
+                    if rregion.overlaps(region):
+                        task.add_dependency(reader, DepKind.ANTI)
+                # output deps on previous writers
+                for sub, writer in st.last_writers.query(region):
+                    task.add_dependency(writer, DepKind.OUTPUT)
+                st.last_writers.update(region, task)
+                st.last_readers = [(r, t) for r, t in st.last_readers
+                                   if not r.difference(region).is_empty()]
+        if not task.dependencies and self._last_epoch is not None:
+            task.add_dependency(self._last_epoch, DepKind.SYNC)
+        if self._last_horizon is not None:
+            task.add_dependency(self._last_horizon, DepKind.SYNC)
+
+        self._append(task)
+        self._maybe_emit_horizon(task)
+        return task
+
+    def _written_region(self, st: _BufferState) -> Region:
+        out = Region.empty()
+        for r, v in st.last_writers.entries:
+            if isinstance(v, Task) and v.ttype in (TaskType.KERNEL, TaskType.HOST,
+                                                   TaskType.HORIZON, TaskType.EPOCH):
+                if v.ttype in (TaskType.KERNEL, TaskType.HOST) or v.name != "init":
+                    out = out.union(r)
+        return out
+
+    # ------------------------------------------------------------------
+    def _maybe_emit_horizon(self, task: Task) -> None:
+        front = [t for t in self.tasks[-(self.max_front_width * 4):]
+                 if not t.dependents and t.ttype == TaskType.KERNEL]
+        if (task.critical_path - self._cp_at_last_horizon >= self.horizon_step
+                or len(front) >= self.max_front_width):
+            self.emit_horizon()
+
+    def emit_horizon(self) -> Task:
+        horizon = Task(TaskType.HORIZON, name=f"H@cp{self.tasks[-1].critical_path}")
+        # horizon depends on the current execution front
+        for t in self.tasks:
+            if not t.dependents and t is not horizon:
+                horizon.add_dependency(t, DepKind.SYNC)
+        self._append(horizon)
+        # horizon becomes the new frontier: substitute it for all prior
+        # writers/readers so tracking structures stay bounded [23]
+        for st in self._buffers.values():
+            st.last_writers.update(st.last_writers.covered(), horizon)
+            st.last_writers.coalesce()
+            st.last_readers = [(r, t) for r, t in st.last_readers
+                               if t.critical_path >= horizon.critical_path - self.horizon_step]
+        self._prev_horizon, self._last_horizon = self._last_horizon, horizon
+        self._cp_at_last_horizon = horizon.critical_path
+        return horizon
+
+    def emit_epoch(self, name: str = "epoch") -> Task:
+        epoch = Task(TaskType.EPOCH, name=name)
+        for t in self.tasks:
+            if not t.dependents and t is not epoch:
+                epoch.add_dependency(t, DepKind.SYNC)
+        self._append(epoch)
+        for st in self._buffers.values():
+            st.last_writers.update(st.last_writers.covered(), epoch)
+            st.last_writers.coalesce()
+            st.last_readers = []
+        self._last_epoch = epoch
+        self._last_horizon = None
+        return epoch
+
+    # ------------------------------------------------------------------
+    def kernel_tasks(self) -> list[Task]:
+        return [t for t in self.tasks if t.ttype in (TaskType.KERNEL, TaskType.HOST)]

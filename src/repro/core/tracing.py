@@ -1,0 +1,110 @@
+"""Per-instruction timeline capture — reproduces the paper's fig. 7 profiles.
+
+The tracer records timestamped spans for the three concurrent activities the
+paper visualizes: main-thread task submission, scheduler-thread graph
+generation, and per-lane instruction execution.  ``overlap_fraction``
+quantifies how much scheduling work was hidden behind execution — the
+paper's headline qualitative claim for the concurrent architecture.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Span:
+    lane: str          # "main" | "sched-N0" | "N0.D1.q0" | "N0.host" | ...
+    kind: str          # "task" | "cdag" | "idag" | instruction type
+    name: str
+    t0: float
+    t1: float
+
+
+class Tracer:
+    """Thread-safe append-only span log."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.spans: list[Span] = []
+        self._open: dict[tuple[int, int], float] = {}   # (node, iid) -> t_issue
+        self.epoch = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self.epoch
+
+    def span(self, lane: str, kind: str, name: str, t0: float, t1: float) -> None:
+        with self._lock:
+            self.spans.append(Span(lane, kind, name, t0, t1))
+
+    # executor integration -------------------------------------------------
+    def issue(self, node: int, instr) -> None:
+        self._open[(node, instr.iid)] = self.now()
+
+    def complete(self, node: int, instr) -> None:
+        t0 = self._open.pop((node, instr.iid), self.now())
+        lane = f"N{node}." + ".".join(map(str, instr.queue))
+        self.span(lane, instr.itype.value, instr.name or repr(instr), t0, self.now())
+
+    # analysis ---------------------------------------------------------------
+    def lanes(self) -> dict[str, list[Span]]:
+        out: dict[str, list[Span]] = defaultdict(list)
+        with self._lock:
+            for s in self.spans:
+                out[s.lane].append(s)
+        for v in out.values():
+            v.sort(key=lambda s: s.t0)
+        return out
+
+    @staticmethod
+    def _busy_intervals(spans: list[Span]) -> list[tuple[float, float]]:
+        iv = sorted((s.t0, s.t1) for s in spans)
+        merged: list[tuple[float, float]] = []
+        for a, b in iv:
+            if merged and a <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], b))
+            else:
+                merged.append((a, b))
+        return merged
+
+    def overlap_fraction(self, lane_a_prefix: str, lane_b_prefix: str) -> float:
+        """Fraction of lane-A busy time during which lane-B was also busy."""
+        lanes = self.lanes()
+        a = self._busy_intervals([s for l, ss in lanes.items()
+                                  if l.startswith(lane_a_prefix) for s in ss])
+        b = self._busy_intervals([s for l, ss in lanes.items()
+                                  if l.startswith(lane_b_prefix) for s in ss])
+        total = sum(t1 - t0 for t0, t1 in a)
+        if total == 0:
+            return 0.0
+        inter = 0.0
+        j = 0
+        for a0, a1 in a:
+            while j < len(b) and b[j][1] < a0:
+                j += 1
+            k = j
+            while k < len(b) and b[k][0] < a1:
+                inter += max(0.0, min(a1, b[k][1]) - max(a0, b[k][0]))
+                k += 1
+        return inter / total
+
+    def timeline_text(self, width: int = 78) -> str:
+        """ASCII rendering of the fig.-7-style timeline."""
+        lanes = self.lanes()
+        if not lanes:
+            return "(no spans)"
+        tmax = max(s.t1 for ss in lanes.values() for s in ss) or 1e-9
+        lines = []
+        for lane in sorted(lanes):
+            row = [" "] * width
+            for s in lanes[lane]:
+                i0 = min(width - 1, int(s.t0 / tmax * width))
+                i1 = min(width - 1, max(i0, int(s.t1 / tmax * width)))
+                for i in range(i0, i1 + 1):
+                    row[i] = "#"
+            lines.append(f"{lane:>16} |{''.join(row)}|")
+        lines.append(f"{'':>16}  0{'':{width - 10}}{tmax * 1e3:8.2f}ms")
+        return "\n".join(lines)

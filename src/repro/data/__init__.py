@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMData, Prefetcher
+
+__all__ = ["SyntheticLMData", "Prefetcher"]

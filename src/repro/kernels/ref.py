@@ -1,0 +1,230 @@
+"""Pure-jnp oracles for every Pallas kernel, also used as the production
+fallback path on non-TPU backends and for long sequences where the naive
+einsum attention would materialize O(S*T) logits.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# blockwise (flash) attention — the oracle for kernels/flash_attention.py
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        q_block: int = 512, kv_block: int = 1024,
+                        q_offset: int = 0):
+    """Memory-bounded attention with running softmax (flash algorithm).
+
+    q: [B,S,K,G,hd] grouped queries; k/v: [B,T,K,hd].
+    Returns [B,S,K,G,hd].  fp32 accumulation, output in q.dtype.
+
+    Backed by a custom_vjp whose BACKWARD is also blockwise (recomputing the
+    per-block probabilities from the saved logsumexp) — without it, the
+    residuals autodiff saves through the forward scan re-materialize the
+    O(S*T) attention matrix and training gains vanish (measured in §Perf).
+    """
+    return _flash_core(q, k, v, causal, window, q_block, kv_block, q_offset)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_core(q, k, v, causal, window, q_block, kv_block, q_offset):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block,
+                             q_offset)
+    return out
+
+
+def _block_mask(q0, k0, q_block, kv_block, T, causal, window):
+    qpos = q0 + jnp.arange(q_block)[:, None]
+    kpos = k0 + jnp.arange(kv_block)[None, :]
+    mask = kpos < T
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block, q_offset):
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    Sp = -(-S // q_block) * q_block
+    Tp = -(-T // kv_block) * kv_block
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    nq, nk = Sp // q_block, Tp // kv_block
+
+    qb = qp.reshape(B, nq, q_block, K, G, hd)
+    kb = kp.reshape(B, nk, kv_block, K, hd)
+    vb = vp.reshape(B, nk, kv_block, K, hd)
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q                                   # [B,q,K,G,hd]
+        q0 = qi * q_block + q_offset
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            logits = jnp.einsum("bqkgh,btkh->bkgqt", qblk, kblk,
+                                preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(q0, ki * kv_block, q_block, kv_block, T,
+                               causal, window)
+            logits = jnp.where(mask, logits, NEG_INF)
+            m2 = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m2[..., None])
+            corr = jnp.exp(m - m2)
+            l2 = l * corr + p.sum(-1)
+            acc2 = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m2, l2, acc2), None
+
+        m0 = jnp.full((B, K, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kb.transpose(1, 0, 2, 3, 4),
+             vb.transpose(1, 0, 2, 3, 4)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))          # [B,K,G,q]
+        return None, (out.transpose(0, 3, 1, 2, 4).astype(qblk.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(
+        q_step, None, (jnp.arange(nq), qb.transpose(1, 0, 2, 3, 4, 5)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, K, G, hd)[:, :S]
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, K, G, Sp)[..., :S]
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, q_block, kv_block, q_offset):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block,
+                               q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_block, kv_block, q_offset, res, dout):
+    """Blockwise FA2 backward: probabilities are recomputed per block from
+    the saved logsumexp — O(block) memory, no O(S*T) residuals."""
+    q, k, v, out, lse = res
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    Sp = -(-S // q_block) * q_block
+    Tp = -(-T // kv_block) * kv_block
+    nq, nk = Sp // q_block, Tp // kv_block
+    padq = ((0, 0), (0, Sp - S), (0, 0), (0, 0), (0, 0))
+    padk = ((0, 0), (0, Tp - T), (0, 0), (0, 0))
+    qb = jnp.pad(q, padq).reshape(B, nq, q_block, K, G, hd)
+    dob = jnp.pad(dout, padq).reshape(B, nq, q_block, K, G, hd)
+    kb = jnp.pad(k, padk).reshape(B, nk, kv_block, K, hd)
+    vb = jnp.pad(v, padk).reshape(B, nk, kv_block, K, hd)
+    # D_i = rowsum(dout * out)  [B,K,G,S]
+    Dfull = jnp.einsum("bskgh,bskgh->bkgs", jnp.pad(out, padq),
+                       jnp.pad(dout, padq)).astype(jnp.float32)
+    Db = Dfull.reshape(B, K, G, nq, q_block)
+    lseb = jnp.pad(lse, ((0, 0), (0, 0), (0, 0), (0, Sp - S)),
+                   constant_values=0.0).reshape(B, K, G, nq, q_block)
+
+    def kv_step(dq_acc, kj):
+        kblk = jax.lax.dynamic_index_in_dim(kb, kj, 1, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, kj, 1, keepdims=False)
+        k0 = kj * kv_block
+
+        def q_step(carry, qi):
+            dk, dv, dq_acc = carry
+            qblk = jax.lax.dynamic_index_in_dim(qb, qi, 1, keepdims=False)
+            doblk = jax.lax.dynamic_index_in_dim(dob, qi, 1, keepdims=False)
+            lse_i = jax.lax.dynamic_index_in_dim(lseb, qi, 3, keepdims=False)
+            D_i = jax.lax.dynamic_index_in_dim(Db, qi, 3, keepdims=False)
+            q0 = qi * q_block + q_offset
+            logits = jnp.einsum("bqkgh,btkh->bkgqt", qblk, kblk,
+                                preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(q0, k0, q_block, kv_block, T, causal, window)
+            p = jnp.where(mask, jnp.exp(logits - lse_i[..., None]), 0.0)
+            dp = jnp.einsum("bqkgh,btkh->bkgqt", doblk, vblk,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - D_i[..., None]) * scale        # [B,K,G,q,t]
+            dq_blk = jnp.einsum("bkgqt,btkh->bqkgh", ds.astype(kblk.dtype),
+                                kblk)
+            dk += jnp.einsum("bkgqt,bqkgh->btkh", ds.astype(qblk.dtype), qblk)
+            dv += jnp.einsum("bkgqt,bqkgh->btkh", p.astype(doblk.dtype), doblk)
+            dq_acc = jax.lax.dynamic_update_index_in_dim(
+                dq_acc, jax.lax.dynamic_index_in_dim(dq_acc, qi, 1,
+                                                     keepdims=False) + dq_blk,
+                qi, 1)
+            return (dk, dv, dq_acc), None
+
+        dk0 = jnp.zeros((B, kv_block, K, hd), jnp.float32)
+        dv0 = jnp.zeros((B, kv_block, K, hd), jnp.float32)
+        (dk, dv, dq_acc), _ = jax.lax.scan(q_step, (dk0, dv0, dq_acc),
+                                           jnp.arange(nq))
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, nq, q_block, K, G, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_step, dq0, jnp.arange(nk))
+    dq = dq.reshape(B, Sp, K, G, hd)[:, :S].astype(q.dtype)
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Tp, K, hd)[:, :T].astype(k.dtype)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Tp, K, hd)[:, :T].astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# N-body oracle (paper example app)
+
+
+def nbody_forces_ref(p_all: jnp.ndarray, p_chunk: jnp.ndarray,
+                     softening: float = 1e-3) -> jnp.ndarray:
+    """Direct O(N^2) gravity: force on each body in p_chunk from p_all."""
+    d = p_all[None, :, :] - p_chunk[:, None, :]
+    r2 = jnp.sum(d * d, axis=-1) + softening
+    return jnp.sum(d / (r2[..., None] ** 1.5), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# 5-point wave stencil oracle (WaveSim)
+
+
+def wave_step_ref(um: jnp.ndarray, u: jnp.ndarray, c: float = 0.25) -> jnp.ndarray:
+    lap = (jnp.roll(u, 1, 0) + jnp.roll(u, -1, 0)
+           + jnp.roll(u, 1, 1) + jnp.roll(u, -1, 1) - 4 * u)
+    un = 2 * u - um + c * lap
+    un = un.at[0, :].set(0.0).at[-1, :].set(0.0)
+    un = un.at[:, 0].set(0.0).at[:, -1].set(0.0)
+    return un
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk-state kernel oracle (the matmul core of mamba2)
+
+
+def ssd_chunk_ref(x, a, B, C):
+    """Single-chunk SSD: intra-chunk output + end-of-chunk state.
+
+    x: [q,h,p], a: [q,h] log-decay, B/C: [q,n].  (No batch dim — the kernel
+    grid supplies it.)  Returns (y [q,h,p], state [h,p,n]).
+    """
+    q = x.shape[0]
+    cs = jnp.cumsum(a, axis=0)                              # [q,h]
+    seg = cs[:, None, :] - cs[None, :, :]                   # [i,j,h]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    Lmat = jnp.where(mask[..., None], jnp.exp(seg), 0.0)    # [i,j,h]
+    scores = jnp.einsum("in,jn,ijh->hij", C, B, Lmat)
+    y = jnp.einsum("hij,jhp->ihp", scores, x)
+    decay_end = jnp.exp(cs[-1][None, :] - cs)               # [q,h]
+    state = jnp.einsum("qh,qn,qhp->hpn", decay_end, B, x)
+    return y, state

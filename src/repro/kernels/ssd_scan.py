@@ -1,0 +1,112 @@
+"""Pallas TPU SSD (state-space duality) chunk kernel — Mamba2's compute core.
+
+Grid: (batch*heads, chunks) with the chunk dimension sequential
+("arbitrary"): each step computes the intra-chunk quadratic term plus the
+contribution of the carried state, and updates the running [p, n] state in
+f32 VMEM scratch — the cross-chunk recurrence lives entirely in scratch, so
+the kernel is one pass over the sequence.
+
+Per grid step (one head, one chunk of q timesteps):
+    L[i,j]   = exp(cumsum(a)[i] - cumsum(a)[j]) for j<=i      (decay matrix)
+    y_intra  = ((C B^T) * L) x
+    y_inter  = diag(exp(cumsum(a))) C h_prev
+    h_new    = exp(total) h_prev + sum_j decay_to_end[j] B_j x_j^T
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .flash_attention import _vmem
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_ref, h_ref, *,
+            q: int, p: int, n: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # [q, p]
+    a = a_ref[0].astype(jnp.float32)          # [q]
+    B = b_ref[0].astype(jnp.float32)          # [q, n]
+    C = c_ref[0].astype(jnp.float32)          # [q, n]
+
+    cs = jnp.cumsum(a)                        # [q]
+    seg = cs[:, None] - cs[None, :]           # [q, q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    Lmat = jnp.where(jj <= ii, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * Lmat
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    h_prev = h_ref[...]                       # [p, n]
+    decay_from_start = jnp.exp(cs)            # [q]
+    y += (decay_from_start[:, None]
+          * jax.lax.dot_general(C, h_prev, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32))
+
+    decay_to_end = jnp.exp(cs[-1] - cs)       # [q]
+    state_upd = jax.lax.dot_general(x * decay_to_end[:, None], B,
+                                    (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    h_ref[...] = jnp.exp(cs[-1]) * h_prev + state_upd
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        state_ref[0] = h_ref[...].astype(state_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_tpu(x, a, B, C, *, chunk: int = 64, interpret: bool = False):
+    """SSD over full sequences.
+
+    x: [b,s,h,p], a: [b,s,h] (log-decay), B/C: [b,s,n].
+    Returns (y [b,s,h,p], final state [b,h,p,n]).  s % chunk == 0 required
+    (callers pad, same as models.mamba2.ssd_chunked).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    # fold (batch, head); broadcast B/C across heads
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    af = a.transpose(0, 2, 1).reshape(b * h, s)
+    Bf = jnp.broadcast_to(B[:, None], (b, h, s, n)).reshape(b * h, s, n)
+    Cf = jnp.broadcast_to(C[:, None], (b, h, s, n)).reshape(b * h, s, n)
+
+    grid = (b * h, nc)
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, q=chunk, p=p, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, chunk), lambda g, c: (g, c)),
+            pl.BlockSpec((1, chunk, n), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda g, c: (g, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, p, n), lambda g, c: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((b * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xf, af, Bf, Cf)
+    y = y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    state = state.reshape(b, h, p, n)
+    return y, state

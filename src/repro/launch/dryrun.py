@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, with ShapeDtypeStruct inputs (no allocation).
+
+For each cell this records:
+  * memory_analysis()  — proves the sharded program fits per-device HBM
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline terms
+  * collective bytes   — parsed from the compiled HLO text per collective op
+
+Artifacts are written as JSON under ``artifacts/dryrun/`` and consumed by
+``benchmarks.run`` (§Roofline) and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--jobs N]
+"""
+
+import argparse
+import json
+import math
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALIASES, ARCHITECTURES, LONG_CONTEXT_OK, SHAPES, get_config
+from repro.launch.inputs import (cache_specs, decode_ids_specs, param_specs,
+                                 train_batch_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.models.internvl import D_VIS
+from repro.optim import adamw_init
+from repro.sharding import batch_shardings, cache_shardings, param_shardings
+from repro.optim.adamw import zero1_shardings
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+
+def _compile_one(cfg, shape_spec, mesh, *, zero1=True, donate=True):
+    """Lower + compile one step program; returns (compiled, elapsed)."""
+    seq, gbs, kind = (shape_spec["seq_len"], shape_spec["global_batch"],
+                      shape_spec["kind"])
+    model, pspecs = param_specs(cfg)
+    pshard = param_shardings(pspecs, mesh)
+    t0 = time.time()
+    with mesh:
+        if kind == "train":
+            ostate_specs = jax.eval_shape(adamw_init, pspecs)
+            oshard = (zero1_shardings(pspecs, mesh) if zero1
+                      else {"m": pshard, "v": pshard,
+                            "step": NamedSharding(mesh, P())})
+            bspecs = train_batch_specs(cfg, gbs, seq)
+            bshard = batch_shardings(bspecs, mesh)
+            step = make_train_step(model)
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, oshard, bshard),
+                             out_shardings=(pshard, oshard,
+                                            NamedSharding(mesh, P())),
+                             donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(pspecs, ostate_specs, bspecs)
+        elif kind == "prefill":
+            bspecs = train_batch_specs(cfg, gbs, seq)
+            bspecs.pop("labels")
+            bshard = batch_shardings(bspecs, mesh)
+            step = make_prefill_step(model, cfg, max_len=seq)
+            jitted = jax.jit(step, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(pspecs, bspecs)
+        else:  # decode
+            if cfg.family == "audio":
+                cspecs = cache_specs(cfg, gbs, seq)
+                cshard = cache_shardings(cspecs, mesh)
+                enc_spec = jax.ShapeDtypeStruct(
+                    (gbs, cfg.enc_frames, cfg.d_model), cfg.adt)
+                enc_shard = batch_shardings(enc_spec, mesh)
+                step = make_decode_step(model, cfg)
+                jitted = jax.jit(step,
+                                 in_shardings=(pshard, cshard,
+                                               batch_shardings(
+                                                   decode_ids_specs(gbs), mesh),
+                                               enc_shard),
+                                 donate_argnums=(1,) if donate else ())
+                lowered = jitted.lower(pspecs, cspecs, decode_ids_specs(gbs),
+                                       enc_spec)
+            else:
+                cspecs = cache_specs(cfg, gbs, seq)
+                cshard = cache_shardings(cspecs, mesh)
+                step = make_decode_step(model, cfg)
+                jitted = jax.jit(step,
+                                 in_shardings=(pshard, cshard,
+                                               batch_shardings(
+                                                   decode_ids_specs(gbs), mesh)),
+                                 donate_argnums=(1,) if donate else ())
+                lowered = jitted.lower(pspecs, cspecs, decode_ids_specs(gbs))
+
+        compiled = lowered.compile()
+    return compiled, time.time() - t0
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
+               zero1: bool = True, donate: bool = True, cfg=None):
+    """Lower + compile one (arch x shape x mesh) cell; returns the record.
+
+    Per-device FLOPs / HBM bytes / collective bytes come from the loop-aware
+    HLO analysis (launch/hloanalysis.py) — XLA's own cost_analysis counts
+    scan bodies once (validated against an unrolled compile, see
+    tests/test_dryrun.py).
+    """
+    from repro.launch.hloanalysis import analyze
+
+    cfg = cfg or get_config(arch)
+    spec = SHAPES[shape]
+    seq, gbs, kind = spec["seq_len"], spec["global_batch"], spec["kind"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    nchips = math.prod(mesh.devices.shape)
+
+    mod_name = ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    if shape == "long_500k" and mod_name not in LONG_CONTEXT_OK:
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "skipped": "full-attention arch; O(seq) KV cache infeasible "
+                           "at 500k (DESIGN.md §Arch-applicability)"}
+
+    compiled, dt = _compile_one(cfg, spec, mesh, zero1=zero1, donate=donate)
+    mem = compiled.memory_analysis()
+    stats = analyze(compiled.as_text())
+    raw = compiled.cost_analysis()
+
+    rec = {
+        "arch": arch, "shape": shape,
+        "multi_pod": multi_pod, "chips": nchips,
+        "seq_len": seq, "global_batch": gbs, "kind": kind,
+        "compile_s": round(dt, 1),
+        # per-device totals (loop-aware)
+        "flops": stats["flops"],
+        "bytes_accessed": stats["bytes"],
+        "collectives": stats["coll"],
+        "collective_counts": stats["coll_count"],
+        "flops_rawhlo": float(raw.get("flops", 0.0)),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "params": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+    }
+    return rec
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path) -> dict:
+    tag = "multi" if multi_pod else "single"
+    out = out_dir / f"{arch}__{shape}__{tag}.json"
+    try:
+        rec = lower_cell(arch, shape, multi_pod=multi_pod)
+    except Exception as e:  # noqa: BLE001 — recorded as cell failure
+        rec = {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+               "error": f"{type(e).__name__}: {e}"}
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    status = ("SKIP" if "skipped" in rec else
+              "FAIL" if "error" in rec else "ok")
+    print(f"[dryrun] {arch:24s} {shape:12s} {tag:6s} {status}"
+          + (f" compile={rec.get('compile_s')}s flops={rec.get('flops', 0):.3e}"
+             if status == "ok" else "")
+          + (f" :: {rec['error'][:120]}" if status == "FAIL" else ""),
+          flush=True)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=str(ART_DIR))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    cells: list[tuple[str, str, bool]] = []
+    archs = ARCHITECTURES if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    failures = 0
+    for a, s, m in cells:
+        rec = run_cell(a, s, m, out_dir)
+        if "error" in rec:
+            failures += 1
+    print(f"[dryrun] done: {len(cells)} cells, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

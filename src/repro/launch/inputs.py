@@ -1,0 +1,53 @@
+"""Model inputs: real batches for smoke tests, ShapeDtypeStruct stand-ins for
+the dry-run (weak-type-correct, shardable, no device allocation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ArchConfig, build_model
+from repro.models.internvl import D_VIS
+
+
+def train_batch(cfg: ArchConfig, batch: int, seq: int, *, rng=None):
+    """A real (host) training batch for smoke tests / CPU training."""
+    rng = rng or np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=(batch, seq)).astype(np.int32)
+    out = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.enc_frames, cfg.d_model)), cfg.adt)
+    if cfg.family == "vlm":
+        out["vis"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.vis_tokens, D_VIS)), cfg.adt)
+    return out
+
+
+def train_batch_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """ShapeDtypeStruct stand-ins for every train_step input."""
+    sds = jax.ShapeDtypeStruct
+    out = {"tokens": sds((batch, seq), jnp.int32),
+           "labels": sds((batch, seq), jnp.int32)}
+    if cfg.family == "audio":
+        out["frames"] = sds((batch, cfg.enc_frames, cfg.d_model), cfg.adt)
+    if cfg.family == "vlm":
+        out["vis"] = sds((batch, cfg.vis_tokens, D_VIS), cfg.adt)
+    return out
+
+
+def param_specs(cfg: ArchConfig):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    model = build_model(cfg)
+    return model, jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def decode_ids_specs(batch: int):
+    return jax.ShapeDtypeStruct((batch, 1), jnp.int32)

@@ -1,0 +1,63 @@
+"""Step functions (train / prefill / decode) shared by the dry-run harness,
+the training driver and the serving driver."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ArchConfig, build_model
+from repro.optim import adamw_init, adamw_update
+
+
+def make_train_step(model, *, lr: float = 3e-4):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state, lr=lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(model, cfg: ArchConfig, max_len: int):
+    fam = cfg.family
+
+    if fam == "audio":
+        def prefill_step(params, batch):
+            enc = model.encode(params, batch["frames"])
+            logits = model.decode_train(params, enc, batch["tokens"])
+            return logits[:, -1]
+        return prefill_step
+
+    if fam == "vlm":
+        def prefill_step(params, batch):
+            logits, cache = model.prefill(params, batch["vis"],
+                                          batch["tokens"], max_len)
+            return logits, cache
+        return prefill_step
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch["tokens"], max_len)
+
+    return prefill_step
+
+
+def make_decode_step(model, cfg: ArchConfig):
+    fam = cfg.family
+
+    if fam == "audio":
+        def decode_step(params, cache, ids, enc_out):
+            return model.decode_step(params, cache, ids, enc_out)
+        return decode_step
+
+    if fam == "vlm":
+        def decode_step(params, cache, ids):
+            return model.decode_step(params, cache, ids)
+        return decode_step
+
+    def decode_step(params, cache, ids):
+        return model.decode_step(params, cache, ids)
+
+    return decode_step

@@ -1,0 +1,26 @@
+"""Model zoo: dense/MoE/SSM/hybrid/enc-dec/VLM transformer backbones in pure
+JAX (pytree params + functional apply), built for pjit/shard_map distribution
+and scan-over-layers compilation efficiency.
+"""
+
+from .config import ArchConfig
+from .transformer import DecoderLM
+from .mamba2 import Mamba2LM
+from .zamba2 import Zamba2LM
+from .whisper import WhisperModel
+from .internvl import InternVLModel
+
+
+def build_model(cfg: ArchConfig):
+    return {
+        "dense": DecoderLM,
+        "moe": DecoderLM,
+        "ssm": Mamba2LM,
+        "hybrid": Zamba2LM,
+        "audio": WhisperModel,
+        "vlm": InternVLModel,
+    }[cfg.family](cfg)
+
+
+__all__ = ["ArchConfig", "DecoderLM", "Mamba2LM", "Zamba2LM", "WhisperModel",
+           "InternVLModel", "build_model"]

@@ -1,0 +1,282 @@
+"""Core layers: norms, RoPE, GQA attention (+SWA, QKV bias), MLPs, MoE.
+
+Pure-functional: ``init_*`` builds parameter pytrees, ``apply``-style
+functions consume them.  All matmul dims are kept multiples of 128 where the
+configs allow, activations run in ``cfg.dtype`` with fp32 softmax/norm
+accumulation — the TPU-native layout expected by the MXU.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initializers
+
+
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, dtype, bias=False, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(key, (d_in, d_out), dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_norm(d, dtype):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps=1e-5):
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+
+
+def init_attention(key, cfg):
+    ks = jax.random.split(key, 4)
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    return {
+        "wq": init_linear(ks[0], d, H * hd, cfg.pdt, bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, K * hd, cfg.pdt, bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, K * hd, cfg.pdt, bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], H * hd, d, cfg.pdt,
+                          scale=1.0 / math.sqrt(H * hd * 2 * cfg.num_layers)),
+    }
+
+
+FLASH_THRESHOLD = 4096 * 4096   # S*T above which blockwise attention is used
+
+
+def _sdpa(q, k, v, mask, *, use_kernel: bool = False, causal: bool = False,
+          window: Optional[int] = None):
+    """Grouped scaled-dot-product attention.
+
+    q: [B,S,K,G,hd] (G = query groups per kv head), k/v: [B,T,K,hd],
+    mask: [B,1,S,T] or broadcastable boolean (True = attend).
+
+    Large S*T (long-context prefill) automatically takes the blockwise
+    flash path so O(S*T) logits are never materialized; the Pallas TPU
+    kernel is selected by ``use_kernel`` (see kernels/ops.py).
+    """
+    S, T = q.shape[1], k.shape[1]
+    if use_kernel and S > 1:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window)
+    if causal and S > 1 and S * T > FLASH_THRESHOLD:
+        from ..kernels.ref import flash_attention_ref
+        return flash_attention_ref(q, k, v, causal=True, window=window)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None] if mask.ndim == 3 else mask,
+                       logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out
+
+
+def causal_mask(S: int, T: int, offset: int = 0,
+                window: Optional[int] = None) -> jnp.ndarray:
+    """[S,T] boolean mask; query i attends key j iff j <= i+offset (and
+    within the sliding window if given)."""
+    qpos = jnp.arange(S)[:, None] + offset
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def attention(p, cfg, x, positions, mask, kv=None, *, use_kernel=False,
+              causal=False):
+    """kv: optional (k, v) override for cross-attention / cached decode."""
+    B, S, d = x.shape
+    if getattr(cfg, "ablate_attention", False) and kv is None:
+        # measurement-only path (§Perf): QKV/O projections run, the O(S*T)
+        # mixing is skipped — isolates attention-mixing HBM traffic
+        H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+        qa = linear(p["wq"], x)
+        ka = linear(p["wk"], x).reshape(B, S, K, hd)
+        va = linear(p["wv"], x).reshape(B, S, K, hd)
+        return linear(p["wo"], qa * 0.001), (ka, va)
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    G = H // K
+    q = linear(p["wq"], x).reshape(B, S, H, hd)
+    q = apply_rope(q, positions, cfg.rope_theta) if cfg.rope_theta else q
+    if kv is None:
+        k = linear(p["wk"], x).reshape(B, S, K, hd)
+        v = linear(p["wv"], x).reshape(B, S, K, hd)
+        k = apply_rope(k, positions, cfg.rope_theta) if cfg.rope_theta else k
+    else:
+        k, v = kv
+    qg = q.reshape(B, S, K, G, hd)
+    out = _sdpa(qg, k, v, mask, use_kernel=use_kernel, causal=causal,
+                window=cfg.sliding_window)
+    out = out.reshape(B, S, H * hd)
+    return linear(p["wo"], out), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def init_mlp(key, cfg, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    out_scale = 1.0 / math.sqrt(d_ff * 2 * cfg.num_layers)
+    if cfg.mlp == "swiglu":
+        return {"wi": init_linear(ks[0], d, d_ff, cfg.pdt),
+                "wg": init_linear(ks[1], d, d_ff, cfg.pdt),
+                "wo": init_linear(ks[2], d_ff, d, cfg.pdt, scale=out_scale)}
+    return {"wi": init_linear(ks[0], d, d_ff, cfg.pdt),
+            "wo": init_linear(ks[2], d_ff, d, cfg.pdt, scale=out_scale)}
+
+
+def mlp(p, cfg, x):
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(linear(p["wg"], x)) * linear(p["wi"], x)
+    else:
+        h = jax.nn.gelu(linear(p["wi"], x))
+    return linear(p["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style grouped top-k dispatch with capacity)
+
+
+def init_moe(key, cfg):
+    ks = jax.random.split(key, 4)
+    d, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(F * 2 * cfg.num_layers)
+    return {
+        "router": init_linear(ks[0], d, E, jnp.float32),
+        "wi": _normal(ks[1], (E, d, F), cfg.pdt, s_in),
+        "wg": _normal(ks[2], (E, d, F), cfg.pdt, s_in),
+        "wo": _normal(ks[3], (E, F, d), cfg.pdt, s_out),
+    }
+
+
+def moe(p, cfg, x, *, group_size: int = 512):
+    """Top-k routed MoE with per-group expert capacity (token dropping).
+
+    Tokens are processed in groups of ``group_size`` so the dispatch tensor
+    [Gs, E, C] stays VMEM-friendly; experts run as one batched einsum over
+    the leading expert dim — the layout that shards naturally over an
+    expert-parallel mesh axis.
+    Returns (output, aux_loss).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    tokens = x.reshape(-1, D)
+    N = tokens.shape[0]
+    Gs = min(group_size, N)
+    assert N % Gs == 0, f"token count {N} not divisible by group {Gs}"
+    G = N // Gs
+    C = max(1, int(math.ceil(K * Gs / E * cfg.capacity_factor)))
+    xg = tokens.reshape(G, Gs, D)
+
+    logits = (xg.astype(jnp.float32) @ p["router"]["w"])       # [G,Gs,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # load-balancing aux loss (Switch): E * mean(frac_tokens * frac_probs)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=1)
+    frac_probs = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+
+    # iterative top-k with capacity assignment
+    combine = jnp.zeros((G, Gs, E, C), dtype=jnp.float32)
+    remaining = probs
+    fill = jnp.zeros((G, E), dtype=jnp.int32)                   # slots used
+    for _ in range(K):
+        idx = jnp.argmax(remaining, axis=-1)                    # [G,Gs]
+        gate = jnp.take_along_axis(remaining, idx[..., None], -1)[..., 0]
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)      # [G,Gs,E]
+        pos = jnp.cumsum(onehot, axis=1) - onehot               # pos within group
+        pos = pos + fill[:, None, :]                            # offset by filled
+        in_cap = pos < C
+        slot = jnp.einsum("gse,gse->gs", onehot, pos).astype(jnp.int32)
+        keep = jnp.einsum("gse,gse->gs", onehot, in_cap.astype(jnp.float32)) > 0
+        cslot = jax.nn.one_hot(jnp.clip(slot, 0, C - 1), C, dtype=jnp.float32)
+        combine = combine + (gate * keep)[..., None, None] * \
+            onehot[..., None] * cslot[:, :, None, :]
+        fill = fill + jnp.sum(onehot * in_cap, axis=1).astype(jnp.int32)
+        remaining = remaining * (1.0 - onehot)
+
+    # renormalize kept gates over the k choices (granite-style top-k softmax)
+    denom = jnp.sum(combine, axis=(2, 3), keepdims=True) + 1e-9
+    combine = combine / denom
+    dispatch = (combine > 0).astype(x.dtype)                    # [G,Gs,E,C]
+
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch, xg)            # [E,G,C,D]
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, p["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("egcd,edf->egcf", xin, p["wi"].astype(x.dtype))
+    out_e = jnp.einsum("egcf,efd->egcd", h, p["wo"].astype(x.dtype))
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), out_e)
+    return out.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+
+
+def init_embedding(key, vocab, d, dtype):
+    return {"e": _normal(key, (vocab, d), dtype, 0.02)}
+
+
+def embed(p, ids):
+    return p["e"][ids]
+
+
+def unembed(p, x, dtype=jnp.float32):
+    return (x @ p["e"].T.astype(x.dtype)).astype(dtype)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0] - lse
+    loss = -ll
+    if mask is not None:
+        return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(loss)

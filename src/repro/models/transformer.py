@@ -1,0 +1,201 @@
+"""Decoder-only LM (dense and MoE) with scan-over-layers, GQA/RoPE/SWA,
+KV-cached decode (ring buffer for sliding-window), and remat policies.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ArchConfig
+
+
+def stack_layer_params(per_layer: list) -> dict:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+class DecoderLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- params ---------------------------------------------------------------
+    def init_layer(self, key) -> dict:
+        cfg = self.cfg
+        ka, km, k1, k2 = jax.random.split(key, 4)
+        p = {"ln1": L.init_norm(cfg.d_model, cfg.pdt),
+             "ln2": L.init_norm(cfg.d_model, cfg.pdt),
+             "attn": L.init_attention(ka, cfg)}
+        if cfg.family == "moe":
+            p["moe"] = L.init_moe(km, cfg)
+        else:
+            p["mlp"] = L.init_mlp(km, cfg)
+        return p
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ke, kh, kf, *kl = jax.random.split(key, 3 + cfg.num_layers)
+        params = {
+            "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.pdt),
+            "ln_f": L.init_norm(cfg.d_model, cfg.pdt),
+            "layers": stack_layer_params([self.init_layer(k) for k in kl]),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = L.init_linear(kh, cfg.d_model, cfg.vocab_size,
+                                           cfg.pdt)
+        return params
+
+    # -- blocks -----------------------------------------------------------------
+    def _block(self, p, x, positions, mask, kv=None, *, use_kernel=None,
+               causal=False):
+        cfg = self.cfg
+        if use_kernel is None:
+            use_kernel = cfg.flash_attention
+        a, new_kv = L.attention(p["attn"], cfg, L.rms_norm(p["ln1"], x,
+                                                           cfg.norm_eps),
+                                positions, mask, kv=kv, use_kernel=use_kernel,
+                                causal=causal)
+        x = x + a
+        h = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            y, aux = L.moe(p["moe"], cfg, h, group_size=cfg.moe_group)
+        else:
+            y, aux = L.mlp(p["mlp"], cfg, h), 0.0
+        return x + y, aux, new_kv
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            return L.unembed(params["embed"], x)
+        return L.linear(params["head"], x).astype(jnp.float32)
+
+    # -- full forward (train / prefill) -------------------------------------------
+    def forward(self, params, ids, *, return_cache: bool = False,
+                last_only: bool = False):
+        cfg = self.cfg
+        B, S = ids.shape
+        x = L.embed(params["embed"], ids).astype(cfg.adt)
+        positions = jnp.arange(S)
+        mask = L.causal_mask(S, S, window=cfg.sliding_window)
+        return self.forward_embedded(params, x, positions, mask,
+                                     return_cache=return_cache,
+                                     last_only=last_only)
+
+    def forward_embedded(self, params, x, positions, mask, *,
+                         return_cache: bool = False, last_only: bool = False):
+        """``last_only`` computes logits for the final position only —
+        prefill never needs the full [B,S,V] logits tensor (or the head
+        matmul + vocab-axis collective behind it)."""
+        cfg = self.cfg
+
+        def body(carry, lp):
+            x, aux = carry
+            x, a, kv = self._block(lp, x, positions, mask, causal=True)
+            out = kv if return_cache else 0
+            return (x, aux + a), out
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        if cfg.scan_layers:
+            (x, aux), kvs = jax.lax.scan(body_fn, (x, 0.0), params["layers"])
+        else:
+            kvs_list = []
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda v: v[i], params["layers"])
+                (x, aux), kv = body_fn((x, 0.0 if i == 0 else aux), lp)
+                kvs_list.append(kv)
+            kvs = kvs_list if return_cache else None
+        logits = self._logits(params, x[:, -1:] if last_only else x)
+        if return_cache:
+            return logits, aux, kvs
+        return logits, aux
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch["tokens"])
+        ce = L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                             batch.get("mask", None))
+        return ce + 0.01 * aux
+
+    # -- cached decode --------------------------------------------------------------
+    def cache_len(self, max_len: int) -> int:
+        w = self.cfg.sliding_window
+        return min(w, max_len) if w else max_len
+
+    def init_cache(self, B: int, max_len: int) -> dict:
+        cfg = self.cfg
+        W = self.cache_len(max_len)
+        K, hd, Lr = cfg.num_kv_heads, cfg.hd, cfg.num_layers
+        return {
+            "k": jnp.zeros((Lr, B, W, K, hd), cfg.adt),
+            "v": jnp.zeros((Lr, B, W, K, hd), cfg.adt),
+            "kpos": jnp.full((W,), -1, jnp.int32),     # global pos per slot
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def prefill(self, params, ids, max_len: int):
+        """Run the full prompt, return (last-token logits, primed cache)."""
+        cfg = self.cfg
+        B, S = ids.shape
+        logits, _, kvs = self.forward(params, ids, return_cache=True,
+                                      last_only=True)
+        cache = self.init_cache(B, max_len)
+        W = cache["k"].shape[2]
+        take = min(S, W)
+        # kvs: (k, v) stacked over layers: [L,B,S,K,hd].  Position p lives in
+        # ring slot p % W — the same invariant decode_step maintains.
+        k_all, v_all = kvs
+        keep_pos = jnp.arange(S - take, S)
+        slots = keep_pos % W
+        cache["k"] = cache["k"].at[:, :, slots].set(k_all[:, :, S - take:])
+        cache["v"] = cache["v"].at[:, :, slots].set(v_all[:, :, S - take:])
+        cache["kpos"] = cache["kpos"].at[slots].set(keep_pos)
+        cache["pos"] = jnp.array(S, jnp.int32)
+        return logits[:, -1], cache
+
+    def decode_step(self, params, cache, ids):
+        """ids: [B,1] next token; returns (logits [B,V], new cache)."""
+        cfg = self.cfg
+        B = ids.shape[0]
+        pos = cache["pos"]
+        W = cache["k"].shape[2]
+        slot = pos % W
+        x = L.embed(params["embed"], ids).astype(cfg.adt)
+        positions = pos[None].astype(jnp.int32)
+
+        kpos = cache["kpos"].at[slot].set(pos)
+        # mask: valid slots, causal, within window
+        valid = kpos >= 0
+        if cfg.sliding_window:
+            valid &= kpos > pos - cfg.sliding_window
+        mask = valid[None, :]                          # [S=1, T=W]
+
+        def body(carry, lp_kc):
+            x, _ = carry
+            lp, k_l, v_l = lp_kc
+            h = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+            K, hd = cfg.num_kv_heads, cfg.hd
+            q = L.linear(lp["attn"]["wq"], h).reshape(B, 1, cfg.num_heads, hd)
+            q = L.apply_rope(q, positions, cfg.rope_theta) if cfg.rope_theta else q
+            kn = L.linear(lp["attn"]["wk"], h).reshape(B, 1, K, hd)
+            vn = L.linear(lp["attn"]["wv"], h).reshape(B, 1, K, hd)
+            kn = L.apply_rope(kn, positions, cfg.rope_theta) if cfg.rope_theta else kn
+            k_l = jax.lax.dynamic_update_slice_in_dim(k_l, kn, slot, axis=1)
+            v_l = jax.lax.dynamic_update_slice_in_dim(v_l, vn, slot, axis=1)
+            G = cfg.num_heads // K
+            qg = q.reshape(B, 1, K, G, hd)
+            o = L._sdpa(qg, k_l, v_l, mask)
+            x = x + L.linear(lp["attn"]["wo"], o.reshape(B, 1, cfg.num_heads * hd))
+            h2 = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+            if cfg.family == "moe":
+                y, _ = L.moe(lp["moe"], cfg, h2, group_size=B)
+            else:
+                y = L.mlp(lp["mlp"], cfg, h2)
+            return (x + y, 0.0), (k_l, v_l)
+
+        (x, _), (k_new, v_new) = jax.lax.scan(
+            body, (x, 0.0), (params["layers"], cache["k"], cache["v"]))
+        logits = self._logits(params, x)[:, 0]
+        new_cache = {"k": k_new, "v": v_new, "kpos": kpos, "pos": pos + 1}
+        return logits, new_cache

@@ -1,0 +1,174 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, enc_frames, d_model] (the output the two
+conv layers would produce).  Encoder is bidirectional with sinusoidal
+positions; decoder has causal self-attention + cross-attention with learned
+positions.  No RoPE (rope_theta=0 in the config).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ArchConfig
+from .transformer import stack_layer_params
+
+MAX_TGT = 32768   # extended decoder position table (assignment shapes reach
+                  # 32k; whisper's original 448 noted in DESIGN.md)
+
+
+def sinusoid(S, d):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class WhisperModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- params --------------------------------------------------------------
+    def _attn_mlp_block(self, key, cross=False):
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        p = {"ln1": L.init_norm(cfg.d_model, cfg.pdt),
+             "ln2": L.init_norm(cfg.d_model, cfg.pdt),
+             "attn": L.init_attention(ks[0], cfg),
+             "mlp": L.init_mlp(ks[1], cfg)}
+        if cross:
+            p["lnx"] = L.init_norm(cfg.d_model, cfg.pdt)
+            p["xattn"] = L.init_attention(ks[2], cfg)
+        return p
+
+    def init(self, key):
+        cfg = self.cfg
+        ke, kp, *kl = jax.random.split(key, 2 + cfg.enc_layers + cfg.num_layers)
+        enc_keys, dec_keys = kl[:cfg.enc_layers], kl[cfg.enc_layers:]
+        return {
+            "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.pdt),
+            "pos_dec": L._normal(kp, (MAX_TGT, cfg.d_model), cfg.pdt, 0.01),
+            "ln_enc": L.init_norm(cfg.d_model, cfg.pdt),
+            "ln_f": L.init_norm(cfg.d_model, cfg.pdt),
+            "enc": stack_layer_params(
+                [self._attn_mlp_block(k) for k in enc_keys]),
+            "dec": stack_layer_params(
+                [self._attn_mlp_block(k, cross=True) for k in dec_keys]),
+        }
+
+    # -- encoder ---------------------------------------------------------------
+    def encode(self, params, frames):
+        """frames: [B, F, d_model] precomputed frame embeddings (stub)."""
+        cfg = self.cfg
+        B, F, _ = frames.shape
+        x = frames.astype(cfg.adt) + sinusoid(F, cfg.d_model).astype(cfg.adt)
+        positions = jnp.arange(F)
+        mask = jnp.ones((F, F), bool)
+
+        def body(x, lp):
+            a, _ = L.attention(lp["attn"], cfg,
+                               L.rms_norm(lp["ln1"], x, cfg.norm_eps),
+                               positions, mask)
+            x = x + a
+            x = x + L.mlp(lp["mlp"], cfg, L.rms_norm(lp["ln2"], x, cfg.norm_eps))
+            return x, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["enc"])
+        return L.rms_norm(params["ln_enc"], x, cfg.norm_eps)
+
+    # -- decoder -----------------------------------------------------------------
+    def decode_train(self, params, enc_out, ids):
+        cfg = self.cfg
+        B, S = ids.shape
+        F = enc_out.shape[1]
+        x = (L.embed(params["embed"], ids).astype(cfg.adt)
+             + params["pos_dec"][:S].astype(cfg.adt))
+        positions = jnp.arange(S)
+        self_mask = L.causal_mask(S, S)
+        x_mask = jnp.ones((S, F), bool)
+
+        def body(x, lp):
+            a, _ = L.attention(lp["attn"], cfg,
+                               L.rms_norm(lp["ln1"], x, cfg.norm_eps),
+                               positions, self_mask, causal=True)
+            x = x + a
+            K, hd = cfg.num_kv_heads, cfg.hd
+            ek = L.linear(lp["xattn"]["wk"], enc_out).reshape(B, F, K, hd)
+            ev = L.linear(lp["xattn"]["wv"], enc_out).reshape(B, F, K, hd)
+            a, _ = L.attention(lp["xattn"], cfg,
+                               L.rms_norm(lp["lnx"], x, cfg.norm_eps),
+                               positions, x_mask, kv=(ek, ev))
+            x = x + a
+            x = x + L.mlp(lp["mlp"], cfg, L.rms_norm(lp["ln2"], x, cfg.norm_eps))
+            return x, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["dec"])
+        x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        return L.unembed(params["embed"], x)   # tied embeddings (whisper)
+
+    def forward(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        return self.decode_train(params, enc_out, batch["tokens"]), 0.0
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                               batch.get("mask", None))
+
+    # -- cached decode --------------------------------------------------------------
+    def init_cache(self, B, max_len, enc_out=None):
+        cfg = self.cfg
+        Lr, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd
+        return {
+            "k": jnp.zeros((Lr, B, max_len, K, hd), cfg.adt),
+            "v": jnp.zeros((Lr, B, max_len, K, hd), cfg.adt),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def decode_step(self, params, cache, ids, enc_out):
+        cfg = self.cfg
+        B = ids.shape[0]
+        pos = cache["pos"]
+        T = cache["k"].shape[2]
+        F = enc_out.shape[1]
+        x = (L.embed(params["embed"], ids).astype(cfg.adt)
+             + jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, 1)
+             .astype(cfg.adt)[None])
+        mask = (jnp.arange(T) <= pos)[None, :]
+        x_mask = jnp.ones((1, F), bool)
+        K, hd = cfg.num_kv_heads, cfg.hd
+
+        def body(carry, lp_kc):
+            x, = carry
+            lp, k_l, v_l = lp_kc
+            h = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+            q = L.linear(lp["attn"]["wq"], h).reshape(B, 1, cfg.num_heads, hd)
+            kn = L.linear(lp["attn"]["wk"], h).reshape(B, 1, K, hd)
+            vn = L.linear(lp["attn"]["wv"], h).reshape(B, 1, K, hd)
+            k_l = jax.lax.dynamic_update_slice_in_dim(k_l, kn, pos, axis=1)
+            v_l = jax.lax.dynamic_update_slice_in_dim(v_l, vn, pos, axis=1)
+            qg = q.reshape(B, 1, K, cfg.num_heads // K, hd)
+            o = L._sdpa(qg, k_l, v_l, mask)
+            x = x + L.linear(lp["attn"]["wo"], o.reshape(B, 1, -1))
+            # cross attention against the (static) encoder output
+            ek = L.linear(lp["xattn"]["wk"], enc_out).reshape(B, F, K, hd)
+            ev = L.linear(lp["xattn"]["wv"], enc_out).reshape(B, F, K, hd)
+            a, _ = L.attention(lp["xattn"], cfg,
+                               L.rms_norm(lp["lnx"], x, cfg.norm_eps),
+                               jnp.zeros((1,), jnp.int32), x_mask, kv=(ek, ev))
+            x = x + a
+            x = x + L.mlp(lp["mlp"], cfg, L.rms_norm(lp["ln2"], x, cfg.norm_eps))
+            return (x,), (k_l, v_l)
+
+        (x,), (k_new, v_new) = jax.lax.scan(
+            body, (x,), (params["dec"], cache["k"], cache["v"]))
+        x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.unembed(params["embed"], x)[:, 0]
+        return logits, {"k": k_new, "v": v_new, "pos": pos + 1}

@@ -1,0 +1,5 @@
+from .adamw import adamw_init, adamw_update, zero1_shardings
+from .compress import compress_grads, decompress_grads
+
+__all__ = ["adamw_init", "adamw_update", "zero1_shardings",
+           "compress_grads", "decompress_grads"]

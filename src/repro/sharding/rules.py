@@ -1,0 +1,158 @@
+"""Logical-to-mesh sharding rules for every parameter / input / cache tensor.
+
+The rule table below maps parameter tree paths (regex over '/'-joined keys)
+to *logical* PartitionSpecs; ``_fit`` then drops any axis whose size does not
+divide the corresponding tensor dimension (e.g. 2 KV heads cannot shard over
+a 16-way model axis) — the standard fallback used by production frameworks.
+
+Scheme (Megatron-style TP over 'model', DP over ('pod','data'), EP for MoE
+experts over 'model', ZeRO-1 handled in optim):
+  * embeddings / lm head        -> vocab-sharded over model
+  * attention wq/wk/wv          -> output(heads)-sharded; wo input-sharded
+  * MLP wi/wg                   -> d_ff-sharded; wo input-sharded
+  * MoE expert weights [E,D,F]  -> expert-sharded over model (EP)
+  * Mamba in/out projections    -> inner-dim sharded
+  * norms / scalars             -> replicated
+Stacked-layer params carry a leading L axis (never sharded).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .partition import data_axes
+
+# (path regex, spec WITHOUT the leading stacked-layer axis)
+# "D" placeholder = the data axes tuple, "M" = the model axis.
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed/e$",                ("M", None)),          # vocab-sharded
+    (r"head/w$",                 (None, "M")),
+    (r"pos_dec$",                (None, None)),
+    (r"(attn|xattn)/w[qkv]/w$",  (None, "M")),
+    (r"(attn|xattn)/w[qkv]/b$",  ("M",)),
+    (r"(attn|xattn)/wo/w$",      ("M", None)),
+    (r"(attn|xattn)/wo/b$",      (None,)),
+    (r"mlp/w[ig]/w$",            (None, "M")),
+    (r"mlp/wo/w$",               ("M", None)),
+    (r"moe/router/w$",           (None, None)),
+    (r"moe/w[ig]$",              ("M", None, None)),    # expert-parallel
+    (r"moe/wo$",                 ("M", None, None)),
+    (r"in_proj/w$",              (None, "M")),
+    (r"out_proj/w$",             ("M", None)),
+    (r"conv_w$",                 (None, "M")),
+    (r"conv_b$",                 ("M",)),
+    (r"(A_log|dt_bias)$",        ("M",)),
+    (r"/D$",                     ("M",)),
+    (r"proj/w[12]/w$",           (None, "M")),
+    (r"(ln1|ln2|lnx|ln|ln_f|ln_enc|norm)/g$", None),    # replicated
+]
+
+
+def _fit(spec_tpl, shape, mesh: Mesh, extra_leading: int) -> P:
+    """Materialize a rule into a PartitionSpec that divides ``shape``."""
+    if spec_tpl is None:
+        return P()
+    dp = data_axes(mesh)
+    entries: list = [None] * extra_leading
+    for axis_tag in spec_tpl:
+        if axis_tag is None:
+            entries.append(None)
+        elif axis_tag == "M":
+            entries.append("model")
+        elif axis_tag == "D":
+            entries.append(dp)
+        else:
+            entries.append(axis_tag)
+    entries = entries[:len(shape)] + [None] * max(0, len(shape) - len(entries))
+    # drop axes that do not divide the dim
+    out = []
+    for dim, e in zip(shape, entries):
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(e if dim % size == 0 else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_param(path: str, shape, mesh: Mesh) -> P:
+    # stacked layers carry 1 leading L axis; zamba groups carry none extra
+    leading = 1 if re.search(r"(^|/)(layers|enc|dec)/", path) else 0
+    for pat, tpl in _RULES:
+        if re.search(pat, path):
+            return _fit(tpl, shape, mesh, leading)
+    return P()   # replicate by default
+
+
+def param_shardings(param_tree, mesh: Mesh):
+    """NamedShardings for a parameter pytree (works on ShapeDtypeStructs)."""
+
+    def one(path, leaf):
+        spec = spec_for_param(_path_str(path), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """Training/prefill batch: leading dim sharded over all data axes."""
+    dp = data_axes(mesh)
+
+    def one(leaf):
+        if leaf.shape and leaf.shape[0] % _size(mesh, dp) == 0:
+            return NamedSharding(mesh, P(dp, *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_tree)
+
+
+def _size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def cache_shardings(cache_tree, mesh: Mesh, *, batch_dim: int = 1):
+    """Decode caches: [L, B, T, K, hd] — shard batch over data axes and the
+    kv-head dim over model when divisible (falls back per-dim)."""
+    dp = data_axes(mesh)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        if ps.endswith("pos") or not shape:
+            return NamedSharding(mesh, P())
+        if ps.endswith("kpos"):
+            return NamedSharding(mesh, P())
+        if len(shape) >= 2 and shape[batch_dim] % _size(mesh, dp) == 0:
+            spec[batch_dim] = dp
+        # shard kv heads (dim -2 of k/v; dim 2 of ssm [L,B,h,p,n]) over model
+        for cand in (len(shape) - 2, 2):
+            if 0 <= cand < len(shape) and spec[cand] is None and cand != batch_dim:
+                if shape[cand] % mesh.shape["model"] == 0 and shape[cand] > 1:
+                    spec[cand] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

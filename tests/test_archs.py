@@ -1,0 +1,134 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward/train step on CPU, asserting output shapes + no NaNs; plus a decode
+step for decode-capable archs.  The FULL configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHITECTURES, get_config
+from repro.launch.inputs import train_batch
+from repro.models import build_model
+
+B, S = 2, 32
+
+
+@pytest.fixture(scope="module")
+def arch_setup():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch, reduced=True)
+            m = build_model(cfg)
+            params = m.init(jax.random.PRNGKey(0))
+            cache[arch] = (cfg, m, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_full_config_matches_assignment(arch):
+    """The exact published numbers from the assignment block."""
+    cfg = get_config(arch)
+    expected = {
+        "starcoder2_3b": (30, 3072, 24, 2, 12288, 49152),
+        "minitron_4b": (32, 3072, 24, 8, 9216, 256000),
+        "h2o_danube_1_8b": (24, 2560, 32, 8, 6912, 32000),
+        "qwen2_1_5b": (28, 1536, 12, 2, 8960, 151936),
+        "granite_moe_1b_a400m": (24, 1024, 16, 8, 512, 49155),
+        "granite_moe_3b_a800m": (32, 1536, 24, 8, 512, 49155),
+        "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+        "mamba2_370m": (48, 1024, 0, 0, 0, 50280),
+        "whisper_tiny": (4, 384, 6, 6, 1536, 51865),
+        "internvl2_26b": (48, 6144, 48, 8, 16384, 92553),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, f"{arch}: {got} != {expected}"
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_smoke_forward(arch, arch_setup):
+    cfg, m, params = arch_setup(arch)
+    batch = train_batch(cfg, B, S)
+    if cfg.family in ("audio", "vlm"):
+        logits, _ = m.forward(params, batch)
+    else:
+        logits, _ = m.forward(params, batch["tokens"])
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch} produced non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_smoke_train_step(arch, arch_setup):
+    """One SGD step: loss and gradients finite, loss decreases on repeat."""
+    cfg, m, params = arch_setup(arch)
+    batch = train_batch(cfg, B, S)
+    loss, grads = jax.value_and_grad(m.loss)(params, batch)
+    assert bool(jnp.isfinite(loss)), f"{arch} loss not finite"
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(leaf).all()), f"{arch} non-finite grad"
+    p2 = jax.tree.map(lambda p, g: p - 0.05 * g, params, grads)
+    loss2 = m.loss(p2, batch)
+    assert float(loss2) < float(loss), \
+        f"{arch}: loss did not decrease ({loss} -> {loss2})"
+
+
+DECODE_ARCHS = [a for a in ARCHITECTURES if a not in ("whisper_tiny",
+                                                      "internvl2_26b")]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_smoke_decode(arch, arch_setup):
+    cfg, m, params = arch_setup(arch)
+    ids = jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0, cfg.vocab_size)
+    logits, cache = m.prefill(params, ids, max_len=16)
+    assert logits.shape == (B, cfg.vocab_size)
+    logits, cache = m.decode_step(params, cache,
+                                  jnp.argmax(logits, -1)[:, None].astype(jnp.int32))
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_whisper_decode():
+    cfg = get_config("whisper_tiny", reduced=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    frames = jax.random.normal(jax.random.PRNGKey(1),
+                               (B, cfg.enc_frames, cfg.d_model))
+    enc = m.encode(params, frames)
+    cache = m.init_cache(B, 16)
+    ids = jnp.zeros((B, 1), jnp.int32)
+    logits, cache = m.decode_step(params, cache, ids, enc)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_internvl_decode():
+    from repro.models.internvl import D_VIS
+    cfg = get_config("internvl2_26b", reduced=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    vis = jax.random.normal(jax.random.PRNGKey(1), (B, cfg.vis_tokens, D_VIS))
+    ids = jnp.zeros((B, 4), jnp.int32)
+    logits, cache = m.prefill(params, vis, ids, max_len=32)
+    logits, cache = m.decode_step(params, cache, jnp.zeros((B, 1), jnp.int32))
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_param_counts_in_expected_range():
+    """Full configs should land near their nameplate sizes."""
+    expect = {"starcoder2_3b": (2.5e9, 3.5e9),
+              "minitron_4b": (3.5e9, 5.0e9),
+              "h2o_danube_1_8b": (1.5e9, 2.2e9),
+              "qwen2_1_5b": (1.2e9, 2.0e9),
+              "mamba2_370m": (0.3e9, 0.5e9),
+              "zamba2_7b": (6.0e9, 8.5e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"

@@ -1,0 +1,315 @@
+"""Structural invariant tests for TDAG / CDAG / IDAG generation."""
+
+import numpy as np
+import pytest
+
+from repro.core import (AccessMode, Box, CommandType, IdagGenerator,
+                        InstructionType, Region, TaskGraph, TaskType,
+                        all_range, fixed, generate_cdag, neighborhood,
+                        one_to_one, read, read_write, write)
+from repro.core.buffer import VirtualBuffer
+from repro.core.instruction_graph import Instruction
+from repro.core.lookahead import LookaheadScheduler
+from repro.core.task_graph import DepKind
+
+
+def nbody_tdag(n=64, steps=3):
+    tdag = TaskGraph()
+    P = VirtualBuffer((n, 3), name="P", initial_value=np.zeros((n, 3)))
+    V = VirtualBuffer((n, 3), name="V", initial_value=np.zeros((n, 3)))
+    for _ in range(steps):
+        tdag.submit("timestep", (n, 3),
+                    [read(P, all_range()), read_write(V, one_to_one())])
+        tdag.submit("update", (n, 3),
+                    [read(V, one_to_one()), read_write(P, one_to_one())])
+    return tdag, P, V
+
+
+# --------------------------------------------------------------------------
+class TestTDAG:
+    def test_linear_chain_nbody(self):
+        """Paper fig. 2: all-read + 1:1 write yields a linear dep chain."""
+        tdag, P, V = nbody_tdag()
+        kts = tdag.kernel_tasks()
+        for prev, nxt in zip(kts, kts[1:]):
+            assert any(d is prev for d, _ in nxt.dependencies), \
+                f"{nxt} should depend on {prev}"
+
+    def test_dep_kinds(self):
+        tdag = TaskGraph()
+        B = VirtualBuffer((16,), name="B")
+        t1 = tdag.submit("w", (16,), [write(B, one_to_one())])
+        t2 = tdag.submit("r", (16,), [read(B, one_to_one())])
+        t3 = tdag.submit("w2", (16,), [write(B, one_to_one())])
+        assert (t1, DepKind.TRUE) in [(d, k) for d, k in t2.dependencies]
+        kinds = {k for d, k in t3.dependencies if d is t2}
+        assert DepKind.ANTI in kinds
+
+    def test_disjoint_writes_no_dep(self):
+        tdag = TaskGraph()
+        B = VirtualBuffer((16,), name="B")
+        t1 = tdag.submit("lo", (16,), [write(B, fixed(Box((0,), (8,))))])
+        t2 = tdag.submit("hi", (16,), [write(B, fixed(Box((8,), (16,))))])
+        assert all(d is not t1 for d, _ in t2.dependencies
+                   if d.ttype == TaskType.KERNEL)
+
+    def test_uninitialized_read_warning(self):
+        tdag = TaskGraph()
+        B = VirtualBuffer((8,), name="B")  # no initial value
+        tdag.submit("r", (8,), [read(B, one_to_one())])
+        assert any("uninitialized" in w for w in tdag.warnings)
+
+    def test_horizon_emission_bounds_tracking(self):
+        tdag = TaskGraph(horizon_step=4)
+        B = VirtualBuffer((8,), name="B", initial_value=np.zeros(8))
+        for i in range(20):
+            tdag.submit(f"k{i}", (8,), [read_write(B, one_to_one())])
+        horizons = [t for t in tdag.tasks if t.ttype == TaskType.HORIZON]
+        assert len(horizons) >= 3
+        # tracking structures bounded: last_writers should map to few entries
+        st = tdag._buffers[B.bid]
+        assert len(st.last_writers.entries) <= 4
+
+
+# --------------------------------------------------------------------------
+class TestCDAG:
+    def test_push_await_pairing(self):
+        tdag, P, V = nbody_tdag(n=64, steps=2)
+        gen = generate_cdag(tdag, num_nodes=2)
+        all_cmds = [c for cmds in gen.commands for c in cmds]
+        pushes = [c for c in all_cmds if c.ctype == CommandType.PUSH]
+        awaits = [c for c in all_cmds if c.ctype == CommandType.AWAIT_PUSH]
+        assert pushes and awaits
+        # every push region is covered by its peer's awaited region
+        for p in pushes:
+            match = [a for a in awaits if a.transfer_id == p.transfer_id
+                     and a.node == p.target]
+            assert match, f"push {p} has no matching await"
+            assert match[0].region.contains(p.region)
+
+    def test_push_knows_target_await_knows_union_only(self):
+        tdag, P, V = nbody_tdag(n=64, steps=2)
+        gen = generate_cdag(tdag, num_nodes=4)
+        for cmds in gen.commands:
+            for c in cmds:
+                if c.ctype == CommandType.PUSH:
+                    assert c.target is not None and c.region is not None
+                if c.ctype == CommandType.AWAIT_PUSH:
+                    assert c.target is None  # senders unknown (paper §3.4)
+
+    def test_overlapping_write_detection(self):
+        tdag = TaskGraph()
+        B = VirtualBuffer((16,), name="B")
+        tdag.submit("bad", (16,), [write(B, all_range())])  # every node writes all
+        gen = generate_cdag(tdag, num_nodes=2)
+        assert any("overlapping write" in e for e in gen.errors)
+
+    def test_no_self_push(self):
+        tdag, P, V = nbody_tdag()
+        gen = generate_cdag(tdag, num_nodes=2)
+        for cmds in gen.commands:
+            for c in cmds:
+                if c.ctype == CommandType.PUSH:
+                    assert c.target != c.node
+
+
+# --------------------------------------------------------------------------
+def compile_idag(tdag, num_nodes, num_devices, node=0, lookahead=False):
+    gen = generate_cdag(tdag, num_nodes)
+    idag = IdagGenerator(node, num_devices)
+    la = LookaheadScheduler(idag, enabled=lookahead)
+    for cmd in gen.commands[node]:
+        if cmd.ctype == CommandType.EPOCH and cmd.task is None:
+            continue
+        la.push(cmd)
+    la.flush()
+    return idag
+
+
+class TestIDAG:
+    def test_topological_emission_order(self):
+        tdag, P, V = nbody_tdag()
+        idag = compile_idag(tdag, 2, 2)
+        pos = {i.iid: k for k, i in enumerate(idag.instructions)}
+        for instr in idag.instructions:
+            for dep, _ in instr.dependencies:
+                assert pos[dep.iid] < pos[instr.iid], \
+                    f"{instr} emitted before its dependency {dep}"
+
+    def test_acyclic(self):
+        tdag, P, V = nbody_tdag()
+        idag = compile_idag(tdag, 2, 2)
+        seen, done = set(), set()
+
+        def visit(i):
+            assert i.iid not in seen or i.iid in done, "cycle detected"
+            if i.iid in done:
+                return
+            seen.add(i.iid)
+            for d, _ in i.dependencies:
+                visit(d)
+            done.add(i.iid)
+
+        for i in idag.instructions:
+            visit(i)
+
+    def test_backing_allocations_disjoint(self):
+        """Paper §3.2: backing allocations per (buffer, memory) never overlap."""
+        tdag = TaskGraph()
+        B = VirtualBuffer((64,), name="B", initial_value=np.zeros(64))
+        tdag.submit("a", (16,), [read_write(B, one_to_one())])
+        tdag.submit("b", (64,), [read_write(B, one_to_one())])   # forces resize
+        tdag.submit("c", (32,), [read_write(B, neighborhood((4,)))])
+        idag = compile_idag(tdag, 1, 2)
+        for (bid, mid), allocs in idag._allocs.items():
+            live = [a for a in allocs if a.live]
+            for i, a in enumerate(live):
+                for b in live[i + 1:]:
+                    assert not a.box.overlaps(b.box), \
+                        f"live allocations overlap: {a} vs {b}"
+
+    def test_accessor_contiguous_backing(self):
+        """Every kernel accessor is backed by ONE allocation containing its region."""
+        tdag, P, V = nbody_tdag()
+        idag = compile_idag(tdag, 2, 2)
+        for instr in idag.instructions:
+            if instr.itype != InstructionType.DEVICE_KERNEL:
+                continue
+            for b in instr.bindings:
+                assert b.allocation.box.contains(b.region.bounding_box())
+
+    def test_device_kernels_per_device(self):
+        """§3.1 hierarchical split: one kernel instr per local device."""
+        tdag, P, V = nbody_tdag(steps=1)
+        idag = compile_idag(tdag, 2, 4)
+        per_task = {}
+        for i in idag.instructions:
+            if i.itype == InstructionType.DEVICE_KERNEL:
+                per_task.setdefault(i.name, set()).add(i.device)
+        assert per_task["timestep"] == {0, 1, 2, 3}
+
+    def test_resize_chain_alloc_copy_free(self):
+        """Fig. 3: growing access emits alloc -> copy(live) -> free(old)."""
+        tdag = TaskGraph()
+        B = VirtualBuffer((64,), name="B")
+        tdag.submit("w", (32,), [write(B, one_to_one())])
+        tdag.submit("r", (64,), [read_write(B, one_to_one())])
+        idag = compile_idag(tdag, 1, 1)
+        kinds = [i.itype for i in idag.instructions]
+        assert kinds.count(InstructionType.ALLOC) >= 2
+        assert InstructionType.FREE in kinds
+        frees = [i for i in idag.instructions if i.itype == InstructionType.FREE]
+        # the freed allocation's live data must have been copied out first
+        copies = [i for i in idag.instructions if i.itype == InstructionType.COPY]
+        assert any(c.src_alloc is frees[0].allocation for c in copies)
+
+    def test_no_downsize(self):
+        """§3.2: allocations never shrink."""
+        tdag = TaskGraph()
+        B = VirtualBuffer((64,), name="B")
+        tdag.submit("big", (64,), [write(B, one_to_one())])
+        tdag.submit("small", (8,), [read_write(B, one_to_one())])
+        idag = compile_idag(tdag, 1, 1)
+        allocs = [i for i in idag.instructions if i.itype == InstructionType.ALLOC]
+        assert len(allocs) == 1  # the small access reuses the big allocation
+
+    def test_producer_split_copies(self):
+        """§3.3: one coherence copy per (producer, consumer) pairing."""
+        tdag = TaskGraph()
+        B = VirtualBuffer((64,), name="B")
+        # two producers write halves on devices; then one consumer reads all
+        tdag.submit("w", (64,), [write(B, one_to_one())])
+        tdag.submit("r", (64,), [read(B, all_range()),
+                                 write(VirtualBuffer((64,), name="O"), one_to_one())])
+        idag = compile_idag(tdag, 1, 2)
+        copies = [i for i in idag.instructions if i.itype == InstructionType.COPY]
+        # D0 wrote [0,32), D1 wrote [32,64); making all of B coherent on both
+        # devices needs one d2d copy per (producer half, consumer device)
+        d2d = [c for c in copies if c.src_alloc.mid >= 2 and c.dst_alloc.mid >= 2
+               and c.src_alloc.mid != c.dst_alloc.mid]
+        assert len(d2d) == 2
+
+    def test_send_has_pilot(self):
+        tdag, P, V = nbody_tdag(steps=2)
+        idag = compile_idag(tdag, 2, 1)
+        sends = [i for i in idag.instructions if i.itype == InstructionType.SEND]
+        assert sends
+        pilot_ids = {p.msg_id for p in idag.pilots}
+        for s in sends:
+            assert s.msg_id in pilot_ids
+
+    def test_split_receive_for_multiple_consumers(self):
+        """§3.4: await-push consumed in parts by 2 devices -> split receive."""
+        tdag = TaskGraph()
+        B = VirtualBuffer((64,), name="B")
+        tdag.submit("w", (64,), [write(B, one_to_one())])
+        # second task reads one-to-one => each device consumes its own half
+        # of the remote part => consumer split applies on the *remote* node
+        tdag.submit("r2", (64,), [read(B, fixed(Box((0,), (64,)))),
+                                  write(VirtualBuffer((64,), name="O2"), one_to_one())],
+                    split_dims=(0,))
+        # node 1's await-push of [0,32) is consumed by its two devices in parts
+        idag = compile_idag(tdag, 2, 2, node=1)
+        types = [i.itype for i in idag.instructions]
+        assert (InstructionType.SPLIT_RECEIVE in types
+                or InstructionType.RECEIVE in types)
+
+    def test_horizon_prunes_producers(self):
+        tdag = TaskGraph(horizon_step=2)
+        B = VirtualBuffer((16,), name="B", initial_value=np.zeros(16))
+        for i in range(12):
+            tdag.submit(f"k{i}", (16,), [read_write(B, one_to_one())])
+        idag = compile_idag(tdag, 1, 1)
+        for ms in idag._mem.values():
+            assert len(ms.producers.entries) <= 3
+
+
+# --------------------------------------------------------------------------
+class TestLookahead:
+    def _growing_tdag(self, T=10, W=16):
+        from repro.core import rows_upto
+        tdag = TaskGraph()
+        B = VirtualBuffer((T, W), name="R", initial_value=np.zeros((T, W)))
+        for t in range(T):
+            tdag.submit(
+                f"rad{t}", (1, W),
+                [read(B, fixed(Box((0, 0), (max(t, 1), W)))),
+                 write(B, fixed(Box((t, 0), (t + 1, W))))])
+        return tdag
+
+    def test_resize_elision(self):
+        tdag = self._growing_tdag()
+        idag_on = compile_idag(tdag, 1, 1, lookahead=True)
+        tdag2 = self._growing_tdag()
+        idag_off = compile_idag(tdag2, 1, 1, lookahead=False)
+        n_alloc_on = sum(1 for i in idag_on.instructions
+                         if i.itype == InstructionType.ALLOC)
+        n_alloc_off = sum(1 for i in idag_off.instructions
+                          if i.itype == InstructionType.ALLOC)
+        n_free_on = sum(1 for i in idag_on.instructions
+                        if i.itype == InstructionType.FREE)
+        assert n_alloc_on == 1 and n_free_on == 0
+        assert n_alloc_off > 3  # resize storm without lookahead
+
+    def test_steady_state_passthrough(self):
+        """Stable access patterns must not be queued (no added latency)."""
+        tdag = TaskGraph()
+        B = VirtualBuffer((32,), name="B", initial_value=np.zeros(32))
+        idag = IdagGenerator(0, 1)
+        la = LookaheadScheduler(idag, enabled=True)
+        gen = generate_cdag(tdag, 1)
+        for i in range(20):
+            tdag.submit(f"k{i}", (32,), [read_write(B, one_to_one())])
+        n_immediate = 0
+        for task in tdag.tasks:
+            if task.name == "init":
+                continue
+            for cmd in gen.process(task):
+                out = la.push(cmd)
+                if out and not la.queue:
+                    n_immediate += 1
+        # after the first allocating window flushes, the rest pass through
+        assert la.stats.flushes <= 2
+        # after the allocation window flushes at the 2nd horizon, the
+        # remaining steady-state commands pass straight through
+        assert n_immediate >= 5

@@ -1,0 +1,116 @@
+"""Pallas kernel validation: shape/dtype sweeps in interpret=True against the
+pure-jnp oracles in kernels/ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.nbody import nbody_forces_tpu
+from repro.kernels.ssd_scan import ssd_scan_tpu
+from repro.kernels.stencil5 import wave_step_tpu
+from repro.models.mamba2 import ssd_chunked
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+           dict(atol=2e-5, rtol=2e-5)
+
+
+# -- flash attention ----------------------------------------------------------
+@pytest.mark.parametrize("S,T,K,G,hd", [
+    (64, 64, 2, 3, 32), (128, 128, 1, 4, 64), (48, 96, 2, 1, 16),
+    (256, 256, 4, 2, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 32),
+                                           (False, None)])
+def test_flash_attention(S, T, K, G, hd, dtype, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, S, K, G, hd), dtype)
+    k = jax.random.normal(ks[1], (B, T, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, T, K, hd), dtype)
+    out = flash_attention_tpu(q, k, v, causal=causal, window=window,
+                              q_block=32, kv_block=32, interpret=True)
+    exp = ref.flash_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                                  v.astype(jnp.float32), causal=causal,
+                                  window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(exp),
+                               **tol(dtype))
+
+
+def test_flash_attention_decode_offset():
+    """q_offset supports decode-style partial queries."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S0, S1, K, G, hd = 1, 48, 16, 2, 2, 32
+    q_full = jax.random.normal(ks[0], (B, S0 + S1, K, G, hd))
+    k = jax.random.normal(ks[1], (B, S0 + S1, K, hd))
+    v = jax.random.normal(ks[2], (B, S0 + S1, K, hd))
+    full = ref.flash_attention_ref(q_full, k, v, causal=True)
+    part = flash_attention_tpu(q_full[:, S0:], k, v, causal=True,
+                               q_block=16, kv_block=16, interpret=True,
+                               q_offset=S0)
+    np.testing.assert_allclose(np.asarray(part), np.asarray(full[:, S0:]),
+                               atol=2e-5)
+
+
+# -- nbody ----------------------------------------------------------------------
+@pytest.mark.parametrize("N,tile", [(64, 32), (100, 32), (256, 128), (33, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_nbody(N, tile, dtype):
+    p = jax.random.normal(jax.random.PRNGKey(0), (N, 3), dtype)
+    out = nbody_forces_tpu(p, tile_i=tile, tile_j=tile, interpret=True)
+    exp = ref.nbody_forces_ref(p, p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- stencil ----------------------------------------------------------------------
+@pytest.mark.parametrize("H,W,tile", [(64, 32, 16), (100, 24, 32), (32, 16, 32)])
+def test_wave_step(H, W, tile):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    um = jax.random.normal(k1, (H, W))
+    u = jax.random.normal(k2, (H, W))
+    out = wave_step_tpu(um, u, tile=tile, interpret=True)
+    exp = ref.wave_step_ref(um, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- ssd ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,chunk,h,p,n", [
+    (64, 16, 2, 8, 4), (128, 64, 4, 64, 16), (96, 32, 1, 16, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_ssd_scan(s, chunk, h, p, n, dtype):
+    b = 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    a = -jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    B = jax.random.normal(ks[2], (b, s, n), dtype)
+    C = jax.random.normal(ks[3], (b, s, n), dtype)
+    y, st = ssd_scan_tpu(x, a, B, C, chunk=chunk, interpret=True)
+    ye, ste = ssd_chunked(x, a, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(ste),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunk_ref_single():
+    """kernels/ref.ssd_chunk_ref matches the models-level chunked scan."""
+    q, h, p, n = 32, 2, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = jax.random.normal(ks[0], (1, q, h, p))
+    a = -jax.nn.softplus(jax.random.normal(ks[1], (1, q, h)))
+    B = jax.random.normal(ks[2], (1, q, n))
+    C = jax.random.normal(ks[3], (1, q, n))
+    y_ref, st_ref = ref.ssd_chunk_ref(x[0], a[0], B[0], C[0])
+    y_full, st_full = ssd_chunked(x, a, B, C, q)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_full[0]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_ref), np.asarray(st_full[0]),
+                               rtol=1e-4, atol=1e-4)

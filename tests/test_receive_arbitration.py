@@ -1,0 +1,153 @@
+"""Receive-arbitration unit tests — paper §3.4's three inbound geometries.
+
+An await-push only knows the UNION of regions that will arrive; the sender
+geometry becomes known at execution time via pilots/payloads.  The arbiter
+must complete a split-receive's await-receive children:
+
+  a) senders transmit exactly the consumer-split geometry (ideal overlap);
+  b) a single sender satisfies the whole region at once;
+  c) senders transmit a geometry ORTHOGONAL to the consumer split.
+"""
+
+import numpy as np
+
+from repro.core import Box, Region
+from repro.core.allocation import Allocation, PINNED_HOST
+from repro.core.communicator import Communicator, Payload, ReceiveArbiter
+from repro.core.instruction_graph import Instruction, InstructionType
+
+
+def make_split_receive(alloc, tid, union_box, consumer_boxes):
+    split = Instruction(InstructionType.SPLIT_RECEIVE, node=0,
+                        transfer_id=tid,
+                        recv_region=Region.from_box(union_box),
+                        recv_alloc=alloc)
+    awaits = []
+    for cb in consumer_boxes:
+        aw = Instruction(InstructionType.AWAIT_RECEIVE, node=0,
+                         transfer_id=tid, recv_region=Region.from_box(cb),
+                         recv_alloc=alloc, split_parent=split)
+        awaits.append(aw)
+    return split, awaits
+
+
+def setup(union_box):
+    comm = Communicator(2)
+    store = {}
+    alloc = Allocation(mid=PINNED_HOST, bid=0, box=union_box)
+    store[alloc.aid] = np.full(union_box.shape, -1.0)
+    arb = ReceiveArbiter(0, comm, store)
+    return comm, store, alloc, arb
+
+
+def drain(arb):
+    done = []
+    arb.step(done)
+    return done
+
+
+def test_case_a_matching_geometry():
+    """Two senders transmit exactly the two consumer halves; each await
+    completes as soon as ITS half lands (early compute start)."""
+    union = Box((0,), (8,))
+    comm, store, alloc, arb = setup(union)
+    tid = (1, 0)
+    split, (aw0, aw1) = make_split_receive(
+        alloc, tid, union, [Box((0,), (4,)), Box((4,), (8,))])
+    for i in (split, aw0, aw1):
+        i.state = "issued"
+        arb.begin(i)
+    # first half lands -> only aw0 completes
+    comm.isend(0, Payload(1, 0, tid, Box((0,), (4,)), np.arange(4.0)))
+    done = drain(arb)
+    assert aw0 in done and aw1 not in done
+    np.testing.assert_array_equal(store[alloc.aid][:4], np.arange(4.0))
+    # second half -> split + aw1 complete
+    comm.isend(0, Payload(1, 1, tid, Box((4,), (8,)), np.arange(4.0) + 10))
+    done = drain(arb)
+    assert aw1 in done and split in done
+
+
+def test_case_b_single_sender_whole_region():
+    """One payload covers the union: all awaits complete together."""
+    union = Box((0,), (8,))
+    comm, store, alloc, arb = setup(union)
+    tid = (2, 0)
+    split, (aw0, aw1) = make_split_receive(
+        alloc, tid, union, [Box((0,), (4,)), Box((4,), (8,))])
+    for i in (split, aw0, aw1):
+        i.state = "issued"
+        arb.begin(i)
+    comm.isend(0, Payload(1, 0, tid, union, np.arange(8.0)))
+    done = drain(arb)
+    assert {aw0, aw1, split} <= set(done)
+    np.testing.assert_array_equal(store[alloc.aid], np.arange(8.0))
+
+
+def test_case_c_orthogonal_geometry():
+    """2-D: consumers split by rows, senders split by columns.  Each await
+    completes only once BOTH column payloads covering its rows landed."""
+    union = Box((0, 0), (4, 4))
+    comm, store, alloc, arb = setup(union)
+    tid = (3, 0)
+    split, (aw_top, aw_bot) = make_split_receive(
+        alloc, tid, union, [Box((0, 0), (2, 4)), Box((2, 0), (4, 4))])
+    for i in (split, aw_top, aw_bot):
+        i.state = "issued"
+        arb.begin(i)
+    # left column block arrives: covers rows 0..4 x cols 0..2 — neither
+    # row-consumer is fully covered yet
+    left = np.ones((4, 2))
+    comm.isend(0, Payload(1, 0, tid, Box((0, 0), (4, 2)), left))
+    done = drain(arb)
+    assert aw_top not in done and aw_bot not in done
+    # right column block arrives: both awaits now covered
+    right = np.full((4, 2), 2.0)
+    comm.isend(0, Payload(1, 1, tid, Box((0, 2), (4, 4)), right))
+    done = drain(arb)
+    assert aw_top in done and aw_bot in done and split in done
+    np.testing.assert_array_equal(store[alloc.aid][:, :2], left)
+    np.testing.assert_array_equal(store[alloc.aid][:, 2:], right)
+
+
+def test_payload_before_receive_posted():
+    """Eager senders: the payload arrives BEFORE the receive instruction is
+    issued (buffered as 'early', landed on begin)."""
+    union = Box((0,), (4,))
+    comm, store, alloc, arb = setup(union)
+    tid = (4, 0)
+    comm.isend(0, Payload(1, 0, tid, union, np.arange(4.0)))
+    drain(arb)                       # nothing pending yet
+    recv = Instruction(InstructionType.RECEIVE, node=0, transfer_id=tid,
+                       recv_region=Region.from_box(union), recv_alloc=alloc)
+    recv.state = "issued"
+    arb.begin(recv)
+    done = drain(arb)
+    assert recv in done
+    np.testing.assert_array_equal(store[alloc.aid], np.arange(4.0))
+
+
+def test_interleaved_transfers_do_not_cross():
+    """Two concurrent transfer ids never land into each other's buffers."""
+    union = Box((0,), (4,))
+    comm = Communicator(2)
+    store = {}
+    a1 = Allocation(mid=PINNED_HOST, bid=0, box=union)
+    a2 = Allocation(mid=PINNED_HOST, bid=1, box=union)
+    store[a1.aid] = np.zeros(4)
+    store[a2.aid] = np.zeros(4)
+    arb = ReceiveArbiter(0, comm, store)
+    r1 = Instruction(InstructionType.RECEIVE, node=0, transfer_id=(5, 0),
+                     recv_region=Region.from_box(union), recv_alloc=a1)
+    r2 = Instruction(InstructionType.RECEIVE, node=0, transfer_id=(6, 1),
+                     recv_region=Region.from_box(union), recv_alloc=a2)
+    for r in (r1, r2):
+        r.state = "issued"
+        arb.begin(r)
+    comm.isend(0, Payload(1, 0, (6, 1), union, np.full(4, 2.0)))
+    comm.isend(0, Payload(1, 1, (5, 0), union, np.full(4, 1.0)))
+    done = []
+    arb.step(done)
+    assert {r1, r2} == set(done)
+    np.testing.assert_array_equal(store[a1.aid], np.full(4, 1.0))
+    np.testing.assert_array_equal(store[a2.aid], np.full(4, 2.0))

@@ -1,0 +1,122 @@
+"""Property tests for the region algebra against a brute-force bitmap oracle.
+
+Every scheduler layer is built on this algebra, so it must be exact.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.region import Box, Region, RegionMap, split_box
+
+BOUND = 12
+
+
+def boxes(rank: int):
+    def mk(lo_hi):
+        lo = tuple(min(a, b) for a, b in lo_hi)
+        hi = tuple(max(a, b) for a, b in lo_hi)
+        return Box(lo, hi)
+    coord = st.integers(0, BOUND)
+    return st.lists(st.tuples(coord, coord), min_size=rank, max_size=rank).map(mk)
+
+
+def regions(rank: int):
+    return st.lists(boxes(rank), min_size=0, max_size=4).map(Region)
+
+
+def bitmap(r: Region, rank: int) -> np.ndarray:
+    grid = np.zeros((BOUND,) * rank, dtype=bool)
+    for b in r.boxes:
+        sl = tuple(slice(max(0, a), min(BOUND, c)) for a, c in zip(b.min, b.max))
+        grid[sl] = True
+    return grid
+
+
+@pytest.mark.parametrize("rank", [1, 2, 3])
+class TestRegionAlgebra:
+    @settings(max_examples=120, deadline=None)
+    @given(data=st.data())
+    def test_union(self, rank, data):
+        a, b = data.draw(regions(rank)), data.draw(regions(rank))
+        assert np.array_equal(bitmap(a.union(b), rank),
+                              bitmap(a, rank) | bitmap(b, rank))
+
+    @settings(max_examples=120, deadline=None)
+    @given(data=st.data())
+    def test_intersect(self, rank, data):
+        a, b = data.draw(regions(rank)), data.draw(regions(rank))
+        assert np.array_equal(bitmap(a.intersect(b), rank),
+                              bitmap(a, rank) & bitmap(b, rank))
+
+    @settings(max_examples=120, deadline=None)
+    @given(data=st.data())
+    def test_difference(self, rank, data):
+        a, b = data.draw(regions(rank)), data.draw(regions(rank))
+        assert np.array_equal(bitmap(a.difference(b), rank),
+                              bitmap(a, rank) & ~bitmap(b, rank))
+
+    @settings(max_examples=80, deadline=None)
+    @given(data=st.data())
+    def test_boxes_disjoint_and_volume(self, rank, data):
+        a = data.draw(regions(rank))
+        # normalized boxes must be pairwise disjoint
+        for i, x in enumerate(a.boxes):
+            for y in a.boxes[i + 1:]:
+                assert not x.overlaps(y)
+        assert a.volume() == int(bitmap(a, rank).sum())
+
+    @settings(max_examples=80, deadline=None)
+    @given(data=st.data())
+    def test_contains_equiv(self, rank, data):
+        a, b = data.draw(regions(rank)), data.draw(regions(rank))
+        assert a.contains(b) == bool((bitmap(b, rank) & ~bitmap(a, rank)).sum() == 0)
+
+    @settings(max_examples=80, deadline=None)
+    @given(data=st.data())
+    def test_eq_is_set_eq(self, rank, data):
+        a, b = data.draw(regions(rank)), data.draw(regions(rank))
+        assert (a == b) == np.array_equal(bitmap(a, rank), bitmap(b, rank))
+
+
+@settings(max_examples=100, deadline=None)
+@given(data=st.data())
+def test_region_map_last_writer_semantics(data):
+    """RegionMap.update must behave like painting on a grid."""
+    bounds = Box((0, 0), (BOUND, BOUND))
+    rm = RegionMap(bounds, default=0)
+    grid = np.zeros((BOUND, BOUND), dtype=int)
+    for val in range(1, data.draw(st.integers(1, 6)) + 1):
+        r = data.draw(regions(2))
+        rm.update(r, val)
+        grid[bitmap(r, 2)] = val
+    for sub, v in rm.query(Region.from_box(bounds)):
+        for b in sub.boxes:
+            sl = tuple(slice(a, c) for a, c in zip(b.min, b.max))
+            assert (grid[sl] == v).all(), f"value mismatch in {b}"
+    # disjointness of entries
+    seen = Region.empty()
+    for r, _ in rm.entries:
+        assert not seen.overlaps(r)
+        seen = seen.union(r)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 16), st.integers(1, 4))
+def test_split_box_partition(extent, chunks, gran):
+    box = Box((0, 0), (extent, 5))
+    parts = split_box(box, chunks, dims=(0,), granularity=(gran,))
+    # exact partition
+    assert Region(parts) == Region.from_box(box)
+    assert sum(p.volume() for p in parts) == box.volume()
+    assert len(parts) <= chunks
+    # all but the last chunk aligned to granularity
+    for p in parts[:-1]:
+        assert (p.max[0] - p.min[0]) % gran == 0
+
+
+def test_split_box_2d():
+    box = Box((0, 0), (8, 8))
+    parts = split_box(box, 4, dims=(0, 1))
+    assert Region(parts) == Region.from_box(box)
+    assert len(parts) == 4
