@@ -20,15 +20,20 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 
 @dataclass
 class WorkItem:
-    fn: Callable[[], None]
+    """One unit of backend work: ``fn(tag)`` is invoked on the lane thread.
+
+    Passing the tag (typically the Instruction) as the argument lets the
+    executor submit bound methods directly instead of allocating a closure
+    per instruction on the issue fast path.
+    """
+    fn: Callable[[object], None]
     tag: object = None                     # typically the Instruction
-    submitted_at: float = field(default_factory=time.perf_counter)
 
 
 class CompletionSink:
@@ -42,12 +47,16 @@ class CompletionSink:
     def push(self, tag: object, err: Optional[BaseException], latency: float) -> None:
         with self._lock:
             self._done.append((tag, err, latency))
-        self.event.set()
+        if not self.event.is_set():
+            self.event.set()
 
     def drain(self) -> list[tuple[object, Optional[BaseException], float]]:
+        # clear BEFORE swapping: a push racing with the swap leaves the event
+        # set for the next loop iteration instead of being lost (the executor
+        # blocks on this event, so a lost wake-up would stall a full timeout)
+        self.event.clear()
         with self._lock:
             out, self._done = self._done, []
-        self.event.clear()
         return out
 
 
@@ -81,7 +90,7 @@ class InOrderQueue:
             err: Optional[BaseException] = None
             t0 = time.perf_counter()
             try:
-                item.fn()
+                item.fn(item.tag)
             except BaseException as e:  # noqa: BLE001 — reported to executor
                 err = e
             with self._lock:
@@ -118,7 +127,7 @@ class HostPool:
             err: Optional[BaseException] = None
             t0 = time.perf_counter()
             try:
-                item.fn()
+                item.fn(item.tag)
             except BaseException as e:  # noqa: BLE001
                 err = e
             self.sink.push(item.tag, err, time.perf_counter() - t0)

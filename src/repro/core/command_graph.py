@@ -83,6 +83,7 @@ class CommandGraphGenerator:
         self._init_epochs: list[Command] = []
         self._last_horizon: list[Optional[Command]] = [None] * num_nodes
         self._last_epoch: list[Optional[Command]] = [None] * num_nodes
+        self._frontier_pos: list[int] = [0] * num_nodes  # last sync cmd index
         self.errors: list[str] = []
         for n in range(num_nodes):
             epoch = Command(CommandType.EPOCH, node=n, task=None)
@@ -122,10 +123,13 @@ class CommandGraphGenerator:
         out = []
         for n in range(self.num_nodes):
             cmd = Command(ctype, node=n, task=task)
-            for c in self.commands[n]:
+            # commands before the previous sync already have a dependent
+            # (that sync): only the tail can contribute to the frontier
+            for c in self.commands[n][self._frontier_pos[n]:]:
                 if not c.dependents:
                     cmd.add_dependency(c, DepKind.SYNC)
             self.commands[n].append(cmd)
+            self._frontier_pos[n] = len(self.commands[n]) - 1
             if ctype == CommandType.HORIZON:
                 self._last_horizon[n] = cmd
             else:

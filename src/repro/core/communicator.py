@@ -43,14 +43,29 @@ class Communicator:
         self._cv = threading.Condition(self._lock)
         self.pilot_box: list[list[Pilot]] = [[] for _ in range(num_nodes)]
         self.payload_box: list[list[Payload]] = [[] for _ in range(num_nodes)]
+        self._listeners: list[list[threading.Event]] = [[] for _ in range(num_nodes)]
         self.bytes_sent = 0
         self.num_messages = 0
+
+    def add_listener(self, node: int, event: threading.Event) -> None:
+        """Register an event set whenever traffic arrives for ``node``.
+
+        Lets the executor block on its completion-sink event instead of
+        polling the mailbox for inbound pilots/payloads.
+        """
+        with self._cv:
+            self._listeners[node].append(event)
+
+    def _notify(self, node: int) -> None:
+        for ev in self._listeners[node]:
+            ev.set()
 
     # -- sender side -------------------------------------------------------
     def post_pilot(self, pilot: Pilot) -> None:
         with self._cv:
             self.pilot_box[pilot.target].append(pilot)
             self._cv.notify_all()
+            self._notify(pilot.target)
 
     def isend(self, target: int, payload: Payload) -> None:
         with self._cv:
@@ -58,6 +73,7 @@ class Communicator:
             self.bytes_sent += payload.data.nbytes
             self.num_messages += 1
             self._cv.notify_all()
+            self._notify(target)
 
     # -- receiver side -----------------------------------------------------
     def poll(self, node: int) -> tuple[list[Pilot], list[Payload]]:
@@ -94,6 +110,11 @@ class ReceiveArbiter:
         self.pending: dict[tuple[int, int], list[_PendingReceive]] = defaultdict(list)
         self.early_payloads: dict[tuple[int, int], list[Payload]] = defaultdict(list)
         self.received: dict[tuple[int, int], Region] = defaultdict(Region.empty)
+
+    def has_pending(self) -> bool:
+        """Whether any receive is in flight (executor gates polling on this)."""
+        return (any(self.pending.values())
+                or any(self.early_payloads.values()))
 
     def begin(self, instr: Instruction) -> None:
         if instr.itype in (InstructionType.RECEIVE, InstructionType.SPLIT_RECEIVE):

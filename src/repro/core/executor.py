@@ -19,7 +19,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from typing import Callable, Optional
+from typing import Optional
 
 import numpy as np
 
@@ -119,7 +119,18 @@ class BufferView:
 
 
 class Executor:
-    """Per-node executor thread harboring the out-of-order engine."""
+    """Per-node executor thread harboring the out-of-order engine.
+
+    The engine is a *dependency-counter ready queue*: an instruction moves to
+    the ready deque exactly when its unmet-dependency counter hits zero, and
+    eager-issue candidates are re-examined only when one of their
+    dependencies is issued on a device queue or completes — there is no
+    per-iteration rescan of a waiting list.  All wake-up sources (backend
+    completions, scheduler submissions, inbound communicator traffic) set the
+    completion-sink event, so the main loop blocks instead of polling.
+    Completed instructions are retired when a later horizon/epoch completes,
+    bounding tracking-structure memory on long runs (§3.5).
+    """
 
     def __init__(self, node: int, num_devices: int, comm: Communicator,
                  *, queues_per_device: int = 2, host_threads: int = 4,
@@ -138,15 +149,34 @@ class Executor:
         self._inbox_lock = threading.Lock()
         self._registered: dict[int, Instruction] = {}
         self._remaining: dict[int, int] = {}          # iid -> unmet dep count
-        self._waiting: list[Instruction] = []         # registered, not issued
+        self._ready: deque[Instruction] = deque()     # counter hit zero
+        self._blocked: dict[int, Instruction] = {}    # unmet deps remain
+        self._recheck: deque[Instruction] = deque()   # eager-issue candidates
+        self._retire_log: deque[Instruction] = deque()  # registration order
+        self._peak_registered = 0
+        self._retired_count = 0
         self._issued_on: dict[int, InOrderQueue] = {} # iid -> queue (devices)
         self._completed_epochs: set[int] = set()      # command ids of epochs
+        self.horizons_done = 0                        # completed sync instrs
+        self.horizon_event = threading.Event()        # set on each completion
         self._epoch_cv = threading.Condition()
         self._done_count = 0
-        self._issue_latency: list[float] = []         # per-instr selection lat.
+        # ready->submitted dispatch latency; bounded so the stat itself does
+        # not grow with program length (retirement bounds everything else)
+        self._issue_latency: deque[float] = deque(maxlen=65536)
         self._queue_latency_ewma: dict[str, float] = {}
+        self._qname_cache: dict[tuple, str] = {}
+        self._dispatch = {
+            InstructionType.ALLOC: self._exec_alloc,
+            InstructionType.FREE: self._exec_free,
+            InstructionType.COPY: self._exec_copy,
+            InstructionType.SEND: self._exec_send,
+            InstructionType.DEVICE_KERNEL: self._exec_kernel,
+            InstructionType.HOST_TASK: self._exec_kernel,
+        }
         self._stop = False
         self._drained = threading.Event()
+        comm.add_listener(node, self.backend.sink.event)
         self._thread = threading.Thread(target=self._run, name=f"exec-N{node}",
                                         daemon=True)
         self._thread.start()
@@ -186,30 +216,36 @@ class Executor:
             for instr in fresh:
                 self._register(instr)
                 progressed = True
-            # 2. try to issue waiting instructions (direct or eager)
-            if self._try_issue_all():
-                progressed = True
-            # 3. drain backend completions
+            # 2. drain backend completions (unblocks ready/eager candidates)
             for tag, err, lat in self.backend.sink.drain():
                 if err is not None:
                     self.errors.append(err)
                 self._mark_done(tag, lat)
                 progressed = True
-            # 4. poll receive arbitration
-            completions.clear()
-            self.arbiter.step(completions)
-            for instr in completions:
-                self._mark_done(instr, 0.0)
+            # 3. receive arbitration (woken by communicator listener); only
+            # touch the mailbox locks when receives are in flight or inbound
+            # traffic is visible
+            if (self.arbiter.has_pending()
+                    or self.comm.payload_box[self.node]
+                    or self.comm.pilot_box[self.node]):
+                completions.clear()
+                self.arbiter.step(completions)
+                for instr in completions:
+                    self._mark_done(instr, 0.0)
+                    progressed = True
+            # 4. issue everything that became ready or eager-eligible
+            if self._drain_ready():
                 progressed = True
-            if self._stop and not self._waiting and not fresh:
+            if self._stop and not self._ready and not self._blocked and not fresh:
                 with self._inbox_lock:
                     empty = not self._inbox
                 if empty:
                     self._drained.set()
                     return
             if not progressed:
-                self.backend.sink.event.wait(0.0002)
-                self.backend.sink.event.clear()
+                # every wake source (sink completions, submit, communicator
+                # listener) sets this event; drain() clears it pre-swap
+                self.backend.sink.event.wait(0.05)
 
     # -- registration and issue ----------------------------------------------
     def _register(self, instr: Instruction) -> None:
@@ -218,27 +254,35 @@ class Executor:
             if dep.state != "done":
                 unmet += 1
         self._registered[instr.iid] = instr
+        if len(self._registered) > self._peak_registered:
+            self._peak_registered = len(self._registered)
+        self._retire_log.append(instr)
         self._remaining[instr.iid] = unmet
-        self._waiting.append(instr)
+        if unmet == 0:
+            instr._ready_t = time.perf_counter()
+            self._ready.append(instr)
+        else:
+            self._blocked[instr.iid] = instr
+            self._recheck.append(instr)     # deps may already sit on one queue
 
-    def _try_issue_all(self) -> bool:
+    def _drain_ready(self) -> bool:
+        """Issue all ready instructions and cascade eager-issue candidates."""
         issued_any = False
-        still: list[Instruction] = []
-        for instr in self._waiting:
-            t0 = time.perf_counter()
-            if self._remaining.get(instr.iid, 0) == 0:
+        while self._ready or self._recheck:
+            while self._ready:
+                instr = self._ready.popleft()
                 self._issue(instr)                       # direct issue
                 issued_any = True
-            else:
+            if self._recheck:
+                instr = self._recheck.popleft()
+                if instr.iid not in self._blocked:
+                    continue
                 eager_q = self._eager_queue(instr)
                 if eager_q is not None:
+                    del self._blocked[instr.iid]
+                    instr._ready_t = time.perf_counter()
                     self._issue(instr, queue=eager_q)    # eager issue
                     issued_any = True
-                else:
-                    still.append(instr)
-                    continue
-            self._issue_latency.append(time.perf_counter() - t0)
-        self._waiting = still
         return issued_any
 
     def _eager_queue(self, instr: Instruction) -> Optional[InOrderQueue]:
@@ -267,6 +311,7 @@ class Executor:
     # -- issue routing ---------------------------------------------------------
     def _issue(self, instr: Instruction, queue: Optional[InOrderQueue] = None) -> None:
         instr.state = "issued"
+        self._issue_latency.append(time.perf_counter() - instr._ready_t)
         if self.tracer is not None:
             self.tracer.issue(self.node, instr)
         it = instr.itype
@@ -277,12 +322,16 @@ class Executor:
         if it in (InstructionType.HORIZON, InstructionType.EPOCH):
             self._mark_done(instr, 0.0)     # pure graph-sync: complete inline
             return
-        fn = self._executable(instr)
-        item = WorkItem(fn=fn, tag=instr)
+        item = WorkItem(fn=self._dispatch[it], tag=instr)
         if instr.queue[0] == "device":
             q = self.backend.pick_device_queue(instr.queue[1], preferred=queue)
             self._issued_on[instr.iid] = q
             q.submit(item)
+            # dependents blocked only on instructions now pending on q may
+            # eager-issue right away (FIFO ordering makes it safe)
+            for dep in instr.dependents:
+                if dep.iid in self._blocked:
+                    self._recheck.append(dep)
         elif it == InstructionType.SEND:
             # comm lane: sends are tiny (mailbox post) — host pool is fine
             self.backend.host_pool.submit(item)
@@ -298,32 +347,54 @@ class Executor:
         self._remaining.pop(instr.iid, None)
         if self.tracer is not None:
             self.tracer.complete(self.node, instr)
-        qname = ".".join(map(str, instr.queue))
+        qname = self._qname_cache.get(instr.queue)
+        if qname is None:
+            qname = self._qname_cache[instr.queue] = \
+                ".".join(map(str, instr.queue))
         e = self._queue_latency_ewma.get(qname, latency)
         self._queue_latency_ewma[qname] = 0.9 * e + 0.1 * latency
+        remaining, blocked = self._remaining, self._blocked
         for dep in instr.dependents:
-            if dep.iid in self._remaining:
-                self._remaining[dep.iid] -= 1
+            rem = remaining.get(dep.iid)
+            if rem is None:
+                continue
+            rem -= 1
+            remaining[dep.iid] = rem
+            if dep.iid in blocked:
+                if rem == 0:
+                    del blocked[dep.iid]
+                    dep._ready_t = time.perf_counter()
+                    self._ready.append(dep)
+                else:
+                    self._recheck.append(dep)   # one fewer scattered dep
         if instr.itype == InstructionType.EPOCH and instr.command is not None:
             with self._epoch_cv:
                 self._completed_epochs.add(instr.command.cid)
                 self._epoch_cv.notify_all()
+        if instr.itype in (InstructionType.HORIZON, InstructionType.EPOCH):
+            self._retire_before(instr)
+            self.horizons_done += 1
+            self.horizon_event.set()    # unblock a throttled scheduler
+
+    # -- horizon-based retirement (§3.5) --------------------------------------
+    def _retire_before(self, sync_instr: Instruction) -> None:
+        """Drop tracking state for everything registered before ``sync_instr``.
+
+        A horizon/epoch instruction transitively depends on every instruction
+        submitted before it, so its completion proves all of them are done.
+        Clearing their dependency lists breaks the chain of references that
+        would otherwise keep the whole execution history alive.
+        """
+        log = self._retire_log
+        while log and log[0] is not sync_instr and log[0].state == "done":
+            old = log.popleft()
+            self._registered.pop(old.iid, None)
+            self._remaining.pop(old.iid, None)
+            self._retired_count += 1
+            old.dependencies = []
+            old.dependents = []
 
     # -- instruction semantics ---------------------------------------------------
-    def _executable(self, instr: Instruction) -> Callable[[], None]:
-        it = instr.itype
-        if it == InstructionType.ALLOC:
-            return lambda: self._exec_alloc(instr)
-        if it == InstructionType.FREE:
-            return lambda: self._exec_free(instr)
-        if it == InstructionType.COPY:
-            return lambda: self._exec_copy(instr)
-        if it == InstructionType.SEND:
-            return lambda: self._exec_send(instr)
-        if it in (InstructionType.DEVICE_KERNEL, InstructionType.HOST_TASK):
-            return lambda: self._exec_kernel(instr)
-        raise AssertionError(f"unroutable instruction {instr}")
-
     def _arr(self, alloc: Allocation) -> np.ndarray:
         """Backing array; lazily seeds M0 allocations with user init data."""
         arr = self.store.get(alloc.aid)

@@ -136,11 +136,19 @@ class IdagGenerator:
     """Per-node instruction graph generator."""
 
     def __init__(self, node: int, num_devices: int, *, d2d: bool = True,
-                 alloc_hints: Optional[dict] = None):
+                 alloc_hints: Optional[dict] = None, retire: bool = False):
         self.node = node
         self.num_devices = num_devices
         self.d2d = d2d
+        # ``retire=True`` (used by the runtime) trims ``instructions`` down to
+        # the window since the last horizon/epoch, so generator memory stays
+        # bounded on long runs; ``emitted_count`` keeps the lifetime total.
+        self.retire = retire
         self.instructions: list[Instruction] = []
+        self.emitted_count = 0
+        self.alloc_count = 0
+        self._batch: list[Instruction] = []
+        self._frontier_pos = 0          # index of the last sync instruction
         self.pilots: list[Pilot] = []
         self.warnings: list[str] = []
         self._allocs: dict[tuple[int, int], list[Allocation]] = {}
@@ -159,6 +167,10 @@ class IdagGenerator:
     # -- small helpers ---------------------------------------------------
     def _emit(self, instr: Instruction) -> Instruction:
         self.instructions.append(instr)
+        self.emitted_count += 1
+        if instr.itype == InstructionType.ALLOC:
+            self.alloc_count += 1
+        self._batch.append(instr)
         return instr
 
     def _register(self, buf: VirtualBuffer) -> None:
@@ -358,7 +370,7 @@ class IdagGenerator:
 
     # -- command compilation ------------------------------------------------
     def compile(self, cmd: Command) -> list[Instruction]:
-        before = len(self.instructions)
+        self._batch = []
         if cmd.ctype == CommandType.EXECUTION:
             self._compile_execution(cmd)
         elif cmd.ctype == CommandType.PUSH:
@@ -369,7 +381,8 @@ class IdagGenerator:
             self._compile_sync(cmd, InstructionType.HORIZON)
         elif cmd.ctype == CommandType.EPOCH:
             self._compile_sync(cmd, InstructionType.EPOCH)
-        return self.instructions[before:]
+        out, self._batch = self._batch, []
+        return out
 
     def would_allocate(self, cmd: Command) -> bool:
         """Cheap query used by the lookahead scheduler (§4.3)."""
@@ -590,7 +603,9 @@ class IdagGenerator:
     def _compile_sync(self, cmd: Command, itype: InstructionType) -> None:
         instr = Instruction(itype, node=self.node, queue=("host",),
                             name=itype.value, command=cmd)
-        for i in self.instructions:
+        # every instruction before the previous sync already has a dependent
+        # (that sync), so only the tail can contribute to the frontier
+        for i in self.instructions[self._frontier_pos:]:
             if not i.dependents:
                 instr.add_dependency(i, DepKind.SYNC)
         self._emit(instr)
@@ -604,6 +619,13 @@ class IdagGenerator:
             ms.producers.update(ms.producers.covered(), instr)
             ms.producers.coalesce()
             ms.readers = []
+        if self.retire:
+            # everything before this sync is transitively dominated by it;
+            # the generator only ever wires new deps against the sync point
+            del self.instructions[:-1]
+            self._frontier_pos = 0
+        else:
+            self._frontier_pos = len(self.instructions) - 1
 
     # -- shutdown -------------------------------------------------------------
     def free_all(self) -> list[Instruction]:

@@ -25,7 +25,7 @@ from .buffer import Accessor, VirtualBuffer
 from .command_graph import CommandGraphGenerator, CommandType
 from .communicator import Communicator
 from .executor import Executor
-from .instruction_graph import IdagGenerator
+from .instruction_graph import IdagGenerator, InstructionType
 from .lookahead import LookaheadScheduler
 from .region import Box
 from .task_graph import Task, TaskGraph, TaskType
@@ -45,11 +45,17 @@ class _NodeScheduler:
         self.node = node
         self.rt = rt
         self.cdag = CommandGraphGenerator(rt.num_nodes)
-        self.idag = IdagGenerator(node, rt.devices_per_node, d2d=rt.d2d)
+        self.idag = IdagGenerator(node, rt.devices_per_node, d2d=rt.d2d,
+                                  retire=True)
         self.lookahead = LookaheadScheduler(self.idag, enabled=rt.lookahead)
         self.inbox: "queue.SimpleQueue" = queue.SimpleQueue()
-        # bootstrap instructions (initial epoch) emitted at construction
-        rt.executors[node].submit(list(self.idag.instructions))
+        # bootstrap instructions (initial epoch) emitted at construction;
+        # count its sync instruction so the throttle lag is not off by one
+        bootstrap = list(self.idag.instructions)
+        self._horizons_sent = sum(
+            1 for i in bootstrap
+            if i.itype in (InstructionType.HORIZON, InstructionType.EPOCH))
+        rt.executors[node].submit(bootstrap)
         self._thread = threading.Thread(target=self._run,
                                         name=f"sched-N{node}", daemon=True)
         self._thread.start()
@@ -79,12 +85,37 @@ class _NodeScheduler:
             self._post_new_pilots()
             if instrs:
                 rt.executors[self.node].submit(instrs)
+                self._horizons_sent += sum(
+                    1 for i in instrs
+                    if i.itype in (InstructionType.HORIZON,
+                                   InstructionType.EPOCH))
+                self._throttle()
             t2 = rt.tracer.now() if rt.tracer else 0.0
             if rt.tracer:
                 rt.tracer.span(f"sched-N{self.node}", "cdag", task.name, t0, t1)
                 rt.tracer.span(f"sched-N{self.node}", "idag", task.name, t1, t2)
             if isinstance(msg, _EpochRequest):
                 msg.futures[self.node].put(my_epoch_cid)
+
+    def _throttle(self) -> None:
+        """Bound scheduler run-ahead to ``max_horizon_lag`` horizon windows.
+
+        Without this the scheduler can compile arbitrarily far ahead of
+        execution, and completed-instruction retirement (which happens when
+        horizons *execute*) never catches up — retained-instruction memory
+        would grow linearly with program length on execution-bound runs.
+        """
+        lag_limit = self.rt.max_horizon_lag
+        if not lag_limit:
+            return
+        ex = self.rt.executors[self.node]
+        while (self._horizons_sent - ex.horizons_done) > lag_limit:
+            if ex.errors or self.rt._shut:
+                return
+            ex.horizon_event.clear()
+            if (self._horizons_sent - ex.horizons_done) <= lag_limit:
+                return
+            ex.horizon_event.wait(0.01)
 
     _pilot_cursor = 0
 
@@ -93,6 +124,11 @@ class _NodeScheduler:
         while self._pilot_cursor < len(pilots):
             self.rt.comm.post_pilot(pilots[self._pilot_cursor])
             self._pilot_cursor += 1
+        # posted pilots are never re-read: trim so the list stays bounded
+        # (only this scheduler thread touches idag.pilots)
+        if self._pilot_cursor:
+            del pilots[:self._pilot_cursor]
+            self._pilot_cursor = 0
 
     def shutdown(self) -> None:
         self.inbox.put(None)
@@ -106,10 +142,11 @@ class Runtime:
                  lookahead: bool = True, d2d: bool = True,
                  check_bounds: bool = False, trace: bool = False,
                  horizon_step: int = 4, queues_per_device: int = 2,
-                 host_threads: int = 4):
+                 host_threads: int = 4, max_horizon_lag: int = 8):
         self.num_nodes = num_nodes
         self.devices_per_node = devices_per_node
         self.lookahead = lookahead
+        self.max_horizon_lag = max_horizon_lag
         self.d2d = d2d
         self.tracer = Tracer() if trace else None
         self.tdag = TaskGraph(horizon_step=horizon_step)
@@ -208,12 +245,10 @@ class Runtime:
         return w
 
     def total_instructions(self) -> int:
-        return sum(len(s.idag.instructions) for s in self.schedulers)
+        return sum(s.idag.emitted_count for s in self.schedulers)
 
     def total_allocs(self) -> int:
-        from .instruction_graph import InstructionType
-        return sum(1 for s in self.schedulers for i in s.idag.instructions
-                   if i.itype == InstructionType.ALLOC)
+        return sum(s.idag.alloc_count for s in self.schedulers)
 
     def shutdown(self) -> None:
         if self._shut:

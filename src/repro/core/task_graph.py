@@ -91,6 +91,7 @@ class TaskGraph:
         self._prev_horizon: Optional[Task] = None
         self._last_epoch: Optional[Task] = None
         self._cp_at_last_horizon = 0
+        self._frontier_pos = 0          # index of the last sync task
         self.warnings: list[str] = []
         # initial epoch — everything hangs off it
         self._last_epoch = self._append(Task(TaskType.EPOCH, name="init"))
@@ -179,11 +180,13 @@ class TaskGraph:
 
     def emit_horizon(self) -> Task:
         horizon = Task(TaskType.HORIZON, name=f"H@cp{self.tasks[-1].critical_path}")
-        # horizon depends on the current execution front
-        for t in self.tasks:
+        # horizon depends on the current execution front; tasks before the
+        # previous sync already have a dependent (that sync), so scan the tail
+        for t in self.tasks[self._frontier_pos:]:
             if not t.dependents and t is not horizon:
                 horizon.add_dependency(t, DepKind.SYNC)
         self._append(horizon)
+        self._frontier_pos = len(self.tasks) - 1
         # horizon becomes the new frontier: substitute it for all prior
         # writers/readers so tracking structures stay bounded [23]
         for st in self._buffers.values():
@@ -197,10 +200,11 @@ class TaskGraph:
 
     def emit_epoch(self, name: str = "epoch") -> Task:
         epoch = Task(TaskType.EPOCH, name=name)
-        for t in self.tasks:
+        for t in self.tasks[self._frontier_pos:]:
             if not t.dependents and t is not epoch:
                 epoch.add_dependency(t, DepKind.SYNC)
         self._append(epoch)
+        self._frontier_pos = len(self.tasks) - 1
         for st in self._buffers.values():
             st.last_writers.update(st.last_writers.covered(), epoch)
             st.last_writers.coalesce()

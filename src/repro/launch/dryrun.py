@@ -138,6 +138,8 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
     mem = compiled.memory_analysis()
     stats = analyze(compiled.as_text())
     raw = compiled.cost_analysis()
+    if isinstance(raw, (list, tuple)):       # older JAX returns [dict]
+        raw = raw[0] if raw else {}
 
     rec = {
         "arch": arch, "shape": shape,

@@ -25,7 +25,10 @@ ROOT = Path(__file__).resolve().parents[1]
 # -- HLO analyzer vs unrolled ground truth -------------------------------------
 def _flops_truth(fn, *args):
     c = jax.jit(fn).lower(*args).compile()
-    return float(c.cost_analysis().get("flops", 0.0)), c
+    raw = c.cost_analysis()
+    if isinstance(raw, (list, tuple)):       # older JAX returns [dict]
+        raw = raw[0] if raw else {}
+    return float(raw.get("flops", 0.0)), c
 
 
 @pytest.mark.parametrize("n_iter", [4, 16])

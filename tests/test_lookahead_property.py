@@ -8,7 +8,10 @@ For ANY sequence of tasks with random access patterns:
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Box, CommandType, IdagGenerator, InstructionType,
                         Region, TaskGraph, fixed, generate_cdag, one_to_one,

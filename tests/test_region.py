@@ -5,7 +5,10 @@ Every scheduler layer is built on this algebra, so it must be exact.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.region import Box, Region, RegionMap, split_box
 

@@ -1,0 +1,183 @@
+"""Deterministic (hypothesis-free) regression tests for the region fast paths.
+
+The region algebra grew bounding-box prefilters, a trusted-disjoint
+constructor and a sort-and-sweep merge; this file pits those fast paths
+against the same brute-force bitmap oracle the hypothesis suite uses, but
+with a seeded PRNG so it always runs, even without optional deps.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.region import (Box, Region, RegionMap, _merge_adjacent,
+                               split_box)
+
+BOUND = 12
+
+
+def bitmap(r: Region, rank: int) -> np.ndarray:
+    grid = np.zeros((BOUND,) * rank, dtype=bool)
+    for b in r.boxes:
+        sl = tuple(slice(max(0, a), min(BOUND, c)) for a, c in zip(b.min, b.max))
+        grid[sl] = True
+    return grid
+
+
+def rand_box(rng: random.Random, rank: int) -> Box:
+    lo_hi = [(rng.randint(0, BOUND), rng.randint(0, BOUND)) for _ in range(rank)]
+    return Box(tuple(min(a, b) for a, b in lo_hi),
+               tuple(max(a, b) for a, b in lo_hi))
+
+
+def rand_region(rng: random.Random, rank: int, max_boxes: int = 4) -> Region:
+    return Region([rand_box(rng, rank) for _ in range(rng.randint(0, max_boxes))])
+
+
+@pytest.mark.parametrize("rank", [1, 2, 3])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+class TestRegionOracle:
+    N_CASES = 60
+
+    def _pairs(self, rank, seed):
+        rng = random.Random(1000 * rank + seed)
+        for _ in range(self.N_CASES):
+            yield rand_region(rng, rank), rand_region(rng, rank)
+
+    def test_union(self, rank, seed):
+        for a, b in self._pairs(rank, seed):
+            assert np.array_equal(bitmap(a.union(b), rank),
+                                  bitmap(a, rank) | bitmap(b, rank))
+
+    def test_intersect(self, rank, seed):
+        for a, b in self._pairs(rank, seed):
+            assert np.array_equal(bitmap(a.intersect(b), rank),
+                                  bitmap(a, rank) & bitmap(b, rank))
+
+    def test_difference(self, rank, seed):
+        for a, b in self._pairs(rank, seed):
+            assert np.array_equal(bitmap(a.difference(b), rank),
+                                  bitmap(a, rank) & ~bitmap(b, rank))
+
+    def test_results_stay_disjoint(self, rank, seed):
+        """Trusted-constructor outputs must preserve the disjoint invariant."""
+        for a, b in self._pairs(rank, seed):
+            for r in (a.union(b), a.intersect(b), a.difference(b)):
+                for i, x in enumerate(r.boxes):
+                    assert not x.empty()
+                    for y in r.boxes[i + 1:]:
+                        assert not x.overlaps(y), f"{x} overlaps {y} in {r}"
+                assert r.volume() == int(bitmap(r, rank).sum())
+
+    def test_contains_and_eq(self, rank, seed):
+        for a, b in self._pairs(rank, seed):
+            assert a.contains(b) == bool(
+                (bitmap(b, rank) & ~bitmap(a, rank)).sum() == 0)
+            assert (a == b) == np.array_equal(bitmap(a, rank), bitmap(b, rank))
+            if a == b:
+                assert hash(a) == hash(b)
+
+    def test_contains_box(self, rank, seed):
+        rng = random.Random(7000 * rank + seed)
+        for _ in range(self.N_CASES):
+            a, b = rand_region(rng, rank), rand_box(rng, rank)
+            want = bool((bitmap(Region.from_box(b), rank)
+                         & ~bitmap(a, rank)).sum() == 0)
+            assert a.contains_box(b) == want
+
+    def test_intersect_box(self, rank, seed):
+        rng = random.Random(9000 * rank + seed)
+        for _ in range(self.N_CASES):
+            a, b = rand_region(rng, rank), rand_box(rng, rank)
+            assert np.array_equal(
+                bitmap(a.intersect_box(b), rank),
+                bitmap(a, rank) & bitmap(Region.from_box(b), rank))
+
+
+def test_from_disjoint_trusts_caller():
+    """from_disjoint must not renormalize — box identity is preserved."""
+    boxes = (Box((0, 0), (2, 2)), Box((5, 5), (7, 9)))
+    r = Region.from_disjoint(boxes)
+    assert r.boxes == boxes
+    assert r.volume() == 4 + 8
+
+
+def test_merge_adjacent_collapses_rows():
+    rows = [Box((i, 0), (i + 1, 8)) for i in range(16)]
+    random.Random(3).shuffle(rows)
+    merged = _merge_adjacent(rows)
+    assert merged == [Box((0, 0), (16, 8))]
+
+
+def test_merge_adjacent_multi_axis_fixpoint():
+    # 2x2 grid of unit boxes: merging along one axis enables the other
+    quads = [Box((i, j), (i + 1, j + 1)) for i in range(2) for j in range(2)]
+    assert _merge_adjacent(quads) == [Box((0, 0), (2, 2))]
+
+
+def test_empty_region_singleton_and_bbox_cache():
+    assert Region.empty() is Region.empty()
+    r = Region([Box((0, 1), (4, 5)), Box((8, 1), (9, 5))])
+    assert r.bounding_box() == Box((0, 1), (9, 5))
+    assert r.bounding_box() is r.bounding_box()      # cached
+
+
+def test_region_map_oracle():
+    """RegionMap.update must behave like painting on a grid."""
+    rng = random.Random(42)
+    for _ in range(40):
+        bounds = Box((0, 0), (BOUND, BOUND))
+        rm = RegionMap(bounds, default=0)
+        grid = np.zeros((BOUND, BOUND), dtype=int)
+        for val in range(1, rng.randint(2, 7)):
+            r = rand_region(rng, 2)
+            rm.update(r, val)
+            grid[bitmap(r, 2)] = val
+        for sub, v in rm.query(Region.from_box(bounds)):
+            for b in sub.boxes:
+                sl = tuple(slice(a, c) for a, c in zip(b.min, b.max))
+                assert (grid[sl] == v).all(), f"value mismatch in {b}"
+        # entries stay disjoint and cover exactly the painted area
+        seen = Region.empty()
+        for r, _ in rm.entries:
+            assert not seen.overlaps(r)
+            seen = seen.union(r)
+        assert seen == Region.from_box(bounds)
+        # covered() equals the union of entries
+        assert rm.covered() == seen
+
+
+def test_region_map_query_prefilter_misses_nothing():
+    """Sorted bbox index: querying a narrow strip sees exactly the overlap."""
+    bounds = Box((0,), (100,))
+    rm = RegionMap(bounds)
+    for i in range(10):
+        rm.update(Region.from_box(Box((10 * i,), (10 * i + 5,))), i)
+    got = rm.query(Region.from_box(Box((12,), (48,))))
+    vals = sorted(v for _, v in got)
+    assert vals == [1, 2, 3, 4]
+    assert all(not sub.is_empty() for sub, _ in got)
+
+
+def test_region_map_coalesce_merges_values():
+    bounds = Box((0,), (16,))
+    rm = RegionMap(bounds, default="a")
+    rm.update(Region.from_box(Box((4,), (8,))), "b")
+    rm.update(Region.from_box(Box((8,), (12,))), "b")
+    rm.coalesce()
+    assert len(rm.entries) == 2
+    by_val = {v: r for r, v in rm.entries}
+    assert by_val["b"] == Region.from_box(Box((4,), (12,)))
+    assert by_val["a"].volume() == 8
+
+
+def test_split_box_partition_deterministic():
+    for extent, chunks, gran in [(64, 16, 4), (7, 3, 2), (1, 4, 1), (33, 8, 3)]:
+        box = Box((0, 0), (extent, 5))
+        parts = split_box(box, chunks, dims=(0,), granularity=(gran,))
+        assert Region(parts) == Region.from_box(box)
+        assert sum(p.volume() for p in parts) == box.volume()
+        assert len(parts) <= chunks
+        for p in parts[:-1]:
+            assert (p.max[0] - p.min[0]) % gran == 0
