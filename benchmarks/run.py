@@ -5,12 +5,18 @@
   * bench_overlap          — paper fig. 7: scheduler/executor overlap
   * bench_lookahead        — §4.3: resize elision (allocation counts + wall)
   * bench_executor_latency — §4.1: out-of-order engine issue latency
+  * bench_reduction        — §2.2: distributed-reduction scaling over node
+                             count and reduction size
   * bench_roofline         — §Roofline: three terms per (arch x shape) cell
                              from the dry-run artifacts
 
 Output: ``name,us_per_call,derived`` CSV rows on stdout.
 
 Run: PYTHONPATH=src python -m benchmarks.run [bench_name ...]
+     [--json] [--trace out.json]
+
+``--trace PATH`` exports the last traced run as a Chrome/Perfetto
+trace-event file (fig.-7-style timeline, viewable at ui.perfetto.dev).
 """
 
 from __future__ import annotations
@@ -26,15 +32,25 @@ ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "src"))
 
 from repro.core import (Box, Region, Runtime, all_range, fixed, neighborhood,
-                        one_to_one, read, read_write, write)  # noqa: E402
+                        one_to_one, read, read_write, reduction,
+                        write)  # noqa: E402
 
 CSV: list[str] = []
+TRACE_PATH: Path | None = None
 
 
 def emit(name: str, us: float, derived: str = "") -> None:
     row = f"{name},{us:.1f},{derived}"
     CSV.append(row)
     print(row, flush=True)
+
+
+def maybe_export_trace(tracer) -> None:
+    """With ``--trace PATH``, write the tracer's span log as a Perfetto
+    trace-event file (last traced run wins)."""
+    if TRACE_PATH is not None and tracer is not None:
+        n = tracer.to_chrome_trace(TRACE_PATH)
+        print(f"# wrote {n} trace events to {TRACE_PATH}", file=sys.stderr)
 
 
 # ---------------------------------------------------------------------------
@@ -157,6 +173,7 @@ def bench_overlap() -> None:
              f"sched_busy_while_exec={f:.2f}")
         if name == "rsim":
             print(tr.timeline_text(70))
+        maybe_export_trace(tr)
 
 
 def bench_lookahead() -> None:
@@ -395,19 +412,76 @@ def bench_scheduler_throughput() -> None:
     SCHED_JSON["total_instr_nbody200"] = float(total)
 
 
+# ---------------------------------------------------------------------------
+# distributed reductions (§2.2): node-count x reduction-size scaling
+
+
+def bench_reduction() -> None:
+    """End-to-end reduction latency + exact-sum verification.
+
+    Scales the cluster grid and the number of contributed elements; the
+    derived column verifies the result is bitwise equal to ``math.fsum``.
+    Records ``reduction_<grid>_n<size>_us`` in ``SCHED_JSON`` (--json).
+    """
+    import math
+    steps = 4
+    rng = np.random.default_rng(11)
+    for nodes, devs in [(1, 2), (2, 2), (4, 2)]:
+        for size in (1024, 16384):
+            data = rng.normal(size=(size,))
+            trace = TRACE_PATH is not None
+            with Runtime(num_nodes=nodes, devices_per_node=devs,
+                         trace=trace) as rt:
+                X = rt.buffer((size,), init=data, name="X")
+                E = rt.buffer((1,), init=np.zeros(1), name="E")
+
+                def k(chunk, xv, red):
+                    red.contribute(xv.get(chunk))
+
+                # warmup: first reduction pays allocation/coherence setup
+                rt.submit("redwarm", (size,),
+                          [read(X, one_to_one()), reduction(E, "sum")], k)
+                rt.sync(timeout=300)
+                # measure steady-state submit -> result only (no runtime
+                # construction/teardown in the scaling numbers)
+                t0 = time.perf_counter()
+                for _ in range(steps):
+                    rt.submit("redsum", (size,),
+                              [read(X, one_to_one()), reduction(E, "sum")], k)
+                rt.sync(timeout=300)
+                wall = time.perf_counter() - t0
+                val = float(rt.gather(E)[0])
+                tr = rt.tracer
+            ok = val == math.fsum(data)
+            us = wall / steps * 1e6
+            emit(f"reduction/{nodes}x{devs}/n{size}", us,
+                 f"bitexact={'yes' if ok else 'NO'}")
+            SCHED_JSON[f"reduction_{nodes}x{devs}_n{size}_us"] = us
+            maybe_export_trace(tr)
+
+
 BENCHES = {
     "bench_strong_scaling": bench_strong_scaling,
     "bench_overlap": bench_overlap,
     "bench_lookahead": bench_lookahead,
     "bench_executor_latency": bench_executor_latency,
+    "bench_reduction": bench_reduction,
     "bench_scheduler_throughput": bench_scheduler_throughput,
     "bench_roofline": bench_roofline,
 }
 
 
 def main() -> None:
-    args = [a for a in sys.argv[1:] if a != "--json"]
-    write_json = "--json" in sys.argv[1:]
+    global TRACE_PATH
+    argv = sys.argv[1:]
+    if "--trace" in argv:
+        i = argv.index("--trace")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+            sys.exit("--trace requires an output path (e.g. --trace out.json)")
+        TRACE_PATH = Path(argv[i + 1])
+        argv = argv[:i] + argv[i + 2:]
+    args = [a for a in argv if a != "--json"]
+    write_json = "--json" in argv
     names = args or list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:

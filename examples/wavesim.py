@@ -1,13 +1,18 @@
 """WaveSim: 2-D five-point wave-propagation stencil (paper §5) on the
 instruction-graph runtime, with the Pallas stencil kernel doing the
-per-device compute (interpret mode on CPU).
+per-device compute (interpret mode on CPU).  After the time loop a
+``reduction(R2, "sum")`` computes the squared residual norm between the two
+newest fields — distributed over all ranks yet bitwise identical to a
+single-node ``math.fsum`` oracle thanks to the exact-sum accumulator.
 
     PYTHONPATH=src python examples/wavesim.py
 """
 
+import math
+
 import numpy as np
 
-from repro.core import Runtime, neighborhood, one_to_one, read, write
+from repro.core import Runtime, neighborhood, one_to_one, read, reduction, write
 from repro.core.region import Box
 from repro.kernels.ref import wave_step_ref
 
@@ -39,16 +44,28 @@ def main() -> None:
             out[r, 0] = out[r, -1] = 0.0
         un_v.set(chunk, out)
 
+    def residual(chunk, ua, ub, red):
+        d = ub.get(chunk) - ua.get(chunk)
+        red.contribute(d * d)
+
     with Runtime(num_nodes=2, devices_per_node=2) as q:
         B = [q.buffer((H, W), init=u0, name="um"),
              q.buffer((H, W), init=u1, name="u"),
              q.buffer((H, W), init=np.zeros((H, W)), name="un")]
+        R2 = q.buffer((1,), init=np.zeros(1), name="R2")
         for s in range(STEPS):
             um, u, un = B[s % 3], B[(s + 1) % 3], B[(s + 2) % 3]
             q.submit(f"wave{s}", (H, W),
                      [read(um, one_to_one()), read(u, neighborhood((1, 0))),
                       write(un, one_to_one())], step_kernel)
+        # residual norm |u_T - u_{T-1}|^2, reduced across all ranks/devices
+        q.submit("residual", (H, W),
+                 [read(B[STEPS % 3], one_to_one()),
+                  read(B[(STEPS + 1) % 3], one_to_one()),
+                  reduction(R2, "sum")], residual)
         result = q.gather(B[(STEPS + 1) % 3])
+        prev = q.gather(B[STEPS % 3])
+        res2 = float(q.gather(R2)[0])
         bytes_p2p = q.comm.bytes_sent
 
     # oracle check
@@ -57,10 +74,15 @@ def main() -> None:
         um, u = u, wave_step_ref(um, u, C)
     # kernels.ref oracle runs float32 under jax defaults
     err = float(np.abs(result - np.asarray(u)).max())
+    # the residual reduction must equal the fsum oracle bit for bit
+    res2_oracle = math.fsum(((result - prev) ** 2).ravel())
     print(f"wave stencil {H}x{W}, {STEPS} steps on 2 ranks x 2 devices")
     print(f"  halo-exchange P2P traffic: {bytes_p2p / 1e3:.1f} kB")
     print(f"  max |error| vs oracle: {err:.2e}")
+    print(f"  residual |du|^2 = {res2:.17e} "
+          f"[{'bit-for-bit' if res2 == res2_oracle else 'MISMATCH'}]")
     assert err < 1e-4
+    assert res2 == res2_oracle, (res2, res2_oracle)
 
 
 if __name__ == "__main__":

@@ -6,9 +6,10 @@ from .allocation import Allocation, PINNED_HOST, USER_HOST, device_memory
 from .buffer import (AccessMode, Accessor, VirtualBuffer, read, read_write,
                      write)
 from .command_graph import Command, CommandGraphGenerator, CommandType, generate_cdag
-from .executor import BoundsError, BufferView, Executor
+from .executor import BoundsError, BufferView, Executor, ReductionView
 from .instruction_graph import (IdagGenerator, Instruction, InstructionType,
                                 Pilot)
+from .reduction import Reduction, ReductionOp, reduction
 from .lookahead import LookaheadScheduler
 from .range_mapper import (all_range, fixed, fixed_row, neighborhood,
                            one_to_one, rows_upto, slice_dim)
@@ -21,8 +22,9 @@ __all__ = [
     "Allocation", "PINNED_HOST", "USER_HOST", "device_memory",
     "AccessMode", "Accessor", "VirtualBuffer", "read", "read_write", "write",
     "Command", "CommandGraphGenerator", "CommandType", "generate_cdag",
-    "BoundsError", "BufferView", "Executor",
+    "BoundsError", "BufferView", "Executor", "ReductionView",
     "IdagGenerator", "Instruction", "InstructionType", "Pilot",
+    "Reduction", "ReductionOp", "reduction",
     "LookaheadScheduler",
     "all_range", "fixed", "fixed_row", "neighborhood", "one_to_one",
     "rows_upto", "slice_dim",

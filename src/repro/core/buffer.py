@@ -16,6 +16,8 @@ from typing import Optional
 import numpy as np
 
 from .range_mapper import RangeMapper
+from .reduction import Reduction, reduction  # noqa: F401 — re-export: kernels
+# bind reductions next to accessors, so both descriptors live in one namespace
 from .region import Box, Region
 
 _buffer_ids = itertools.count()

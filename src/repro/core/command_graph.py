@@ -18,6 +18,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from .buffer import VirtualBuffer
+from .reduction import Reduction
 from .region import Box, Region, RegionMap, split_box
 from .task_graph import DepKind, Task, TaskGraph, TaskType
 
@@ -26,6 +27,12 @@ class CommandType(enum.Enum):
     EXECUTION = "execution"
     PUSH = "push"
     AWAIT_PUSH = "await_push"
+    # reductions (§2.2): N partial producers -> 1 replicated value.  Each
+    # participating node combines its device partials and broadcasts them
+    # (REDUCE_PARTIAL); every node then gathers all partials and folds them
+    # in canonical node order (REDUCE_GLOBAL) — replicated-deterministic.
+    REDUCE_PARTIAL = "reduce_partial"
+    REDUCE_GLOBAL = "reduce_global"
     HORIZON = "horizon"
     EPOCH = "epoch"
 
@@ -39,10 +46,15 @@ class Command:
     node: int
     task: Optional[Task] = None
     chunk: Optional[Box] = None                 # EXECUTION: this node's chunk
-    buffer: Optional[VirtualBuffer] = None      # PUSH/AWAIT_PUSH
+    buffer: Optional[VirtualBuffer] = None      # PUSH/AWAIT_PUSH/REDUCE_*
     region: Optional[Region] = None             # PUSH: precise; AWAIT: union
     target: Optional[int] = None                # PUSH only
-    transfer_id: Optional[tuple[int, int]] = None  # (task id, buffer id)
+    # PUSH/AWAIT: (task id, buffer id); REDUCE_*: (task id, buffer id, 1) so
+    # gather traffic never aliases include_current_value coherence transfers
+    transfer_id: Optional[tuple] = None
+    reduction: Optional[Reduction] = None       # REDUCE_* only
+    participants: tuple[int, ...] = ()          # REDUCE_*: nodes with chunks
+    targets: tuple[int, ...] = ()               # REDUCE_PARTIAL: broadcast set
     cid: int = field(default_factory=lambda: next(_cmd_ids))
     dependencies: list[tuple["Command", DepKind]] = field(default_factory=list)
     dependents: list["Command"] = field(default_factory=list)
@@ -144,6 +156,52 @@ class CommandGraphGenerator:
         return out
 
     # ------------------------------------------------------------------
+    def _fetch_missing(self, n: int, buf: VirtualBuffer, need: Region,
+                       task: Task, consumer: Command,
+                       new_cmds: list[Command]) -> None:
+        """Emit sender pushes + one await-push so ``need`` is up-to-date on
+        node ``n``; wires the await-push as a TRUE dep of ``consumer``."""
+        own = self._ownership_map(buf)
+        missing_union = Region.empty()
+        for sub, owner in own.query(need):
+            if owner is None:
+                continue  # uninitialized — TDAG already warned
+            owners = owner if isinstance(owner, frozenset) else frozenset([owner])
+            if n in owners:
+                continue
+            src = min(owners)  # deterministic sender choice
+            missing_union = missing_union.union(sub)
+            # sender-side push (materialized on the sender node)
+            push = Command(CommandType.PUSH, node=src, task=task, buffer=buf,
+                           region=sub, target=n,
+                           transfer_id=(task.tid, buf.bid))
+            sst = self._node_buf(src, buf)
+            for ssub, writer in sst.last_writers.query(sub):
+                push.add_dependency(writer, DepKind.TRUE)
+            sst.last_readers.append((sub, push))
+            self.commands[src].append(push)
+            new_cmds.append(push)
+        if not missing_union.is_empty():
+            ap = Command(CommandType.AWAIT_PUSH, node=n, task=task, buffer=buf,
+                         region=missing_union,
+                         transfer_id=(task.tid, buf.bid))
+            nst = self._node_buf(n, buf)
+            # anti-dep: receive overwrites stale local data
+            for ssub, writer in nst.last_writers.query(missing_union):
+                ap.add_dependency(writer, DepKind.ANTI)
+            for rreg, reader in nst.last_readers:
+                if rreg.overlaps(missing_union):
+                    ap.add_dependency(reader, DepKind.ANTI)
+            nst.last_writers.update(missing_union, ap)
+            self.commands[n].append(ap)
+            new_cmds.append(ap)
+            consumer.add_dependency(ap, DepKind.TRUE)
+            # received data is now also up-to-date on n (replicated info)
+            for sub, owner in own.query(missing_union):
+                owners = owner if isinstance(owner, frozenset) else frozenset([owner])
+                own.update(sub, owners | {n})
+
+    # ------------------------------------------------------------------
     def _process_kernel(self, task: Task) -> list[Command]:
         chunks = split_box(task.index_space, self.num_nodes,
                            dims=task.split_dims, granularity=task.granularity)
@@ -180,47 +238,8 @@ class CommandGraphGenerator:
             for acc in task.accessors:
                 if not acc.mode.is_consumer:
                     continue
-                buf = acc.buffer
                 need = acc.mapped_region(chunk)
-                own = self._ownership_map(buf)
-                missing_union = Region.empty()
-                for sub, owner in own.query(need):
-                    if owner is None:
-                        continue  # uninitialized — TDAG already warned
-                    owners = owner if isinstance(owner, frozenset) else frozenset([owner])
-                    if n in owners:
-                        continue
-                    src = min(owners)  # deterministic sender choice
-                    missing_union = missing_union.union(sub)
-                    # sender-side push (materialized on the sender node)
-                    push = Command(CommandType.PUSH, node=src, task=task, buffer=buf,
-                                   region=sub, target=n,
-                                   transfer_id=(task.tid, buf.bid))
-                    sst = self._node_buf(src, buf)
-                    for ssub, writer in sst.last_writers.query(sub):
-                        push.add_dependency(writer, DepKind.TRUE)
-                    sst.last_readers.append((sub, push))
-                    self.commands[src].append(push)
-                    new_cmds.append(push)
-                if not missing_union.is_empty():
-                    ap = Command(CommandType.AWAIT_PUSH, node=n, task=task, buffer=buf,
-                                 region=missing_union,
-                                 transfer_id=(task.tid, buf.bid))
-                    nst = self._node_buf(n, buf)
-                    # anti-dep: receive overwrites stale local data
-                    for ssub, writer in nst.last_writers.query(missing_union):
-                        ap.add_dependency(writer, DepKind.ANTI)
-                    for rreg, reader in nst.last_readers:
-                        if rreg.overlaps(missing_union):
-                            ap.add_dependency(reader, DepKind.ANTI)
-                    nst.last_writers.update(missing_union, ap)
-                    self.commands[n].append(ap)
-                    new_cmds.append(ap)
-                    cmd.add_dependency(ap, DepKind.TRUE)
-                    # received data is now also up-to-date on n (replicated info)
-                    for sub, owner in own.query(missing_union):
-                        owners = owner if isinstance(owner, frozenset) else frozenset([owner])
-                        own.update(sub, owners | {n})
+                self._fetch_missing(n, acc.buffer, need, task, cmd, new_cmds)
 
         # --- pass 3: local deps + ownership update for writes -------------
         for n, chunk in node_chunks.items():
@@ -256,7 +275,82 @@ class CommandGraphGenerator:
                 own = self._ownership_map(acc.buffer)
                 for n, chunk in node_chunks.items():
                     own.update(acc.mapped_region(chunk), frozenset([n]))
+
+        # --- pass 4: reductions (N partials -> 1 replicated value) ---------
+        for red in task.reductions:
+            self._process_reduction(task, red, node_chunks, exec_cmds, new_cmds)
         return new_cmds
+
+    # -- reductions ------------------------------------------------------
+    def _process_reduction(self, task: Task, red: Reduction,
+                           node_chunks: dict[int, Box],
+                           exec_cmds: dict[int, Command],
+                           new_cmds: list[Command]) -> None:
+        """Emit per-node REDUCE_PARTIAL + replicated REDUCE_GLOBAL commands.
+
+        The reduction dataflow intentionally violates the one-writer rule:
+        every participating node produces a partial for the SAME full-buffer
+        region, and every node (participating or not) writes the combined
+        result.  Determinism holds because all nodes fold the partials in
+        canonical node order and the replicated CDAG assigns identical
+        participant sets everywhere.
+        """
+        buf = red.buffer
+        self._ownership_map(buf)                   # register buffer
+        rtid = (task.tid, buf.bid, 1)
+        participants = tuple(sorted(node_chunks))
+        full = buf.full_region
+
+        # phase 1: command objects (no state reads yet)
+        partial_cmds: dict[int, Command] = {}
+        global_cmds: dict[int, Command] = {}
+        for n in participants:
+            pc = Command(CommandType.REDUCE_PARTIAL, node=n, task=task,
+                         buffer=buf, reduction=red, region=full,
+                         transfer_id=rtid, participants=participants,
+                         targets=tuple(t for t in range(self.num_nodes)
+                                       if t != n))
+            pc.add_dependency(exec_cmds[n], DepKind.TRUE)
+            partial_cmds[n] = pc
+        for n in range(self.num_nodes):
+            global_cmds[n] = Command(
+                CommandType.REDUCE_GLOBAL, node=n, task=task, buffer=buf,
+                reduction=red, region=full, transfer_id=rtid,
+                participants=participants)
+
+        # phase 2: include_current_value consumes the previous contents on
+        # every node — fetch stale regions BEFORE the result overwrites them
+        if red.include_current_value:
+            for n in range(self.num_nodes):
+                self._fetch_missing(n, buf, full, task, global_cmds[n],
+                                    new_cmds)
+
+        # phase 3: local deps + per-node state updates
+        for n in range(self.num_nodes):
+            gc = global_cmds[n]
+            nst = self._node_buf(n, buf)
+            kind = (DepKind.TRUE if red.include_current_value
+                    else DepKind.ANTI)
+            for sub, writer in nst.last_writers.query(full):
+                gc.add_dependency(writer, kind)
+            for rreg, reader in nst.last_readers:
+                gc.add_dependency(reader, DepKind.ANTI)
+            if n in partial_cmds:
+                pc = partial_cmds[n]
+                self.commands[n].append(pc)
+                new_cmds.append(pc)
+                gc.add_dependency(pc, DepKind.TRUE)
+            if self._last_horizon[n] is not None:
+                gc.add_dependency(self._last_horizon[n], DepKind.SYNC)
+            elif not gc.dependencies and self._last_epoch[n] is not None:
+                gc.add_dependency(self._last_epoch[n], DepKind.SYNC)
+            nst.last_writers.update(full, gc)
+            nst.last_readers = []
+            self.commands[n].append(gc)
+            new_cmds.append(gc)
+
+        # the combined value is replicated on every node
+        self._ownership_map(buf).update(full, frozenset(range(self.num_nodes)))
 
 
 def generate_cdag(tdag: TaskGraph, num_nodes: int) -> CommandGraphGenerator:

@@ -29,7 +29,9 @@ from .region import Box, Region
 class Payload:
     source: int
     msg_id: int
-    transfer_id: tuple[int, int]
+    # (task id, buffer id) for push traffic; (task id, buffer id, 1) for
+    # reduction-gather traffic (see instruction_graph.Pilot)
+    transfer_id: tuple
     box: Box
     data: np.ndarray
 
@@ -95,6 +97,19 @@ class _PendingReceive:
     awaits: list[Instruction] = field(default_factory=list)  # AWAIT_RECEIVE children
 
 
+@dataclass
+class _PendingGather:
+    """A GATHER_RECEIVE: one fixed-stride slot per expected peer (§2.2).
+
+    Unlike push traffic, gather payloads are addressed by their *source*
+    rank — every peer sends the same buffer-space box (a reduction partial),
+    and the arbiter lands payload ``p`` at ``arr[p.source]`` of the gather
+    staging allocation.  Completion requires one payload from every source.
+    """
+    instr: Instruction                 # GATHER_RECEIVE
+    remaining: set                     # source ranks still outstanding
+
+
 class ReceiveArbiter:
     """Per-node receive-arbitration state machine (paper §4.2).
 
@@ -107,17 +122,23 @@ class ReceiveArbiter:
         self.node = node
         self.comm = comm
         self.store = store                      # allocation id -> ndarray
-        self.pending: dict[tuple[int, int], list[_PendingReceive]] = defaultdict(list)
-        self.early_payloads: dict[tuple[int, int], list[Payload]] = defaultdict(list)
-        self.received: dict[tuple[int, int], Region] = defaultdict(Region.empty)
+        self.pending: dict[tuple, list[_PendingReceive]] = defaultdict(list)
+        self.pending_gathers: dict[tuple, list[_PendingGather]] = defaultdict(list)
+        self.early_payloads: dict[tuple, list[Payload]] = defaultdict(list)
+        self.received: dict[tuple, Region] = defaultdict(Region.empty)
 
     def has_pending(self) -> bool:
         """Whether any receive is in flight (executor gates polling on this)."""
         return (any(self.pending.values())
+                or any(self.pending_gathers.values())
                 or any(self.early_payloads.values()))
 
     def begin(self, instr: Instruction) -> None:
-        if instr.itype in (InstructionType.RECEIVE, InstructionType.SPLIT_RECEIVE):
+        if instr.itype == InstructionType.GATHER_RECEIVE:
+            pg = _PendingGather(instr=instr,
+                                remaining=set(instr.gather_sources))
+            self.pending_gathers[instr.transfer_id].append(pg)
+        elif instr.itype in (InstructionType.RECEIVE, InstructionType.SPLIT_RECEIVE):
             pr = _PendingReceive(instr=instr, remaining=instr.recv_region)
             self.pending[instr.transfer_id].append(pr)
         elif instr.itype == InstructionType.AWAIT_RECEIVE:
@@ -137,6 +158,11 @@ class ReceiveArbiter:
         slices = tuple(slice(o, o + s) for o, s in zip(off, payload.box.shape))
         arr[slices] = payload.data
 
+    def _land_gather(self, pg: _PendingGather, payload: Payload) -> None:
+        """Land a reduction partial at its source rank's fixed-stride slot."""
+        arr = self.store[pg.instr.recv_alloc.aid]
+        arr[payload.source] = payload.data.reshape(arr.shape[1:])
+
     def step(self, completions: list[Instruction]) -> None:
         """Drain mailboxes; append completed instructions to ``completions``."""
         pilots, payloads = self.comm.poll(self.node)
@@ -144,6 +170,32 @@ class ReceiveArbiter:
         # payload itself carries geometry, so pilots only update accounting.
         for p in payloads:
             self.early_payloads[p.transfer_id].append(p)
+        # gather receives: match by (transfer id, source), complete when every
+        # expected peer landed exactly once
+        for tid, plist in list(self.early_payloads.items()):
+            pgs = self.pending_gathers.get(tid)
+            if not pgs:
+                continue
+            still: list[Payload] = []
+            for payload in plist:
+                landed = False
+                for pg in pgs:
+                    if payload.source in pg.remaining:
+                        self._land_gather(pg, payload)
+                        pg.remaining.discard(payload.source)
+                        landed = True
+                        break
+                if not landed:
+                    still.append(payload)
+            self.early_payloads[tid] = still
+        for tid, pgs in list(self.pending_gathers.items()):
+            done = [pg for pg in pgs
+                    if not pg.remaining and pg.instr.state == "issued"]
+            for pg in done:
+                completions.append(pg.instr)
+                pgs.remove(pg)
+            if not pgs:
+                del self.pending_gathers[tid]
         for tid, plist in list(self.early_payloads.items()):
             prs = self.pending.get(tid, [])
             if not prs:

@@ -118,6 +118,25 @@ class BufferView:
         return tuple(shape) if shape else ()
 
 
+class ReductionView:
+    """Kernel-facing reduction output (paper §2.2).
+
+    Wraps the identity-filled accumulator scratch of one device chunk; the
+    kernel calls :meth:`contribute` with per-item contribution values (for a
+    scalar reduction: any array of contributions).  The runtime owns the
+    partial/exchange/combine pipeline — the kernel never sees peer data.
+    """
+
+    __slots__ = ("acc", "op")
+
+    def __init__(self, acc: np.ndarray, op):
+        self.acc = acc
+        self.op = op
+
+    def contribute(self, values) -> None:
+        self.op.contribute(self.acc, values)
+
+
 class Executor:
     """Per-node executor thread harboring the out-of-order engine.
 
@@ -171,6 +190,9 @@ class Executor:
             InstructionType.FREE: self._exec_free,
             InstructionType.COPY: self._exec_copy,
             InstructionType.SEND: self._exec_send,
+            InstructionType.FILL_IDENTITY: self._exec_fill_identity,
+            InstructionType.LOCAL_REDUCE: self._exec_local_reduce,
+            InstructionType.GLOBAL_REDUCE: self._exec_global_reduce,
             InstructionType.DEVICE_KERNEL: self._exec_kernel,
             InstructionType.HOST_TASK: self._exec_kernel,
         }
@@ -316,7 +338,7 @@ class Executor:
             self.tracer.issue(self.node, instr)
         it = instr.itype
         if it in (InstructionType.RECEIVE, InstructionType.SPLIT_RECEIVE,
-                  InstructionType.AWAIT_RECEIVE):
+                  InstructionType.AWAIT_RECEIVE, InstructionType.GATHER_RECEIVE):
             self.arbiter.begin(instr)       # completion via arbiter polling
             return
         if it in (InstructionType.HORIZON, InstructionType.EPOCH):
@@ -430,11 +452,66 @@ class Executor:
             source=self.node, msg_id=instr.msg_id,
             transfer_id=instr.transfer_id, box=box, data=arr[sl].copy()))
 
+    def _exec_fill_identity(self, instr: Instruction) -> None:
+        red = instr.reduction
+        arr = self._arr(instr.allocation)
+        arr[...] = red.op.identity_acc(arr.shape, red.buffer.dtype)
+
+    def _exec_local_reduce(self, instr: Instruction) -> None:
+        """Fold the device partials into this node's partial accumulator.
+
+        Models a fused D2H + combine step; on a real backend this is a small
+        device reduction kernel plus one staging copy (Celerity folds on
+        device 0) — the combine-tree shape is identical.
+        """
+        red = instr.reduction
+        op = red.op
+        acc = None
+        for src in instr.reduce_srcs:
+            arr = self._arr(src)
+            acc = arr.copy() if acc is None else op.combine(acc, arr)
+        if acc is None:
+            acc = op.identity_acc(red.buffer.shape, red.buffer.dtype)
+        self._arr(instr.dst_alloc)[...] = acc
+
+    def _exec_global_reduce(self, instr: Instruction) -> None:
+        """Fold all rank partials in canonical node order into the buffer.
+
+        ``participants`` is the replicated-deterministic fold order; with the
+        exact-sum accumulator the result is additionally partition
+        independent (see reduction.py).  ``include_current`` lifts the
+        buffer's previous (replicated) contents into accumulator space and
+        folds them in exactly once, after the partials.
+        """
+        red = instr.reduction
+        op, buf = red.op, red.buffer
+        gather_arr = (self._arr(instr.src_alloc)
+                      if instr.src_alloc is not None else None)
+        own = (self._arr(instr.reduce_srcs[0])
+               if instr.reduce_srcs else None)
+        acc = None
+        for s in instr.participants:
+            part = own if s == self.node else gather_arr[s]
+            acc = part.copy() if acc is None else op.combine(acc, part)
+        if acc is None:                      # no participants: identity
+            acc = op.identity_acc(buf.shape, buf.dtype)
+        dst = instr.dst_alloc
+        darr = self._arr(dst)
+        box = buf.full_box
+        sl = tuple(slice(a - o, b - o) for a, b, o in
+                   zip(box.min, box.max, dst.box.min))
+        if instr.include_current:
+            acc = op.combine(acc, op.lift(darr[sl], buf.dtype))
+        darr[sl] = op.finalize(acc, buf.dtype)
+
     def _exec_kernel(self, instr: Instruction) -> None:
         views = []
         for b in instr.bindings:
             arr = self._arr(b.allocation)
             views.append(BufferView(arr, b.allocation, b, self.check_bounds))
+        for rb in instr.red_bindings:
+            views.append(ReductionView(self._arr(rb.allocation),
+                                       rb.reduction.op))
         if instr.kernel_fn is not None:
             instr.kernel_fn(instr.chunk, *views)
         if self.check_bounds:

@@ -29,6 +29,7 @@ from .allocation import (Allocation, PINNED_HOST, USER_HOST, device_memory,
                          is_device_memory)
 from .buffer import Accessor, VirtualBuffer
 from .command_graph import Command, CommandType
+from .reduction import Reduction
 from .region import Box, Region, RegionMap, split_box
 from .task_graph import DepKind, TaskType
 
@@ -41,6 +42,13 @@ class InstructionType(enum.Enum):
     RECEIVE = "receive"
     SPLIT_RECEIVE = "split_receive"
     AWAIT_RECEIVE = "await_receive"
+    # reduction pipeline (§2.2): identity-fill device scratch, combine device
+    # partials per node, gather peer partials (multi-peer, pilot-driven,
+    # fixed-stride slots) and fold them in canonical node order
+    FILL_IDENTITY = "fill_identity"
+    LOCAL_REDUCE = "local_reduce"
+    GATHER_RECEIVE = "gather_receive"
+    GLOBAL_REDUCE = "global_reduce"
     DEVICE_KERNEL = "device_kernel"
     HOST_TASK = "host_task"
     HORIZON = "horizon"
@@ -59,13 +67,30 @@ class AccessorBinding:
 
 
 @dataclass
+class ReductionBinding:
+    """Executor-facing: the identity-filled scratch a kernel reduces into."""
+    reduction: Reduction
+    allocation: Allocation        # per-device accumulator scratch
+
+
+@dataclass
 class Pilot:
-    """Pilot message: announces an inbound transfer to the receiver (§3.4)."""
+    """Pilot message: announces an inbound transfer to the receiver (§3.4).
+
+    ``transfer_id`` is ``(task id, buffer id)`` for push traffic and
+    ``(task id, buffer id, 1)`` for reduction-gather traffic, so the two
+    protocols never alias; the arbiter routes by transfer id and lands
+    gather payloads at the fixed-stride slot of their *source* rank rather
+    than at a buffer-space offset.  ``gather`` is wire metadata only (a
+    real MPI transport would select the superaccumulator datatype from
+    it); the in-process arbiter treats pilots as accounting.
+    """
     source: int
     target: int
-    transfer_id: tuple[int, int]  # (task id, buffer id)
+    transfer_id: tuple
     box: Box                      # buffer-space box being sent
     msg_id: int
+    gather: bool = False          # reduction-gather transfer (metadata)
 
 
 @dataclass
@@ -84,15 +109,26 @@ class Instruction:
     dest: Optional[int] = None
     msg_id: Optional[int] = None
     send_box: Optional[Box] = None
-    # RECEIVE / SPLIT_RECEIVE / AWAIT_RECEIVE
-    transfer_id: Optional[tuple[int, int]] = None
+    # RECEIVE / SPLIT_RECEIVE / AWAIT_RECEIVE / GATHER_RECEIVE
+    transfer_id: Optional[tuple] = None
     recv_region: Optional[Region] = None
     recv_alloc: Optional[Allocation] = None
     split_parent: Optional["Instruction"] = None
+    # reductions: FILL_IDENTITY fills ``allocation``; LOCAL_REDUCE folds
+    # ``reduce_srcs`` into ``dst_alloc``; GATHER_RECEIVE expects one partial
+    # per rank in ``gather_sources`` landed at slot=rank in ``recv_alloc``;
+    # GLOBAL_REDUCE folds slots of ``src_alloc`` (+ own partial in
+    # ``reduce_srcs``) over ``participants`` in node order into ``dst_alloc``
+    reduction: Optional[Reduction] = None
+    reduce_srcs: tuple[Allocation, ...] = ()
+    gather_sources: tuple[int, ...] = ()
+    participants: tuple[int, ...] = ()
+    include_current: bool = False
     # DEVICE_KERNEL / HOST_TASK
     kernel_fn: Optional[Callable] = None
     chunk: Optional[Box] = None
     bindings: tuple[AccessorBinding, ...] = ()
+    red_bindings: tuple[ReductionBinding, ...] = ()
     device: Optional[int] = None
     name: str = ""
     command: Optional[Command] = None
@@ -154,6 +190,10 @@ class IdagGenerator:
         self._allocs: dict[tuple[int, int], list[Allocation]] = {}
         self._coherence: dict[int, RegionMap] = {}      # region -> frozenset(mids)
         self._mem: dict[tuple[int, int], _MemState] = {}
+        # in-flight reduction state, keyed by reduction transfer id:
+        # device partial scratches (+ producing kernels), the node partial
+        # (+ its LOCAL_REDUCE) and the partial-broadcast sends
+        self._red_state: dict[tuple, dict] = {}
         self._buffers: dict[int, VirtualBuffer] = {}
         self._msg_ids = itertools.count(node * 1_000_000)
         self._last_horizon: Optional[Instruction] = None
@@ -377,6 +417,10 @@ class IdagGenerator:
             self._compile_push(cmd)
         elif cmd.ctype == CommandType.AWAIT_PUSH:
             self._compile_await_push(cmd)
+        elif cmd.ctype == CommandType.REDUCE_PARTIAL:
+            self._compile_reduce_partial(cmd)
+        elif cmd.ctype == CommandType.REDUCE_GLOBAL:
+            self._compile_reduce_global(cmd)
         elif cmd.ctype == CommandType.HORIZON:
             self._compile_sync(cmd, InstructionType.HORIZON)
         elif cmd.ctype == CommandType.EPOCH:
@@ -415,6 +459,10 @@ class IdagGenerator:
             add(cmd.buffer.bid, PINNED_HOST, cmd.region.bounding_box())
         elif cmd.ctype == CommandType.AWAIT_PUSH:
             add(cmd.buffer.bid, PINNED_HOST, cmd.region.bounding_box())
+        elif cmd.ctype == CommandType.REDUCE_GLOBAL:
+            # the combined result lands in the buffer's host backing; the
+            # partial/gather scratches are unhinted one-shot allocations
+            add(cmd.buffer.bid, PINNED_HOST, cmd.buffer.full_box)
         return reqs
 
     # -- execution commands (§3.1, §3.3) -------------------------------------
@@ -459,12 +507,26 @@ class IdagGenerator:
                 if acc.mode.is_consumer:
                     deps.extend(self.make_coherent(buf, mid, reg))
                 bindings.append(AccessorBinding(acc, alloc, reg))
+            # reduction outputs: one identity-filled accumulator scratch per
+            # (device chunk, reduction) — never the buffer's own allocation,
+            # since every chunk "writes" the same full-buffer region
+            red_bindings: list[ReductionBinding] = []
+            fills: list[Instruction] = []
+            for red in task.reductions:
+                buf = red.buffer
+                self._register(buf)
+                scratch, fill = self._emit_reduction_scratch(red, mid)
+                red_bindings.append(ReductionBinding(red, scratch))
+                fills.append(fill)
             itype = InstructionType.HOST_TASK if is_host else InstructionType.DEVICE_KERNEL
             qd = ("host",) if is_host else ("device", d)
             instr = Instruction(
                 itype, node=self.node, queue=qd, kernel_fn=task.kernel_fn,
                 chunk=ch, bindings=tuple(bindings),
+                red_bindings=tuple(red_bindings),
                 device=None if is_host else d, name=task.name, command=cmd)
+            for f in fills:
+                instr.add_dependency(f, DepKind.TRUE)
             for b in bindings:
                 ai = getattr(b.allocation, "alloc_instr", None)
                 if ai is not None:
@@ -485,6 +547,11 @@ class IdagGenerator:
             elif not instr.dependencies and self._last_epoch is not None:
                 instr.add_dependency(self._last_epoch, DepKind.SYNC)
             self._emit(instr)
+            for rb in red_bindings:
+                rtid = (task.tid, rb.reduction.buffer.bid, 1)
+                st = self._red_state.setdefault(
+                    rtid, {"device": [], "partial": None, "sends": []})
+                st["device"].append((rb.allocation, instr))
             # post-emit state updates: writes establish new producers/coherence
             for b in bindings:
                 if b.accessor.mode.is_producer:
@@ -598,6 +665,162 @@ class IdagGenerator:
         if len(uniq) <= 1 or all(u.contains(cmd.region) for u in uniq):
             return uniq[:1]
         return uniq
+
+    # -- reductions -----------------------------------------------------------
+    def _emit_scratch_alloc(self, mid: int, box: Box, dtype,
+                            name: str) -> Allocation:
+        """Emit a one-shot scratch ALLOC (outside the resize machinery),
+        sync-anchored like every other allocation."""
+        scratch = Allocation(mid=mid, bid=None, box=box, dtype=dtype)
+        alloc_instr = self._emit(Instruction(
+            InstructionType.ALLOC, node=self.node,
+            queue=self._queue_for_mem(mid), allocation=scratch, name=name))
+        if self._last_horizon is not None:
+            alloc_instr.add_dependency(self._last_horizon, DepKind.SYNC)
+        elif self._last_epoch is not None:
+            alloc_instr.add_dependency(self._last_epoch, DepKind.SYNC)
+        scratch.alloc_instr = alloc_instr  # type: ignore[attr-defined]
+        return scratch
+
+    def _emit_reduction_scratch(self, red: Reduction,
+                                mid: int) -> tuple[Allocation, Instruction]:
+        """Allocate + identity-fill one accumulator scratch in ``mid``."""
+        buf = red.buffer
+        scratch = self._emit_scratch_alloc(
+            mid, buf.full_box, red.op.acc_dtype(buf.dtype),
+            f"alloc red-partial {buf.name} M{mid}")
+        fill = self._emit(Instruction(
+            InstructionType.FILL_IDENTITY, node=self.node,
+            queue=self._queue_for_mem(mid), allocation=scratch, reduction=red,
+            name=f"fill-identity {buf.name} ({red.op.name}) M{mid}"))
+        fill.add_dependency(scratch.alloc_instr, DepKind.TRUE)
+        return scratch, fill
+
+    def _free_scratch(self, alloc: Allocation,
+                      anti: list[Instruction]) -> Instruction:
+        """Free a one-shot scratch once all ``anti`` users completed."""
+        fr = self._emit(Instruction(
+            InstructionType.FREE, node=self.node,
+            queue=self._queue_for_mem(alloc.mid), allocation=alloc,
+            name=f"free {alloc}"))
+        for a in anti:
+            fr.add_dependency(a, DepKind.ANTI)
+        alloc.live = False
+        return fr
+
+    def _compile_reduce_partial(self, cmd: Command) -> None:
+        """Fold device partials into one node partial, broadcast it (§2.2)."""
+        red, buf = cmd.reduction, cmd.buffer
+        st = self._red_state[cmd.transfer_id]
+        device_parts: list[tuple[Allocation, Instruction]] = st["device"]
+        partial = self._emit_scratch_alloc(
+            PINNED_HOST, buf.full_box, red.op.acc_dtype(buf.dtype),
+            f"alloc red-node-partial {buf.name}")
+        lr = Instruction(
+            InstructionType.LOCAL_REDUCE, node=self.node, queue=("host",),
+            reduction=red, reduce_srcs=tuple(a for a, _ in device_parts),
+            dst_alloc=partial, command=cmd,
+            name=f"local-reduce {buf.name} ({red.op.name})")
+        lr.add_dependency(partial.alloc_instr, DepKind.TRUE)
+        for alloc, producer in device_parts:
+            lr.add_dependency(producer, DepKind.TRUE)
+            ai = getattr(alloc, "alloc_instr", None)
+            if ai is not None:
+                lr.add_dependency(ai, DepKind.TRUE)
+        self._emit(lr)
+        st["partial"] = (partial, lr)
+        for alloc, _ in device_parts:
+            self._free_scratch(alloc, [lr])
+        # broadcast the node partial to every other rank; the receiver's
+        # GATHER_RECEIVE matches this traffic by its 3-tuple transfer id
+        # and lands each payload at its SOURCE rank's slot
+        for target in cmd.targets:
+            msg_id = next(self._msg_ids)
+            send = Instruction(
+                InstructionType.SEND, node=self.node, queue=("comm",),
+                dest=target, msg_id=msg_id, send_box=buf.full_box,
+                recv_alloc=partial, transfer_id=cmd.transfer_id, command=cmd,
+                name=f"send red-partial {buf.name} ->N{target}")
+            send.add_dependency(lr, DepKind.TRUE)
+            if self._last_horizon is not None:
+                send.add_dependency(self._last_horizon, DepKind.SYNC)
+            self._emit(send)
+            st["sends"].append(send)
+            self.pilots.append(Pilot(source=self.node, target=target,
+                                     transfer_id=cmd.transfer_id,
+                                     box=buf.full_box, msg_id=msg_id,
+                                     gather=True))
+
+    def _compile_reduce_global(self, cmd: Command) -> None:
+        """Gather peer partials and fold them in canonical node order."""
+        red, buf = cmd.reduction, cmd.buffer
+        self._register(buf)
+        st = self._red_state.pop(cmd.transfer_id,
+                                 {"device": [], "partial": None, "sends": []})
+        own_partial = st["partial"]           # (alloc, LOCAL_REDUCE) | None
+        peers = tuple(s for s in cmd.participants if s != self.node)
+
+        gather_alloc = None
+        gather_instr = None
+        if peers:
+            # fixed-stride gather staging: slot s holds rank s's partial
+            slots = max(peers) + 1
+            gbox = Box((0,) * (buf.full_box.rank + 1), (slots,) + buf.shape)
+            gather_alloc = self._emit_scratch_alloc(
+                PINNED_HOST, gbox, red.op.acc_dtype(buf.dtype),
+                f"alloc red-gather {buf.name}")
+            gather_instr = Instruction(
+                InstructionType.GATHER_RECEIVE, node=self.node,
+                queue=("comm",), transfer_id=cmd.transfer_id,
+                recv_region=buf.full_region, recv_alloc=gather_alloc,
+                gather_sources=peers, reduction=red, command=cmd,
+                name=f"gather-recv {buf.name} <-{{{','.join(map(str, peers))}}}")
+            gather_instr.add_dependency(gather_alloc.alloc_instr, DepKind.TRUE)
+            if self._last_horizon is not None:
+                gather_instr.add_dependency(self._last_horizon, DepKind.SYNC)
+            self._emit(gather_instr)
+
+        # the combined value lands in the buffer's host backing allocation
+        dst = self.ensure_allocation(buf, PINNED_HOST, buf.full_box)
+        full = buf.full_region
+        if red.include_current_value:
+            # previous contents enter the fold exactly once — every node
+            # holds the same replicated value, so this stays deterministic
+            self.make_coherent(buf, PINNED_HOST, full)
+        ms = self._memstate(buf.bid, PINNED_HOST)
+        gi = Instruction(
+            InstructionType.GLOBAL_REDUCE, node=self.node, queue=("host",),
+            reduction=red, src_alloc=gather_alloc,
+            reduce_srcs=(own_partial[0],) if own_partial else (),
+            dst_alloc=dst, participants=cmd.participants,
+            include_current=red.include_current_value, command=cmd,
+            name=f"global-reduce {buf.name} ({red.op.name})")
+        ai = getattr(dst, "alloc_instr", None)
+        if ai is not None:
+            gi.add_dependency(ai, DepKind.TRUE)
+        if gather_instr is not None:
+            gi.add_dependency(gather_instr, DepKind.TRUE)
+        if own_partial is not None:
+            gi.add_dependency(own_partial[1], DepKind.TRUE)
+        kind = DepKind.TRUE if red.include_current_value else DepKind.OUTPUT
+        for sub, producer in ms.producers.query(full):
+            gi.add_dependency(producer, kind)
+        for r, reader in ms.readers:
+            if r.overlaps(full):
+                gi.add_dependency(reader, DepKind.ANTI)
+        if self._last_horizon is not None:
+            gi.add_dependency(self._last_horizon, DepKind.SYNC)
+        self._emit(gi)
+        ms.producers.update(full, gi)
+        ms.readers = [(r, t) for r, t in ms.readers
+                      if not r.difference(full).is_empty()]
+        self._coherence[buf.bid].update(full, frozenset([PINNED_HOST]))
+        # scratch lifetimes: the gather staging dies with the fold; the node
+        # partial must also outlive every outbound broadcast send
+        if gather_alloc is not None:
+            self._free_scratch(gather_alloc, [gi])
+        if own_partial is not None:
+            self._free_scratch(own_partial[0], [gi] + st["sends"])
 
     # -- synchronization (§3.5) ---------------------------------------------
     def _compile_sync(self, cmd: Command, itype: InstructionType) -> None:

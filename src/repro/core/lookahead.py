@@ -58,8 +58,11 @@ class LookaheadScheduler:
 
     # ------------------------------------------------------------------
     def _is_allocating(self, cmd: Command) -> bool:
+        # REDUCE_PARTIAL only touches one-shot scratch (never widened);
+        # REDUCE_GLOBAL writes the buffer's host backing and participates
         if cmd.ctype not in (CommandType.EXECUTION, CommandType.PUSH,
-                             CommandType.AWAIT_PUSH):
+                             CommandType.AWAIT_PUSH,
+                             CommandType.REDUCE_GLOBAL):
             return False
         out = False
         for (bid, mid), region in self.idag.allocation_requirements(cmd).items():

@@ -13,6 +13,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
 from .buffer import Accessor, AccessMode, VirtualBuffer
+from .reduction import Reduction
 from .region import Box, Region, RegionMap
 
 
@@ -39,6 +40,7 @@ class Task:
     name: str = ""
     index_space: Optional[Box] = None            # kernel tasks only
     accessors: tuple[Accessor, ...] = ()
+    reductions: tuple[Reduction, ...] = ()        # reduction outputs (§2.2)
     kernel_fn: Optional[Callable] = None          # (arrays..., chunk) -> outputs
     split_dims: tuple[int, ...] = (0,)            # user hint: split axes
     granularity: tuple[int, ...] = (1,)           # split alignment hint
@@ -70,6 +72,10 @@ class _BufferState:
     last_writers: RegionMap                     # Region -> Task
     last_readers: list[tuple[Region, Task]] = field(default_factory=list)
     initialized: Region = field(default_factory=Region.empty)
+    # replicated-pending: the last write was a reduction whose (replicated)
+    # result every node will hold once the producing task executes — readers
+    # take a TRUE dep on it but the CDAG will never generate pushes for it
+    pending_reduction: Optional[Task] = None
 
 
 class TaskGraph:
@@ -117,11 +123,21 @@ class TaskGraph:
                ttype: TaskType = TaskType.KERNEL,
                split_dims: Sequence[int] = (0,),
                granularity: Sequence[int] = (1,)) -> Task:
-        """Submit a command group; returns the created task."""
+        """Submit a command group; returns the created task.
+
+        ``accessors`` may mix :class:`Accessor` and :class:`Reduction`
+        descriptors — kernels bind reduction outputs exactly like accessors.
+        """
         if not isinstance(index_space, Box):
             index_space = Box.full(tuple(index_space))
+        plain = tuple(a for a in accessors if isinstance(a, Accessor))
+        reds = tuple(r for r in accessors if isinstance(r, Reduction))
+        if len({r.buffer.bid for r in reds}) != len(reds):
+            # would collide on the (task, buffer) reduction transfer id
+            raise ValueError(f"task {name!r} binds multiple reductions to "
+                             f"the same buffer")
         task = Task(ttype, name=name, index_space=index_space,
-                    accessors=tuple(accessors), kernel_fn=kernel_fn,
+                    accessors=plain, reductions=reds, kernel_fn=kernel_fn,
                     split_dims=tuple(split_dims), granularity=tuple(granularity))
 
         for acc in task.accessors:
@@ -152,6 +168,33 @@ class TaskGraph:
                 st.last_writers.update(region, task)
                 st.last_readers = [(r, t) for r, t in st.last_readers
                                    if not r.difference(region).is_empty()]
+                # any overwrite breaks the pure replicated-pending state
+                st.pending_reduction = None
+
+        # reduction outputs: a true-dependency write of the WHOLE buffer on
+        # every node at once (N partial producers -> 1 replicated value);
+        # with include_current_value the previous contents are consumed too
+        for red in task.reductions:
+            st = self._state(red.buffer)
+            full = red.buffer.full_region
+            if red.include_current_value:
+                known = st.initialized.union(self._written_region(st))
+                missing = full.difference(known)
+                if not missing.is_empty():
+                    self.warnings.append(
+                        f"uninitialized read of {red.buffer.name} region "
+                        f"{missing} in reduction of task {name}")
+            for rregion, reader in st.last_readers:
+                task.add_dependency(reader, DepKind.ANTI)
+            for sub, writer in st.last_writers.query(full):
+                task.add_dependency(writer,
+                                    DepKind.TRUE if red.include_current_value
+                                    else DepKind.OUTPUT)
+            st.last_writers.update(full, task)
+            st.last_readers = []
+            st.initialized = full
+            st.pending_reduction = task
+
         if not task.dependencies and self._last_epoch is not None:
             task.add_dependency(self._last_epoch, DepKind.SYNC)
         if self._last_horizon is not None:
@@ -216,3 +259,8 @@ class TaskGraph:
     # ------------------------------------------------------------------
     def kernel_tasks(self) -> list[Task]:
         return [t for t in self.tasks if t.ttype in (TaskType.KERNEL, TaskType.HOST)]
+
+    def pending_reductions(self) -> dict[int, Task]:
+        """Buffers whose last write is a replicated-pending reduction."""
+        return {bid: st.pending_reduction for bid, st in self._buffers.items()
+                if st.pending_reduction is not None}

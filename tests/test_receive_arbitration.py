@@ -14,7 +14,7 @@ import numpy as np
 from repro.core import Box, Region
 from repro.core.allocation import Allocation, PINNED_HOST
 from repro.core.communicator import Communicator, Payload, ReceiveArbiter
-from repro.core.instruction_graph import Instruction, InstructionType
+from repro.core.instruction_graph import Instruction, InstructionType, Pilot
 
 
 def make_split_receive(alloc, tid, union_box, consumer_boxes):
@@ -125,6 +125,121 @@ def test_payload_before_receive_posted():
     done = drain(arb)
     assert recv in done
     np.testing.assert_array_equal(store[alloc.aid], np.arange(4.0))
+
+
+def test_multi_fragment_with_pilots_after_split():
+    """Pilots and payloads arrive AFTER the receive was already split into
+    await-receives, in multiple fragments per consumer half; each await
+    completes exactly when its half is fully covered."""
+    union = Box((0,), (8,))
+    comm, store, alloc, arb = setup(union)
+    tid = (7, 0)
+    split, (aw0, aw1) = make_split_receive(
+        alloc, tid, union, [Box((0,), (4,)), Box((4,), (8,))])
+    for i in (split, aw0, aw1):
+        i.state = "issued"
+        arb.begin(i)
+    assert drain(arb) == []                   # nothing in flight yet
+    # pilots announce four fragments only AFTER the split was posted
+    frags = [Box((0,), (2,)), Box((2,), (4,)), Box((4,), (6,)), Box((6,), (8,))]
+    for m, b in enumerate(frags):
+        comm.post_pilot(Pilot(source=1, target=0, transfer_id=tid, box=b,
+                              msg_id=m))
+    assert drain(arb) == []                   # pilots alone complete nothing
+    # fragments land out of order; aw1 completes before aw0
+    comm.isend(0, Payload(1, 2, tid, frags[2], np.full(2, 3.0)))
+    comm.isend(0, Payload(1, 3, tid, frags[3], np.full(2, 4.0)))
+    done = drain(arb)
+    assert aw1 in done and aw0 not in done and split not in done
+    comm.isend(0, Payload(1, 0, tid, frags[0], np.full(2, 1.0)))
+    done = drain(arb)
+    assert done == []                         # half of aw0 still missing
+    comm.isend(0, Payload(1, 1, tid, frags[1], np.full(2, 2.0)))
+    done = drain(arb)
+    assert aw0 in done and split in done
+    np.testing.assert_array_equal(store[alloc.aid],
+                                  np.repeat([1.0, 2.0, 3.0, 4.0], 2))
+    # once the executor marks the split done, the arbiter drops the entry
+    split.state = "done"
+    drain(arb)
+    assert not arb.has_pending()
+
+
+def make_gather(alloc, tid, box, sources):
+    g = Instruction(InstructionType.GATHER_RECEIVE, node=0, transfer_id=tid,
+                    recv_region=Region.from_box(box), recv_alloc=alloc,
+                    gather_sources=tuple(sources))
+    g.state = "issued"
+    return g
+
+
+def test_gather_receive_lands_by_source_slot():
+    """Reduction partials from several peers land at slot=source rank of the
+    fixed-stride gather staging, regardless of arrival order."""
+    comm = Communicator(4)
+    store = {}
+    # slots for ranks 0..3, one partial element each
+    galloc = Allocation(mid=PINNED_HOST, bid=None, box=Box((0, 0), (4, 1)))
+    store[galloc.aid] = np.full((4, 1), -1.0)
+    arb = ReceiveArbiter(0, comm, store)
+    tid = (9, 0, 1)
+    g = make_gather(galloc, tid, Box((0,), (1,)), sources=[1, 2, 3])
+    arb.begin(g)
+    assert arb.has_pending()
+    # peers arrive out of order; completion only after ALL landed
+    comm.isend(0, Payload(3, 0, tid, Box((0,), (1,)), np.array([30.0])))
+    comm.isend(0, Payload(1, 1, tid, Box((0,), (1,)), np.array([10.0])))
+    done = drain(arb)
+    assert g not in done
+    comm.isend(0, Payload(2, 2, tid, Box((0,), (1,)), np.array([20.0])))
+    done = drain(arb)
+    assert g in done
+    np.testing.assert_array_equal(store[galloc.aid],
+                                  [[-1.0], [10.0], [20.0], [30.0]])
+    assert not arb.has_pending()
+
+
+def test_gather_payload_before_receive_posted():
+    """An eager peer's partial arrives before GATHER_RECEIVE is issued; it is
+    buffered as early and landed when the gather begins."""
+    comm = Communicator(2)
+    store = {}
+    galloc = Allocation(mid=PINNED_HOST, bid=None, box=Box((0, 0), (2, 1)))
+    store[galloc.aid] = np.zeros((2, 1))
+    arb = ReceiveArbiter(0, comm, store)
+    tid = (10, 0, 1)
+    comm.isend(0, Payload(1, 0, tid, Box((0,), (1,)), np.array([5.5])))
+    drain(arb)                                # buffered, nothing pending
+    g = make_gather(galloc, tid, Box((0,), (1,)), sources=[1])
+    arb.begin(g)
+    done = drain(arb)
+    assert g in done
+    assert store[galloc.aid][1, 0] == 5.5
+
+
+def test_gather_and_push_traffic_do_not_cross():
+    """A push payload with the 2-tuple transfer id never lands in a gather
+    slot with the 3-tuple reduction id of the same (task, buffer)."""
+    comm = Communicator(2)
+    store = {}
+    box = Box((0,), (1,))
+    galloc = Allocation(mid=PINNED_HOST, bid=None, box=Box((0, 0), (2, 1)))
+    palloc = Allocation(mid=PINNED_HOST, bid=0, box=box)
+    store[galloc.aid] = np.zeros((2, 1))
+    store[palloc.aid] = np.zeros(1)
+    arb = ReceiveArbiter(0, comm, store)
+    g = make_gather(galloc, (11, 0, 1), box, sources=[1])
+    recv = Instruction(InstructionType.RECEIVE, node=0, transfer_id=(11, 0),
+                       recv_region=Region.from_box(box), recv_alloc=palloc)
+    recv.state = "issued"
+    arb.begin(g)
+    arb.begin(recv)
+    comm.isend(0, Payload(1, 0, (11, 0), box, np.array([1.0])))
+    comm.isend(0, Payload(1, 1, (11, 0, 1), box, np.array([2.0])))
+    done = drain(arb)
+    assert {g, recv} == set(done)
+    np.testing.assert_array_equal(store[palloc.aid], [1.0])
+    np.testing.assert_array_equal(store[galloc.aid], [[0.0], [2.0]])
 
 
 def test_interleaved_transfers_do_not_cross():

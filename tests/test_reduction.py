@@ -1,0 +1,390 @@
+"""Distributed reduction subsystem tests (§2.2 + acceptance criteria).
+
+Covers the value semantics (exact-sum superaccumulator vs ``math.fsum``),
+the end-to-end pipeline on 1/2/4 simulated nodes (bit-for-bit partition
+independence), visibility of the new instruction types in the IDAG, and the
+no-serialization property for unrelated kernels.
+"""
+
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (IdagGenerator, InstructionType, Runtime, TaskGraph,
+                        all_range, generate_cdag, one_to_one, read,
+                        read_write, reduction, write)
+from repro.core.command_graph import CommandType
+from repro.core.reduction import ReductionOp, _make_op
+from repro.core.region import Box
+
+NODE_GRIDS = [(1, 1), (2, 2), (4, 1)]
+
+
+# -- value semantics ---------------------------------------------------------
+def test_exact_sum_matches_fsum_any_split():
+    rng = np.random.default_rng(0)
+    vals = list(rng.normal(size=257) * 10.0 ** rng.integers(-8, 8, size=257))
+    op = _make_op("sum", None)
+    oracle = math.fsum(vals)
+    for nsplit in (1, 2, 3, 7, 257):
+        accs = []
+        bounds = np.linspace(0, len(vals), nsplit + 1).astype(int)
+        for i in range(nsplit):
+            acc = op.identity_acc((1,), np.dtype(np.float64))
+            op.contribute(acc, np.asarray(vals[bounds[i]:bounds[i + 1]]))
+            accs.append(acc)
+        total = accs[0]
+        for a in accs[1:]:
+            total = op.combine(total, a)
+        assert op.finalize(total, np.dtype(np.float64))[0] == oracle
+
+
+def test_minmax_prod_and_custom_ops():
+    data = np.array([3.0, -7.5, 2.25, 11.0])
+    for name, expect in [("max", 11.0), ("min", -7.5), ("prod", np.prod(data))]:
+        op = _make_op(name, None)
+        acc = op.identity_acc((1,), np.dtype(np.float64))
+        op.contribute(acc, data)
+        assert op.finalize(acc, np.dtype(np.float64))[0] == expect
+    op = _make_op(lambda a, b: np.hypot(a, b), 0.0)
+    acc = op.identity_acc((1,), np.dtype(np.float64))
+    op.contribute(acc, data)
+    assert acc[0] == pytest.approx(np.sqrt((data ** 2).sum()))
+    with pytest.raises(ValueError):
+        _make_op(lambda a, b: a + b, None)   # custom op needs identity
+    with pytest.raises(ValueError):
+        _make_op("median", None)
+
+
+def test_minmax_integer_dtype_identity():
+    """Integer buffers get iinfo-based identities, not +/-inf (which cannot
+    be stored in an integer accumulator)."""
+    data = np.array([3, -7, 11], dtype=np.int64)
+    for name, expect in [("max", 11), ("min", -7)]:
+        op = _make_op(name, None)
+        acc = op.identity_acc((1,), np.dtype(np.int64))
+        op.contribute(acc, data)
+        assert op.finalize(acc, np.dtype(np.int64))[0] == expect
+
+
+def test_integer_max_reduction_runtime():
+    data = np.arange(32, dtype=np.int64) - 5
+    with Runtime(num_nodes=2, devices_per_node=2) as rt:
+        X = rt.buffer((32,), dtype=np.int64, init=data, name="X")
+        M = rt.buffer((1,), dtype=np.int64, init=np.zeros(1, np.int64),
+                      name="M")
+
+        def k(chunk, xv, red):
+            red.contribute(xv.get(chunk))
+
+        rt.submit("k", (32,), [read(X, one_to_one()), reduction(M, "max")], k)
+        assert int(rt.gather(M)[0]) == 26
+
+
+def test_exact_sum_rejects_non_finite():
+    op = _make_op("sum", None)
+    acc = op.identity_acc((1,), np.dtype(np.float64))
+    with pytest.raises(ValueError, match="non-finite"):
+        op.contribute(acc, np.array([1.0, np.inf]))
+
+
+def test_integer_sum_is_exact_beyond_2_53():
+    """int64 contributions lift as raw integers — no float64 round-trip."""
+    op = _make_op("sum", None)
+    acc = op.identity_acc((1,), np.dtype(np.int64))
+    op.contribute(acc, np.array([2 ** 53 + 1, 1], dtype=np.int64))
+    assert op.finalize(acc, np.dtype(np.int64))[0] == 2 ** 53 + 2
+
+
+def test_duplicate_reduction_buffer_rejected():
+    tdag = TaskGraph()
+    from repro.core import VirtualBuffer
+    X = VirtualBuffer(shape=(8,), initial_value=np.zeros(8), name="X")
+    E = VirtualBuffer(shape=(1,), initial_value=np.zeros(1), name="E")
+    with pytest.raises(ValueError, match="multiple reductions"):
+        tdag.submit("bad", (8,), [read(X, one_to_one()),
+                                  reduction(E, "sum"), reduction(E, "max")])
+
+
+# -- end-to-end: nbody total energy (acceptance criterion) -------------------
+def _nbody_energy(nodes, devs, N=48, steps=3, dt=0.01, eps=1e-3):
+    rng = np.random.default_rng(7)
+    P0 = rng.normal(size=(N, 3))
+    V0 = rng.normal(size=(N, 3)) * 0.1
+
+    def energies(P, Vrows, lo, hi):
+        d = P[None, :, :] - P[lo:hi, None, :]
+        r2 = (d * d).sum(-1) + eps
+        pot = -0.5 / np.sqrt(r2)
+        for r in range(hi - lo):
+            pot[r, lo + r] = 0.0
+        return 0.5 * (Vrows ** 2).sum(-1) + pot.sum(1)
+
+    with Runtime(num_nodes=nodes, devices_per_node=devs, trace=True) as rt:
+        P = rt.buffer((N, 3), init=P0, name="P")
+        V = rt.buffer((N, 3), init=V0, name="V")
+        E = rt.buffer((1,), init=np.zeros(1), name="E")
+
+        def timestep(chunk, p, v):
+            Pa = p.get(Box((0, 0), (N, 3)))
+            lo, hi = chunk.min[0], chunk.max[0]
+            d = Pa[None, :, :] - Pa[lo:hi, None, :]
+            r2 = (d * d).sum(-1) + eps
+            v.set(chunk, v.get(chunk) + (d / r2[..., None] ** 1.5).sum(1) * dt)
+
+        def update(chunk, v, p):
+            p.set(chunk, p.get(chunk) + v.get(chunk) * dt)
+
+        def energy(chunk, p, v, red):
+            Pa = p.get(Box((0, 0), (N, 3)))
+            lo, hi = chunk.min[0], chunk.max[0]
+            red.contribute(energies(Pa, v.get(chunk), lo, hi))
+
+        for _ in range(steps):
+            rt.submit("timestep", (N, 3),
+                      [read(P, all_range()), read_write(V, one_to_one())],
+                      timestep)
+            rt.submit("update", (N, 3),
+                      [read(V, one_to_one()), read_write(P, one_to_one())],
+                      update)
+        rt.submit("energy", (N, 3),
+                  [read(P, all_range()), read(V, one_to_one()),
+                   reduction(E, "sum")], energy)
+        e = float(rt.gather(E)[0])
+        assert rt.warnings == []
+        tracer = rt.tracer
+
+    # single-node oracle (math.fsum == correctly-rounded sum)
+    P, V = P0.copy(), V0.copy()
+    for _ in range(steps):
+        d = P[None, :, :] - P[:, None, :]
+        r2 = (d * d).sum(-1) + eps
+        V = V + (d / r2[..., None] ** 1.5).sum(1) * dt
+        P = P + V * dt
+    oracle = math.fsum(energies(P, V, 0, N))
+    return e, oracle, tracer
+
+
+@pytest.mark.parametrize("nodes,devs", NODE_GRIDS)
+def test_nbody_energy_bit_for_bit(nodes, devs):
+    e, oracle, tracer = _nbody_energy(nodes, devs)
+    assert e == oracle
+    kinds = {s.kind for ss in tracer.lanes().values() for s in ss}
+    assert "global_reduce" in kinds and "local_reduce" in kinds
+    assert "fill_identity" in kinds
+    if nodes > 1:
+        assert "gather_receive" in kinds
+
+
+# -- end-to-end: wavesim residual norm (acceptance criterion) ----------------
+def _wavesim_residual(nodes, devs, H=24, W=16, steps=3, c=0.25):
+    rng = np.random.default_rng(3)
+    u0 = np.zeros((H, W))
+    u1 = rng.normal(size=(H, W)) * 0.01
+    u1[0, :] = u1[-1, :] = u1[:, 0] = u1[:, -1] = 0.0
+
+    def step_kernel(chunk, um_v, u_v, un_v):
+        lo, hi = chunk.min[0], chunk.max[0]
+        ext = Box((max(0, lo - 1), 0), (min(H, hi + 1), W))
+        u = u_v.get(ext)
+        um = um_v.get(chunk)
+        pad = lo - ext.min[0]
+        out = np.empty((hi - lo, W))
+        for r in range(hi - lo):
+            g, gi = r + pad, lo + r
+            if gi == 0 or gi == H - 1:
+                out[r] = 0.0
+                continue
+            row = u[g]
+            lap = (u[g - 1] + u[g + 1] + np.roll(row, 1) + np.roll(row, -1)
+                   - 4 * row)
+            out[r] = 2 * row - um[r] + c * lap
+            out[r, 0] = out[r, -1] = 0.0
+        un_v.set(chunk, out)
+
+    def residual(chunk, ua, ub, red):
+        d = ub.get(chunk) - ua.get(chunk)
+        red.contribute(d * d)
+
+    from repro.core import neighborhood
+    with Runtime(num_nodes=nodes, devices_per_node=devs) as rt:
+        B = [rt.buffer((H, W), init=u0, name="um"),
+             rt.buffer((H, W), init=u1, name="u"),
+             rt.buffer((H, W), init=np.zeros((H, W)), name="un")]
+        R2 = rt.buffer((1,), init=np.zeros(1), name="R2")
+        for s in range(steps):
+            um, u, un = B[s % 3], B[(s + 1) % 3], B[(s + 2) % 3]
+            rt.submit(f"wave{s}", (H, W),
+                      [read(um, one_to_one()), read(u, neighborhood((1, 0))),
+                       write(un, one_to_one())], step_kernel)
+        rt.submit("residual", (H, W),
+                  [read(B[steps % 3], one_to_one()),
+                   read(B[(steps + 1) % 3], one_to_one()),
+                   reduction(R2, "sum")], residual)
+        res2 = float(rt.gather(R2)[0])
+        last = rt.gather(B[(steps + 1) % 3])
+        prev = rt.gather(B[steps % 3])
+        assert rt.warnings == []
+    return res2, math.fsum(((last - prev) ** 2).ravel())
+
+
+@pytest.mark.parametrize("nodes,devs", NODE_GRIDS)
+def test_wavesim_residual_bit_for_bit(nodes, devs):
+    res2, oracle = _wavesim_residual(nodes, devs)
+    assert res2 == oracle
+
+
+# -- include_current_value / other ops end-to-end ----------------------------
+@pytest.mark.parametrize("nodes", [1, 2, 4])
+def test_include_current_value_folds_once(nodes):
+    data = np.arange(32.0)
+    with Runtime(num_nodes=nodes, devices_per_node=1) as rt:
+        X = rt.buffer((32,), init=data, name="X")
+        E = rt.buffer((1,), init=np.full(1, 5.5), name="E")
+
+        def k(chunk, xv, red):
+            red.contribute(xv.get(chunk))
+
+        rt.submit("k", (32,),
+                  [read(X, one_to_one()),
+                   reduction(E, "sum", include_current_value=True)], k)
+        out = float(rt.gather(E)[0])
+    assert out == math.fsum(list(data) + [5.5])
+
+
+@pytest.mark.parametrize("op,expect", [("max", 31.0), ("min", 0.0)])
+def test_minmax_reduction_runtime(op, expect):
+    data = np.arange(32.0)
+    with Runtime(num_nodes=2, devices_per_node=2) as rt:
+        X = rt.buffer((32,), init=data, name="X")
+        M = rt.buffer((1,), init=np.zeros(1), name="M")
+
+        def k(chunk, xv, red):
+            red.contribute(xv.get(chunk))
+
+        rt.submit("k", (32,), [read(X, one_to_one()), reduction(M, op)], k)
+        assert float(rt.gather(M)[0]) == expect
+
+
+# -- TDAG replicated-pending state -------------------------------------------
+def test_tdag_tracks_pending_reduction():
+    tdag = TaskGraph(horizon_step=100)
+    from repro.core import VirtualBuffer
+    X = VirtualBuffer(shape=(8,), initial_value=np.zeros(8), name="X")
+    E = VirtualBuffer(shape=(1,), initial_value=np.zeros(1), name="E")
+    t = tdag.submit("k", (8,), [read(X, one_to_one()), reduction(E, "sum")])
+    assert tdag.pending_reductions() == {E.bid: t}
+    # a reader takes a TRUE dep on the reduction task
+    t2 = tdag.submit("r", (1,), [read(E, one_to_one())])
+    assert any(d is t and k.value == "true" for d, k in t2.dependencies)
+    # ANY overwrite (even partial) clears the replicated-pending state
+    S = VirtualBuffer(shape=(4,), initial_value=np.zeros(4), name="S")
+    ts = tdag.submit("k2", (4,), [read(X, one_to_one()), reduction(S, "sum")])
+    assert tdag.pending_reductions()[S.bid] is ts
+    tdag.submit("wpart", (2,), [write(S, one_to_one())])   # partial write
+    assert S.bid not in tdag.pending_reductions()
+    # a full overwrite clears it too
+    tdag.submit("w", (1,), [write(E, one_to_one())])
+    assert tdag.pending_reductions() == {}
+
+
+# -- IDAG structure: instruction types + no serialization --------------------
+def _compile_idags(tdag, num_nodes, num_devices=2):
+    cdag = generate_cdag(tdag, num_nodes)
+    idags = []
+    for n in range(num_nodes):
+        g = IdagGenerator(n, num_devices)
+        for cmd in cdag.commands[n]:
+            if cmd.ctype == CommandType.EPOCH and cmd.task is None:
+                continue
+            g.compile(cmd)
+        idags.append(g)
+    return cdag, idags
+
+
+def test_idag_contains_reduction_instructions():
+    from repro.core import VirtualBuffer
+    tdag = TaskGraph(horizon_step=100)
+    X = VirtualBuffer(shape=(16,), initial_value=np.zeros(16), name="X")
+    E = VirtualBuffer(shape=(1,), initial_value=np.zeros(1), name="E")
+    tdag.submit("k", (16,), [read(X, one_to_one()), reduction(E, "sum")])
+    cdag, idags = _compile_idags(tdag, 2)
+    for n, g in enumerate(idags):
+        kinds = [i.itype for i in g.instructions]
+        assert kinds.count(InstructionType.FILL_IDENTITY) == 2  # one per device
+        assert InstructionType.LOCAL_REDUCE in kinds
+        assert InstructionType.GATHER_RECEIVE in kinds
+        assert InstructionType.GLOBAL_REDUCE in kinds
+        # gather expects exactly the peer rank
+        gr = next(i for i in g.instructions
+                  if i.itype == InstructionType.GATHER_RECEIVE)
+        assert gr.gather_sources == tuple(p for p in (0, 1) if p != n)
+        # the partial broadcast posts one pilot per peer, flagged as gather
+    for n, g in enumerate(idags):
+        gather_pilots = [p for p in g.pilots if p.gather]
+        assert [p.target for p in gather_pilots] == [1 - n]
+
+
+def test_reduction_does_not_serialize_unrelated_kernels_structurally():
+    """No dependency path between the reduction pipeline and kernels on
+    unrelated buffers — the IDAG keeps them fully concurrent."""
+    from repro.core import VirtualBuffer
+    tdag = TaskGraph(horizon_step=100)      # no horizons: pure dataflow deps
+    X = VirtualBuffer(shape=(16,), initial_value=np.zeros(16), name="X")
+    E = VirtualBuffer(shape=(1,), initial_value=np.zeros(1), name="E")
+    B = VirtualBuffer(shape=(16,), initial_value=np.zeros(16), name="B")
+    tdag.submit("red", (16,), [read(X, one_to_one()), reduction(E, "sum")])
+    for i in range(3):
+        tdag.submit(f"unrel{i}", (16,), [read_write(B, one_to_one())])
+    cdag, idags = _compile_idags(tdag, 2)
+    red_types = {InstructionType.LOCAL_REDUCE, InstructionType.GATHER_RECEIVE,
+                 InstructionType.GLOBAL_REDUCE, InstructionType.FILL_IDENTITY}
+    for g in idags:
+        red_instrs = {i for i in g.instructions if i.itype in red_types}
+        kernels = [i for i in g.instructions
+                   if i.itype == InstructionType.DEVICE_KERNEL
+                   and i.name.startswith("unrel")]
+        assert kernels and red_instrs
+        seen = set()
+
+        def reaches_reduction(i):
+            if i.iid in seen:
+                return False
+            seen.add(i.iid)
+            return any(d in red_instrs or reaches_reduction(d)
+                       for d, _ in i.dependencies)
+
+        for k in kernels:
+            seen.clear()
+            assert not reaches_reduction(k), \
+                f"{k} transitively depends on the reduction pipeline"
+
+
+def test_reduction_overlaps_unrelated_kernels_timewise():
+    """While rank 1's slow partial delays the gather, rank 0 keeps executing
+    unrelated kernels (Tracer.overlap_fraction > 0 between device lanes)."""
+    with Runtime(num_nodes=2, devices_per_node=1, trace=True) as rt:
+        X = rt.buffer((16,), init=np.zeros(16), name="X")
+        E = rt.buffer((1,), init=np.zeros(1), name="E")
+        B = rt.buffer((16,), init=np.zeros(16), name="B")
+
+        def red_kernel(chunk, xv, red):
+            if chunk.min[0] >= 8:
+                time.sleep(0.15)        # rank 1 is slow to produce
+            red.contribute(xv.get(chunk))
+
+        def unrel(chunk, bv):
+            time.sleep(0.01)
+            bv.set(chunk, bv.get(chunk) + 1)
+
+        rt.submit("red", (16,), [read(X, one_to_one()), reduction(E, "sum")],
+                  red_kernel)
+        for i in range(10):
+            rt.submit(f"unrel{i}", (16,), [read_write(B, one_to_one())], unrel)
+        rt.sync()
+        tr = rt.tracer
+        assert float(rt.gather(E)[0]) == 0.0
+    f = tr.overlap_fraction("N0.device", "N1.device")
+    assert f > 0.2, f"unrelated kernels serialized behind the reduction: {f}"
