@@ -8,6 +8,14 @@ them per node, broadcasts/gathers the partials between all ranks
 (``GLOBAL_REDUCE``) — the exact-sum accumulator makes the result **bitwise
 identical** to a single-node ``math.fsum`` oracle on any rank/device grid.
 
+The second half demonstrates the budgeted memory layer (DESIGN.md §8):
+three independent simulations share one runtime, phase 0 pausing while the
+others run.  With ``device_memory_budget`` at 50% of the unbudgeted
+high-water mark the paused simulation's buffers are spilled to host and
+lazily reloaded when it resumes — and every energy stays bit-for-bit equal
+to the unbudgeted run and the fsum oracle, with per-memory peaks under
+budget.
+
 Run:  PYTHONPATH=src python examples/nbody.py
 """
 
@@ -35,6 +43,97 @@ def body_energies(P, Vrows, lo, hi):
         pot[r, lo + r] = 0.0          # no self-interaction
     kin = 0.5 * MASS * (Vrows ** 2).sum(-1)
     return kin + pot.sum(1)
+
+
+def _oracle_run(P, V, steps):
+    P, V = P.copy(), V.copy()
+    for _ in range(steps):
+        d = P[None, :, :] - P[:, None, :]
+        r2 = (d * d).sum(-1) + EPS
+        F = (d / r2[..., None] ** 1.5).sum(1)
+        V = V + MASS * F * DT
+        P = P + V * DT
+    return P, V
+
+
+def budget_demo(n_sims: int = 3, n_bodies: int = 256, steps: int = 8) -> None:
+    """Three phased simulations under a 50% device-memory budget."""
+    inits = [(_rng.normal(size=(n_bodies, 3)), _rng.normal(size=(n_bodies, 3)) * 0.1)
+             for _rng in (np.random.default_rng(100 + i) for i in range(n_sims))]
+
+    def program(q):
+        sims = [(q.buffer((n_bodies, 3), init=P0, name=f"P{i}"),
+                 q.buffer((n_bodies, 3), init=V0, name=f"V{i}"),
+                 q.buffer((1,), init=np.zeros(1), name=f"E{i}"))
+                for i, (P0, V0) in enumerate(inits)]
+
+        def run_steps(i, lo, hi):
+            P, V, E = sims[i]
+
+            def timestep(chunk, p, v):
+                Pa = p.get(Box((0, 0), (n_bodies, 3)))
+                a, b = chunk.min[0], chunk.max[0]
+                d = Pa[None, :, :] - Pa[a:b, None, :]
+                r2 = (d * d).sum(-1) + EPS
+                F = (d / r2[..., None] ** 1.5).sum(1)
+                v.set(chunk, v.get(chunk) + MASS * F * DT)
+
+            def update(chunk, v, p):
+                p.set(chunk, p.get(chunk) + v.get(chunk) * DT)
+
+            def energy(chunk, p, v, red):
+                Pa = p.get(Box((0, 0), (n_bodies, 3)))
+                a, b = chunk.min[0], chunk.max[0]
+                red.contribute(body_energies(Pa, v.get(chunk), a, b))
+
+            for _ in range(lo, hi):
+                q.submit(f"timestep{i}", (n_bodies, 3),
+                         [read(P, all_range()), read_write(V, one_to_one())],
+                         timestep)
+                q.submit(f"update{i}", (n_bodies, 3),
+                         [read(V, one_to_one()), read_write(P, one_to_one())],
+                         update)
+            if hi == steps:
+                q.submit(f"energy{i}", (n_bodies, 3),
+                         [read(P, all_range()), read(V, one_to_one()),
+                          reduction(E, "sum")], energy)
+
+        # phase 0 pauses at the halfway point while sims 1..n run to the
+        # end — under budget its buffers are spilled, then reloaded
+        run_steps(0, 0, steps // 2)
+        for i in range(1, n_sims):
+            run_steps(i, 0, steps)
+        run_steps(0, steps // 2, steps)
+        return [float(q.gather(E)[0]) for _, _, E in sims]
+
+    with Runtime(num_nodes=1, devices_per_node=1) as q:
+        base = program(q)
+        hwm = q.device_peak_bytes()
+        assert q.warnings == [], q.warnings
+
+    budget = hwm // 2
+    with Runtime(num_nodes=1, devices_per_node=1,
+                 device_memory_budget=budget) as q:
+        budgeted = program(q)
+        reports = q.memory_report()
+        peak = q.device_peak_bytes()
+        assert q.warnings == [], q.warnings
+    spills = sum(r["spills"] for r in reports)
+    reloads = sum(r["reloads"] for r in reports)
+
+    print(f"\nbudget demo: {n_sims} phased simulations, "
+          f"unbudgeted device HWM {hwm} B -> budget {budget} B (50%)")
+    for i, (e_b, e_u) in enumerate(zip(budgeted, base)):
+        P0, V0 = inits[i]
+        Pf, Vf = _oracle_run(P0, V0, steps)
+        oracle = math.fsum(body_energies(Pf, Vf, 0, n_bodies))
+        status = "bit-for-bit" if e_b == e_u == oracle else "MISMATCH"
+        print(f"  sim {i}: E = {e_b:+.15e}  [{status}]")
+        assert e_b == e_u == oracle, (i, e_b, e_u, oracle)
+    print(f"  device peak under budget: {peak} <= {budget}: {peak <= budget}")
+    print(f"  spills: {spills}, reloads: {reloads}")
+    assert peak <= budget, (peak, budget)
+    assert spills > 0 and reloads > 0, (spills, reloads)
 
 
 def main() -> None:
@@ -82,13 +181,7 @@ def main() -> None:
         results[(nodes, devs)] = (float(result[0]), Pg)
 
     # single-node numpy oracle: same per-body energies, math.fsum combine
-    P, V = P0.copy(), V0.copy()
-    for s in range(STEPS):
-        d = P[None, :, :] - P[:, None, :]
-        r2 = (d * d).sum(-1) + EPS
-        F = (d / r2[..., None] ** 1.5).sum(1)
-        V = V + MASS * F * DT
-        P = P + V * DT
+    P, V = _oracle_run(P0, V0, STEPS)
     oracle = math.fsum(body_energies(P, V, 0, N))
 
     print(f"n-body total energy after {STEPS} steps ({N} bodies):")
@@ -98,6 +191,8 @@ def main() -> None:
         assert e == oracle, (e, oracle)
         np.testing.assert_array_equal(Pg, P)
     print(f"  oracle (math.fsum):    E = {oracle:+.15e}")
+
+    budget_demo()
 
 
 if __name__ == "__main__":

@@ -5,6 +5,12 @@ per-device compute (interpret mode on CPU).  After the time loop a
 newest fields — distributed over all ranks yet bitwise identical to a
 single-node ``math.fsum`` oracle thanks to the exact-sum accumulator.
 
+The budget demo then runs three interleaved wave simulations on a 2x2 grid
+with ``device_memory_budget`` at 50% of the unbudgeted high-water mark: the
+paused simulation's triple-buffered fields spill to host and reload when it
+resumes, with bit-identical fields/residuals and per-memory peaks under
+budget (memory layer, DESIGN.md §8).
+
     PYTHONPATH=src python examples/wavesim.py
 """
 
@@ -19,12 +25,7 @@ from repro.kernels.ref import wave_step_ref
 H, W, STEPS, C = 256, 128, 20, 0.25
 
 
-def main() -> None:
-    rng = np.random.default_rng(1)
-    u1 = np.zeros((H, W))
-    u1[H // 2 - 4:H // 2 + 4, W // 2 - 4:W // 2 + 4] = 1.0   # a splash
-    u0 = u1.copy()
-
+def _make_step_kernel(H, W):
     def step_kernel(chunk, um_v, u_v, un_v):
         lo, hi = chunk.min[0], chunk.max[0]
         ext = Box((max(0, lo - 1), 0), (min(H, hi + 1), W))
@@ -43,10 +44,91 @@ def main() -> None:
             out[r] = 2 * row - um[r] + C * lap
             out[r, 0] = out[r, -1] = 0.0
         un_v.set(chunk, out)
+    return step_kernel
 
-    def residual(chunk, ua, ub, red):
-        d = ub.get(chunk) - ua.get(chunk)
-        red.contribute(d * d)
+
+def residual(chunk, ua, ub, red):
+    d = ub.get(chunk) - ua.get(chunk)
+    red.contribute(d * d)
+
+
+def budget_demo(n_sims: int = 3, H: int = 128, W: int = 64,
+                steps: int = 12) -> None:
+    """Three interleaved wave simulations under a 50% device budget."""
+    step_kernel = _make_step_kernel(H, W)
+
+    def program(q):
+        sims = []
+        for i in range(n_sims):
+            u1 = np.zeros((H, W))
+            o = 8 + 6 * i
+            u1[o:o + 6, W // 2 - 3:W // 2 + 3] = 1.0 + 0.25 * i
+            B = [q.buffer((H, W), init=u1.copy(), name=f"um{i}"),
+                 q.buffer((H, W), init=u1, name=f"u{i}"),
+                 q.buffer((H, W), init=np.zeros((H, W)), name=f"un{i}")]
+            R2 = q.buffer((1,), init=np.zeros(1), name=f"R2_{i}")
+            sims.append((B, R2))
+
+        def run_steps(i, lo, hi):
+            B, R2 = sims[i]
+            for s in range(lo, hi):
+                um, u, un = B[s % 3], B[(s + 1) % 3], B[(s + 2) % 3]
+                q.submit(f"wave{i}.{s}", (H, W),
+                         [read(um, one_to_one()), read(u, neighborhood((1, 0))),
+                          write(un, one_to_one())], step_kernel)
+            if hi == steps:
+                q.submit(f"residual{i}", (H, W),
+                         [read(B[steps % 3], one_to_one()),
+                          read(B[(steps + 1) % 3], one_to_one()),
+                          reduction(R2, "sum")], residual)
+
+        run_steps(0, 0, steps // 2)          # sim 0 pauses halfway ...
+        for i in range(1, n_sims):
+            run_steps(i, 0, steps)           # ... gets evicted ...
+        run_steps(0, steps // 2, steps)      # ... and reloads
+        out = []
+        for B, R2 in sims:
+            field = q.gather(B[(steps + 1) % 3])
+            prev = q.gather(B[steps % 3])
+            out.append((field, prev, float(q.gather(R2)[0])))
+        return out
+
+    with Runtime(num_nodes=2, devices_per_node=2) as q:
+        base = program(q)
+        hwm = q.device_peak_bytes()
+        assert q.warnings == [], q.warnings
+    budget = hwm // 2
+    with Runtime(num_nodes=2, devices_per_node=2,
+                 device_memory_budget=budget) as q:
+        budgeted = program(q)
+        reports = q.memory_report()
+        peak = q.device_peak_bytes()
+        assert q.warnings == [], q.warnings
+    spills = sum(r["spills"] for r in reports)
+    reloads = sum(r["reloads"] for r in reports)
+
+    print(f"\nbudget demo: {n_sims} interleaved {H}x{W} wave sims on 2x2, "
+          f"HWM {hwm} B -> budget {budget} B (50%)")
+    for i, ((f_b, p_b, r_b), (f_u, p_u, r_u)) in enumerate(zip(budgeted, base)):
+        np.testing.assert_array_equal(f_b, f_u)
+        np.testing.assert_array_equal(p_b, p_u)
+        oracle = math.fsum(((f_b - p_b) ** 2).ravel())
+        status = "bit-for-bit" if r_b == r_u == oracle else "MISMATCH"
+        print(f"  sim {i}: |du|^2 = {r_b:.12e}  [{status}]")
+        assert r_b == r_u == oracle, (i, r_b, r_u, oracle)
+    print(f"  device peak under budget: {peak} <= {budget}: {peak <= budget}")
+    print(f"  spills: {spills}, reloads: {reloads}")
+    assert peak <= budget, (peak, budget)
+    assert spills > 0 and reloads > 0, (spills, reloads)
+
+
+def main() -> None:
+    rng = np.random.default_rng(1)
+    u1 = np.zeros((H, W))
+    u1[H // 2 - 4:H // 2 + 4, W // 2 - 4:W // 2 + 4] = 1.0   # a splash
+    u0 = u1.copy()
+
+    step_kernel = _make_step_kernel(H, W)
 
     with Runtime(num_nodes=2, devices_per_node=2) as q:
         B = [q.buffer((H, W), init=u0, name="um"),
@@ -83,6 +165,8 @@ def main() -> None:
           f"[{'bit-for-bit' if res2 == res2_oracle else 'MISMATCH'}]")
     assert err < 1e-4
     assert res2 == res2_oracle, (res2, res2_oracle)
+
+    budget_demo()
 
 
 if __name__ == "__main__":

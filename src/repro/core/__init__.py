@@ -9,6 +9,7 @@ from .command_graph import Command, CommandGraphGenerator, CommandType, generate
 from .executor import BoundsError, BufferView, Executor, ReductionView
 from .instruction_graph import (IdagGenerator, Instruction, InstructionType,
                                 Pilot)
+from .memory import MemoryManager, MemoryStats, MemState
 from .reduction import Reduction, ReductionOp, reduction
 from .lookahead import LookaheadScheduler
 from .range_mapper import (all_range, fixed, fixed_row, neighborhood,
@@ -24,6 +25,7 @@ __all__ = [
     "Command", "CommandGraphGenerator", "CommandType", "generate_cdag",
     "BoundsError", "BufferView", "Executor", "ReductionView",
     "IdagGenerator", "Instruction", "InstructionType", "Pilot",
+    "MemoryManager", "MemoryStats", "MemState",
     "Reduction", "ReductionOp", "reduction",
     "LookaheadScheduler",
     "all_range", "fixed", "fixed_row", "neighborhood", "one_to_one",

@@ -85,9 +85,18 @@ class _NodeBufferState:
 class CommandGraphGenerator:
     """Generates per-node command graphs from a TDAG stream."""
 
-    def __init__(self, num_nodes: int):
+    def __init__(self, num_nodes: int, *, retire_for: Optional[int] = None):
         self.num_nodes = num_nodes
         self.commands: list[list[Command]] = [[] for _ in range(num_nodes)]
+        # ``retire_for=k`` (runtime mode, one generator per node scheduler):
+        # at every horizon/epoch the per-node command lists are trimmed to
+        # the new sync command, so CDAG memory is O(window) on long runs.
+        # Commands of nodes != k also get their dependency lists cleared at
+        # the sync (nothing ever compiles them here); node k's edges are
+        # cleared by the lookahead once each command is lowered.
+        # ``emitted_counts`` keeps the lifetime totals.
+        self.retire_for = retire_for
+        self.emitted_counts: list[int] = [0] * num_nodes
         # replicated global ownership: buffer -> RegionMap(region -> owner rank)
         self._ownership: dict[int, RegionMap] = {}
         self._buffers: dict[int, VirtualBuffer] = {}
@@ -99,9 +108,13 @@ class CommandGraphGenerator:
         self.errors: list[str] = []
         for n in range(num_nodes):
             epoch = Command(CommandType.EPOCH, node=n, task=None)
-            self.commands[n].append(epoch)
+            self._add(n, epoch)
             self._init_epochs.append(epoch)
             self._last_epoch[n] = epoch
+
+    def _add(self, n: int, cmd: Command) -> None:
+        self.commands[n].append(cmd)
+        self.emitted_counts[n] += 1
 
     # ------------------------------------------------------------------
     def _ownership_map(self, buf: VirtualBuffer) -> RegionMap:
@@ -140,7 +153,7 @@ class CommandGraphGenerator:
             for c in self.commands[n][self._frontier_pos[n]:]:
                 if not c.dependents:
                     cmd.add_dependency(c, DepKind.SYNC)
-            self.commands[n].append(cmd)
+            self._add(n, cmd)
             self._frontier_pos[n] = len(self.commands[n]) - 1
             if ctype == CommandType.HORIZON:
                 self._last_horizon[n] = cmd
@@ -152,6 +165,15 @@ class CommandGraphGenerator:
                 st.last_writers.update(st.last_writers.covered(), cmd)
                 st.last_writers.coalesce()
                 st.last_readers = []
+            if self.retire_for is not None:
+                # everything before this sync is dominated by it; the
+                # tracking maps above now reference only the sync command
+                if n != self.retire_for:
+                    for c in self.commands[n][:-1]:
+                        c.dependencies.clear()
+                        c.dependents.clear()
+                del self.commands[n][:-1]
+                self._frontier_pos[n] = 0
             out.append(cmd)
         return out
 
@@ -179,7 +201,7 @@ class CommandGraphGenerator:
             for ssub, writer in sst.last_writers.query(sub):
                 push.add_dependency(writer, DepKind.TRUE)
             sst.last_readers.append((sub, push))
-            self.commands[src].append(push)
+            self._add(src, push)
             new_cmds.append(push)
         if not missing_union.is_empty():
             ap = Command(CommandType.AWAIT_PUSH, node=n, task=task, buffer=buf,
@@ -193,7 +215,7 @@ class CommandGraphGenerator:
                 if rreg.overlaps(missing_union):
                     ap.add_dependency(reader, DepKind.ANTI)
             nst.last_writers.update(missing_union, ap)
-            self.commands[n].append(ap)
+            self._add(n, ap)
             new_cmds.append(ap)
             consumer.add_dependency(ap, DepKind.TRUE)
             # received data is now also up-to-date on n (replicated info)
@@ -266,7 +288,7 @@ class CommandGraphGenerator:
                 cmd.add_dependency(self._last_epoch[n], DepKind.SYNC)
             if self._last_horizon[n] is not None:
                 cmd.add_dependency(self._last_horizon[n], DepKind.SYNC)
-            self.commands[n].append(cmd)
+            self._add(n, cmd)
             new_cmds.append(cmd)
 
         # global ownership update: writers become exclusive owners
@@ -337,7 +359,7 @@ class CommandGraphGenerator:
                 gc.add_dependency(reader, DepKind.ANTI)
             if n in partial_cmds:
                 pc = partial_cmds[n]
-                self.commands[n].append(pc)
+                self._add(n, pc)
                 new_cmds.append(pc)
                 gc.add_dependency(pc, DepKind.TRUE)
             if self._last_horizon[n] is not None:
@@ -346,7 +368,7 @@ class CommandGraphGenerator:
                 gc.add_dependency(self._last_epoch[n], DepKind.SYNC)
             nst.last_writers.update(full, gc)
             nst.last_readers = []
-            self.commands[n].append(gc)
+            self._add(n, gc)
             new_cmds.append(gc)
 
         # the combined value is replicated on every node

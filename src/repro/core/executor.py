@@ -163,6 +163,14 @@ class Executor:
         self.check_bounds = check_bounds
         self.tracer = tracer
         self.errors: list[BaseException] = []
+        # real materialized bytes per memory id, accounted at ALLOC/FREE
+        # execution time (the compile-time model lives in the scheduler's
+        # MemoryManager; this is the ground truth the budget must bound).
+        # M0 is user-owned and lazily seeded — it has no ALLOC instructions
+        # and is deliberately not tracked here.
+        self.mem_used: dict[int, int] = {}
+        self.mem_peak: dict[int, int] = {}
+        self._mem_lock = threading.Lock()
 
         self._inbox: deque[Instruction] = deque()
         self._inbox_lock = threading.Lock()
@@ -189,6 +197,8 @@ class Executor:
             InstructionType.ALLOC: self._exec_alloc,
             InstructionType.FREE: self._exec_free,
             InstructionType.COPY: self._exec_copy,
+            InstructionType.SPILL: self._exec_copy,
+            InstructionType.RELOAD: self._exec_copy,
             InstructionType.SEND: self._exec_send,
             InstructionType.FILL_IDENTITY: self._exec_fill_identity,
             InstructionType.LOCAL_REDUCE: self._exec_local_reduce,
@@ -427,12 +437,26 @@ class Executor:
             arr = self.store[alloc.aid] = np.array(init, copy=True)
         return arr
 
+    def _account(self, mid: int, delta: int) -> None:
+        with self._mem_lock:
+            n = self.mem_used.get(mid, 0) + delta
+            self.mem_used[mid] = n
+            if n > self.mem_peak.get(mid, 0):
+                self.mem_peak[mid] = n
+        if self.tracer is not None:
+            self.tracer.counter(f"N{self.node}.M{mid}.bytes", float(n))
+
     def _exec_alloc(self, instr: Instruction) -> None:
         a = instr.allocation
-        self.store[a.aid] = np.empty(a.box.shape, dtype=np.dtype(a.dtype))
+        arr = np.empty(a.box.shape, dtype=np.dtype(a.dtype))
+        self.store[a.aid] = arr
+        self._account(a.mid, arr.nbytes)
 
     def _exec_free(self, instr: Instruction) -> None:
-        self.store.pop(instr.allocation.aid, None)
+        a = instr.allocation
+        arr = self.store.pop(a.aid, None)
+        if arr is not None:
+            self._account(a.mid, -arr.nbytes)
 
     def _exec_copy(self, instr: Instruction) -> None:
         src, dst, box = instr.src_alloc, instr.dst_alloc, instr.copy_box

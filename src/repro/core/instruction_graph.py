@@ -1,8 +1,9 @@
 """Instruction graph (IDAG) generation — the paper's core contribution (§3).
 
 Compiles each node's command stream into micro-operations: ``alloc / copy /
-free / send / receive / split-receive / await-receive / device-kernel /
-host-task / horizon / epoch``.  Key mechanisms implemented faithfully:
+free / spill / reload / send / receive / split-receive / await-receive /
+device-kernel / host-task / horizon / epoch``.  Key mechanisms implemented
+faithfully:
 
 * hierarchical work assignment — the command chunk is split a second time
   over the node's local devices (§3.1);
@@ -16,166 +17,37 @@ host-task / horizon / epoch``.  Key mechanisms implemented faithfully:
   await-push commands (§3.4);
 * horizon/epoch instructions for pruning and synchronization (§3.5);
 * allocation widening driven by the scheduler lookahead (§4.3).
+
+The allocation *lifecycle* — backing allocations, coherence, widening,
+byte budgets and spill/reload under pressure — lives in
+:class:`repro.core.memory.MemoryManager` (DESIGN.md §8); this generator is
+a pure consumer that requests regions and receives placements.
 """
 
 from __future__ import annotations
 
-import enum
 import itertools
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional
 
-from .allocation import (Allocation, PINNED_HOST, USER_HOST, device_memory,
-                         is_device_memory)
-from .buffer import Accessor, VirtualBuffer
+from .allocation import (PINNED_HOST, USER_HOST, device_memory,  # noqa: F401
+                         is_device_memory, queue_for_mem)
+from .buffer import VirtualBuffer
 from .command_graph import Command, CommandType
-from .reduction import Reduction
-from .region import Box, Region, RegionMap, split_box
+from .instructions import (AccessorBinding, Instruction,  # noqa: F401
+                           InstructionType, Pilot, ReductionBinding)
+from .memory import MemoryManager
+from .region import Box, Region, split_box
 from .task_graph import DepKind, TaskType
-
-
-class InstructionType(enum.Enum):
-    ALLOC = "alloc"
-    COPY = "copy"
-    FREE = "free"
-    SEND = "send"
-    RECEIVE = "receive"
-    SPLIT_RECEIVE = "split_receive"
-    AWAIT_RECEIVE = "await_receive"
-    # reduction pipeline (§2.2): identity-fill device scratch, combine device
-    # partials per node, gather peer partials (multi-peer, pilot-driven,
-    # fixed-stride slots) and fold them in canonical node order
-    FILL_IDENTITY = "fill_identity"
-    LOCAL_REDUCE = "local_reduce"
-    GATHER_RECEIVE = "gather_receive"
-    GLOBAL_REDUCE = "global_reduce"
-    DEVICE_KERNEL = "device_kernel"
-    HOST_TASK = "host_task"
-    HORIZON = "horizon"
-    EPOCH = "epoch"
-
-
-_instr_ids = itertools.count()
-
-
-@dataclass
-class AccessorBinding:
-    """Executor-facing: which allocation backs an accessor for one kernel."""
-    accessor: Accessor
-    allocation: Allocation
-    region: Region                # buffer-space region the kernel may touch
-
-
-@dataclass
-class ReductionBinding:
-    """Executor-facing: the identity-filled scratch a kernel reduces into."""
-    reduction: Reduction
-    allocation: Allocation        # per-device accumulator scratch
-
-
-@dataclass
-class Pilot:
-    """Pilot message: announces an inbound transfer to the receiver (§3.4).
-
-    ``transfer_id`` is ``(task id, buffer id)`` for push traffic and
-    ``(task id, buffer id, 1)`` for reduction-gather traffic, so the two
-    protocols never alias; the arbiter routes by transfer id and lands
-    gather payloads at the fixed-stride slot of their *source* rank rather
-    than at a buffer-space offset.  ``gather`` is wire metadata only (a
-    real MPI transport would select the superaccumulator datatype from
-    it); the in-process arbiter treats pilots as accounting.
-    """
-    source: int
-    target: int
-    transfer_id: tuple
-    box: Box                      # buffer-space box being sent
-    msg_id: int
-    gather: bool = False          # reduction-gather transfer (metadata)
-
-
-@dataclass
-class Instruction:
-    itype: InstructionType
-    node: int
-    # queue affinity: ("device", d) | ("host",) | ("comm",) — executor routing
-    queue: tuple = ("host",)
-    # ALLOC / FREE
-    allocation: Optional[Allocation] = None
-    # COPY
-    src_alloc: Optional[Allocation] = None
-    dst_alloc: Optional[Allocation] = None
-    copy_box: Optional[Box] = None           # buffer-space box to copy
-    # SEND
-    dest: Optional[int] = None
-    msg_id: Optional[int] = None
-    send_box: Optional[Box] = None
-    # RECEIVE / SPLIT_RECEIVE / AWAIT_RECEIVE / GATHER_RECEIVE
-    transfer_id: Optional[tuple] = None
-    recv_region: Optional[Region] = None
-    recv_alloc: Optional[Allocation] = None
-    split_parent: Optional["Instruction"] = None
-    # reductions: FILL_IDENTITY fills ``allocation``; LOCAL_REDUCE folds
-    # ``reduce_srcs`` into ``dst_alloc``; GATHER_RECEIVE expects one partial
-    # per rank in ``gather_sources`` landed at slot=rank in ``recv_alloc``;
-    # GLOBAL_REDUCE folds slots of ``src_alloc`` (+ own partial in
-    # ``reduce_srcs``) over ``participants`` in node order into ``dst_alloc``
-    reduction: Optional[Reduction] = None
-    reduce_srcs: tuple[Allocation, ...] = ()
-    gather_sources: tuple[int, ...] = ()
-    participants: tuple[int, ...] = ()
-    include_current: bool = False
-    # DEVICE_KERNEL / HOST_TASK
-    kernel_fn: Optional[Callable] = None
-    chunk: Optional[Box] = None
-    bindings: tuple[AccessorBinding, ...] = ()
-    red_bindings: tuple[ReductionBinding, ...] = ()
-    device: Optional[int] = None
-    name: str = ""
-    command: Optional[Command] = None
-    iid: int = field(default_factory=lambda: next(_instr_ids))
-    dependencies: list[tuple["Instruction", DepKind]] = field(default_factory=list)
-    dependents: list["Instruction"] = field(default_factory=list)
-    # set by the executor:
-    state: str = "pending"
-
-    def add_dependency(self, dep: "Instruction", kind: DepKind) -> None:
-        if dep is self:
-            return
-        for d, _ in self.dependencies:
-            if d is dep:
-                return
-        self.dependencies.append((dep, kind))
-        dep.dependents.append(self)
-
-    def __hash__(self) -> int:
-        return self.iid
-
-    def __repr__(self) -> str:
-        extra = ""
-        if self.itype == InstructionType.DEVICE_KERNEL:
-            extra = f":{self.name}@D{self.device}"
-        elif self.itype in (InstructionType.ALLOC, InstructionType.FREE):
-            extra = f":{self.allocation}"
-        elif self.itype == InstructionType.COPY:
-            extra = f":{self.src_alloc and self.src_alloc.aid}->{self.dst_alloc and self.dst_alloc.aid}"
-        return f"I{self.iid}<{self.itype.value}{extra}>"
-
-
-@dataclass
-class _MemState:
-    """Per (buffer, memory) instruction-level tracking."""
-    producers: RegionMap          # region -> original producer Instruction
-    readers: list[tuple[Region, Instruction]] = field(default_factory=list)
 
 
 class IdagGenerator:
     """Per-node instruction graph generator."""
 
     def __init__(self, node: int, num_devices: int, *, d2d: bool = True,
-                 alloc_hints: Optional[dict] = None, retire: bool = False):
+                 alloc_hints: Optional[dict] = None, retire: bool = False,
+                 budgets: Optional[dict[int, int]] = None):
         self.node = node
         self.num_devices = num_devices
-        self.d2d = d2d
         # ``retire=True`` (used by the runtime) trims ``instructions`` down to
         # the window since the last horizon/epoch, so generator memory stays
         # bounded on long runs; ``emitted_count`` keeps the lifetime total.
@@ -187,22 +59,21 @@ class IdagGenerator:
         self._frontier_pos = 0          # index of the last sync instruction
         self.pilots: list[Pilot] = []
         self.warnings: list[str] = []
-        self._allocs: dict[tuple[int, int], list[Allocation]] = {}
-        self._coherence: dict[int, RegionMap] = {}      # region -> frozenset(mids)
-        self._mem: dict[tuple[int, int], _MemState] = {}
         # in-flight reduction state, keyed by reduction transfer id:
         # device partial scratches (+ producing kernels), the node partial
         # (+ its LOCAL_REDUCE) and the partial-broadcast sends
         self._red_state: dict[tuple, dict] = {}
-        self._buffers: dict[int, VirtualBuffer] = {}
         self._msg_ids = itertools.count(node * 1_000_000)
         self._last_horizon: Optional[Instruction] = None
         self._last_epoch: Optional[Instruction] = None
-        # lookahead-provided widening requirements: (bid, mid) -> Region
-        self.alloc_hints: dict[tuple[int, int], Region] = alloc_hints or {}
+        # the memory layer: allocation lifecycle, coherence, budgets,
+        # spill/reload (DESIGN.md §8); widening hints double as reservations
+        self.mem = MemoryManager(self, d2d=d2d, budgets=budgets,
+                                 hints=alloc_hints)
         self._init_epoch = self._emit(Instruction(
             InstructionType.EPOCH, node=node, queue=("host",), name="init"))
         self._last_epoch = self._init_epoch
+        self.mem.init_anchor = self._init_epoch
 
     # -- small helpers ---------------------------------------------------
     def _emit(self, instr: Instruction) -> Instruction:
@@ -214,224 +85,69 @@ class IdagGenerator:
         return instr
 
     def _register(self, buf: VirtualBuffer) -> None:
-        if buf.bid not in self._buffers:
-            self._buffers[buf.bid] = buf
-            if buf.initial_value is not None:
-                # data present in user host memory M0, produced by init epoch
-                a = Allocation(mid=USER_HOST, bid=buf.bid, box=buf.full_box,
-                               dtype=buf.dtype)
-                a.initial_data = buf.initial_value  # type: ignore[attr-defined]
-                self._allocs[(buf.bid, USER_HOST)] = [a]
-                self._coherence[buf.bid] = RegionMap(buf.full_box,
-                                                     default=frozenset([USER_HOST]))
-                ms = self._memstate(buf.bid, USER_HOST)
-                ms.producers.update(buf.full_region, self._init_epoch)
-            else:
-                self._coherence[buf.bid] = RegionMap(buf.full_box, default=frozenset())
+        self.mem.register_buffer(buf)
 
-    def _memstate(self, bid: int, mid: int) -> _MemState:
-        ms = self._mem.get((bid, mid))
-        if ms is None:
-            buf = self._buffers[bid]
-            ms = _MemState(producers=RegionMap(buf.full_box, default=self._init_epoch))
-            self._mem[(bid, mid)] = ms
-        return ms
+    # -- memory-layer pass-throughs (compat + convenience) -----------------
+    @property
+    def _allocs(self) -> dict:
+        """Live-allocation map — owned by the MemoryManager; read-only
+        compatibility view for tests and diagnostics."""
+        return self.mem.allocations
 
-    def _queue_for_mem(self, mid: int) -> tuple:
-        if is_device_memory(mid):
-            return ("device", mid - 2)
-        return ("host",)
+    @property
+    def _mem(self) -> dict:
+        """Per-(buffer, memory) producer/reader state — owned by the
+        MemoryManager; read-only compatibility view."""
+        return self.mem.mem
 
-    # -- allocation management (§3.2) -------------------------------------
+    @property
+    def alloc_hints(self) -> dict:
+        return self.mem.hints
+
+    @alloc_hints.setter
+    def alloc_hints(self, hints: dict) -> None:
+        self.mem.reserve(hints)
+
     def would_allocate_box(self, bid: int, mid: int, box: Box) -> bool:
-        for a in self._allocs.get((bid, mid), []):
-            if a.live and a.box.contains(box):
-                return False
-        return True
+        return self.mem.would_allocate_box(bid, mid, box)
 
-    def ensure_allocation(self, buf: VirtualBuffer, mid: int, box: Box) -> Allocation:
-        """Return a live allocation whose box contains ``box``; emit
-        alloc/copy/free resize chains if needed (fig. 3)."""
-        self._register(buf)
-        allocs = self._allocs.setdefault((buf.bid, mid), [])
-        for a in allocs:
-            if a.live and a.box.contains(box):
-                return a
-        # need a new allocation: merge with all overlapping live allocations
-        # AND with lookahead widening hints, to a fixpoint — widening may
-        # newly overlap allocations that the original request did not
-        # (found by hypothesis, tests/test_lookahead_property.py)
-        hint = self.alloc_hints.get((buf.bid, mid))
-        new_box = box
-        while True:
-            overlapping = [a for a in allocs
-                           if a.live and a.box.overlaps(new_box)]
-            grown = new_box
-            for a in overlapping:
-                grown = grown.union_bbox(a.box)
-            if hint is not None and not hint.is_empty():
-                for hb in hint.boxes:
-                    if hb.overlaps(grown) or any(a.box.overlaps(hb)
-                                                 for a in overlapping):
-                        grown = grown.union_bbox(hb)
-                hint_bb = hint.bounding_box()
-                if hint_bb.overlaps(grown):
-                    grown = grown.union_bbox(hint_bb)
-            if grown == new_box:
-                break
-            new_box = grown
-        new_alloc = Allocation(mid=mid, bid=buf.bid, box=new_box, dtype=buf.dtype)
-        alloc_instr = self._emit(Instruction(
-            InstructionType.ALLOC, node=self.node, queue=self._queue_for_mem(mid),
-            allocation=new_alloc, name=f"alloc {buf.name} M{mid} {new_box}"))
-        if self._last_horizon is not None:
-            alloc_instr.add_dependency(self._last_horizon, DepKind.SYNC)
-        elif self._last_epoch is not None:
-            alloc_instr.add_dependency(self._last_epoch, DepKind.SYNC)
-        new_alloc.alloc_instr = alloc_instr  # type: ignore[attr-defined]
-        ms = self._memstate(buf.bid, mid)
-        # migrate live data from the old allocations into the new one
-        coherent_here = self._region_coherent_in(buf.bid, mid)
-        for old in overlapping:
-            live_region = coherent_here.intersect_box(old.box)
-            for sub, producer in ms.producers.query(live_region):
-                for b in sub.boxes:
-                    cp = self._emit_copy(buf, old, new_alloc, b, producer)
-            free_instr = self._emit(Instruction(
-                InstructionType.FREE, node=self.node, queue=self._queue_for_mem(mid),
-                allocation=old, name=f"free {old}"))
-            # free only after all users of the old allocation are done
-            for r, reader in ms.readers:
-                if r.overlaps(Region.from_box(old.box)):
-                    free_instr.add_dependency(reader, DepKind.ANTI)
-            for sub, producer in ms.producers.query(Region.from_box(old.box)):
-                free_instr.add_dependency(producer, DepKind.ANTI)
-            old.live = False
-        self._allocs[(buf.bid, mid)] = [a for a in allocs if a.live] + [new_alloc]
-        # producers of migrated regions are now the copies — but since the
-        # copies carry the same data, we keep the original producer mapping;
-        # dependency-wise, subsequent readers in this memory must depend on
-        # the migration copies, which we ensure by updating producers to them.
-        return new_alloc
+    def ensure_allocation(self, buf: VirtualBuffer, mid: int, box: Box):
+        """Placement request — delegates to the memory layer (§3.2)."""
+        return self.mem.ensure(buf, mid, box)
 
-    def _live_allocation(self, bid: int, mid: int, box: Box) -> Allocation:
-        """The live allocation containing ``box`` (must exist)."""
-        for a in self._allocs.get((bid, mid), []):
-            if a.live and a.box.contains(box):
-                return a
-        raise AssertionError(f"no live allocation covers B{bid} M{mid} {box}")
-
-    def _emit_copy(self, buf: VirtualBuffer, src: Allocation, dst: Allocation,
-                   box: Box, producer: Instruction) -> Instruction:
-        # copies between device memories run on the (src) device queue;
-        # host<->device copies run on the device queue; host-host on host.
-        q = self._queue_for_mem(dst.mid if is_device_memory(dst.mid) else src.mid)
-        cp = self._emit(Instruction(
-            InstructionType.COPY, node=self.node, queue=q,
-            src_alloc=src, dst_alloc=dst, copy_box=box,
-            name=f"copy {buf.name} {box} M{src.mid}->M{dst.mid}"))
-        cp.add_dependency(producer, DepKind.TRUE)
-        for a in (src, dst):
-            ai = getattr(a, "alloc_instr", None)
-            if ai is not None:
-                cp.add_dependency(ai, DepKind.TRUE)
-        # WAR/WAW against the destination region in dst memory
-        dms = self._memstate(buf.bid, dst.mid)
-        breg = Region.from_box(box)
-        for r, reader in dms.readers:
-            if r.overlaps(breg):
-                cp.add_dependency(reader, DepKind.ANTI)
-        for sub, w in dms.producers.query(breg):
-            cp.add_dependency(w, DepKind.OUTPUT)
-        dms.producers.update(breg, cp)
-        # reading the source region
-        sms = self._memstate(buf.bid, src.mid)
-        sms.readers.append((breg, cp))
-        return cp
-
-    def _region_coherent_in(self, bid: int, mid: int) -> Region:
-        out = Region.empty()
-        for r, mids in self._coherence[bid].entries:
-            if mids and mid in mids:
-                out = out.union(r)
-        return out
-
-    # -- coherence (§3.3) --------------------------------------------------
-    def make_coherent(self, buf: VirtualBuffer, mid: int, region: Region) -> list[Instruction]:
-        """Emit producer-split copies so ``region`` is up-to-date in ``mid``."""
-        self._register(buf)
-        copies: list[Instruction] = []
-        coh = self._coherence[buf.bid]
-        stale = Region.empty()
-        for sub, mids in coh.query(region):
-            if not mids or mid in mids:
-                continue
-            stale = stale.union(sub)
-        if stale.is_empty():
-            return copies
-        dst = self.ensure_allocation(buf, mid, region.bounding_box())
-        for sub, mids in coh.query(stale):
-            if not mids:
-                continue
-            src_mid = self._pick_source(mids, mid)
-            if (is_device_memory(src_mid) and is_device_memory(mid)
-                    and not self.d2d):
-                # no P2P: stage through pinned host memory (§3.3)
-                copies += self.make_coherent(buf, PINNED_HOST, sub)
-                src_mid = PINNED_HOST
-            src_ms = self._memstate(buf.bid, src_mid)
-            for src_alloc in self._allocs.get((buf.bid, src_mid), []):
-                if not src_alloc.live:
-                    continue
-                part = sub.intersect_box(src_alloc.box)
-                # producer split: one copy per original-producer entry
-                for psub, producer in src_ms.producers.query(part):
-                    for b in psub.boxes:
-                        copies.append(self._emit_copy(buf, src_alloc, dst, b, producer))
-            coh.update(sub, (frozenset(mids) | {mid}))
-        return copies
-
-    def _pick_source(self, mids: frozenset, target: int) -> int:
-        """Prefer same-kind memory, then pinned host, then user host."""
-        mids = set(mids)
-        if is_device_memory(target):
-            dev = [m for m in mids if is_device_memory(m)]
-            if dev and self.d2d:
-                return min(dev)
-            if PINNED_HOST in mids:
-                return PINNED_HOST
-            if USER_HOST in mids:
-                return USER_HOST
-            return min(mids)
-        for pref in (PINNED_HOST, USER_HOST):
-            if pref in mids:
-                return pref
-        return min(mids)
+    def make_coherent(self, buf: VirtualBuffer, mid: int,
+                      region: Region) -> list[Instruction]:
+        """Residency request — delegates to the memory layer (§3.3)."""
+        return self.mem.make_coherent(buf, mid, region)
 
     # -- command compilation ------------------------------------------------
     def compile(self, cmd: Command) -> list[Instruction]:
         self._batch = []
-        if cmd.ctype == CommandType.EXECUTION:
-            self._compile_execution(cmd)
-        elif cmd.ctype == CommandType.PUSH:
-            self._compile_push(cmd)
-        elif cmd.ctype == CommandType.AWAIT_PUSH:
-            self._compile_await_push(cmd)
-        elif cmd.ctype == CommandType.REDUCE_PARTIAL:
-            self._compile_reduce_partial(cmd)
-        elif cmd.ctype == CommandType.REDUCE_GLOBAL:
-            self._compile_reduce_global(cmd)
-        elif cmd.ctype == CommandType.HORIZON:
-            self._compile_sync(cmd, InstructionType.HORIZON)
-        elif cmd.ctype == CommandType.EPOCH:
-            self._compile_sync(cmd, InstructionType.EPOCH)
+        # pin scope: every allocation this command touches stays resident
+        # until the command is fully lowered (eviction must never drop the
+        # working set out from under a half-compiled kernel)
+        with self.mem.pin_scope():
+            if cmd.ctype == CommandType.EXECUTION:
+                self._compile_execution(cmd)
+            elif cmd.ctype == CommandType.PUSH:
+                self._compile_push(cmd)
+            elif cmd.ctype == CommandType.AWAIT_PUSH:
+                self._compile_await_push(cmd)
+            elif cmd.ctype == CommandType.REDUCE_PARTIAL:
+                self._compile_reduce_partial(cmd)
+            elif cmd.ctype == CommandType.REDUCE_GLOBAL:
+                self._compile_reduce_global(cmd)
+            elif cmd.ctype == CommandType.HORIZON:
+                self._compile_sync(cmd, InstructionType.HORIZON)
+            elif cmd.ctype == CommandType.EPOCH:
+                self._compile_sync(cmd, InstructionType.EPOCH)
         out, self._batch = self._batch, []
         return out
 
     def would_allocate(self, cmd: Command) -> bool:
         """Cheap query used by the lookahead scheduler (§4.3)."""
         reqs = self.allocation_requirements(cmd)
-        return any(self.would_allocate_box(bid, mid, box)
+        return any(self.mem.would_allocate_box(bid, mid, box)
                    for (bid, mid), region in reqs.items()
                    for box in [region.bounding_box()])
 
@@ -496,16 +212,16 @@ class IdagGenerator:
                 self._register(acc.buffer)
                 reg = acc.mapped_region(ch)
                 if not reg.is_empty():
-                    self.ensure_allocation(acc.buffer, mid, reg.bounding_box())
+                    self.mem.ensure(acc.buffer, mid, reg.bounding_box())
             # phase 2: coherence + bindings against the settled allocations
             for acc in task.accessors:
                 buf = acc.buffer
                 reg = acc.mapped_region(ch)
                 if reg.is_empty():
                     continue
-                alloc = self._live_allocation(buf.bid, mid, reg.bounding_box())
+                alloc = self.mem.live(buf.bid, mid, reg.bounding_box())
                 if acc.mode.is_consumer:
-                    deps.extend(self.make_coherent(buf, mid, reg))
+                    deps.extend(self.mem.make_coherent(buf, mid, reg))
                 bindings.append(AccessorBinding(acc, alloc, reg))
             # reduction outputs: one identity-filled accumulator scratch per
             # (device chunk, reduction) — never the buffer's own allocation,
@@ -528,10 +244,10 @@ class IdagGenerator:
             for f in fills:
                 instr.add_dependency(f, DepKind.TRUE)
             for b in bindings:
-                ai = getattr(b.allocation, "alloc_instr", None)
+                ai = b.allocation.alloc_instr
                 if ai is not None:
                     instr.add_dependency(ai, DepKind.TRUE)
-                ms = self._memstate(b.accessor.buffer.bid, mid)
+                ms = self.mem.state(b.accessor.buffer.bid, mid)
                 if b.accessor.mode.is_consumer:
                     for sub, producer in ms.producers.query(b.region):
                         instr.add_dependency(producer, DepKind.TRUE)
@@ -556,20 +272,21 @@ class IdagGenerator:
             for b in bindings:
                 if b.accessor.mode.is_producer:
                     bid = b.accessor.buffer.bid
-                    ms = self._memstate(bid, mid)
+                    ms = self.mem.state(bid, mid)
                     ms.producers.update(b.region, instr)
                     ms.readers = [(r, t) for r, t in ms.readers
                                   if t is instr or not r.difference(b.region).is_empty()]
-                    self._coherence[bid].update(b.region, frozenset([mid]))
+                    self.mem.coherence[bid].update(b.region, frozenset([mid]))
+                    self.mem.note_write(bid, b.region)
 
     # -- outbound transfers (§3.4) -------------------------------------------
     def _compile_push(self, cmd: Command) -> None:
         buf = cmd.buffer
         self._register(buf)
         # stage into pinned host memory, then one send per producer-rect
-        self.make_coherent(buf, PINNED_HOST, cmd.region)
-        ms = self._memstate(buf.bid, PINNED_HOST)
-        for alloc in self._allocs.get((buf.bid, PINNED_HOST), []):
+        self.mem.make_coherent(buf, PINNED_HOST, cmd.region)
+        ms = self.mem.state(buf.bid, PINNED_HOST)
+        for alloc in self.mem.allocations.get((buf.bid, PINNED_HOST), []):
             if not alloc.live:
                 continue
             part = cmd.region.intersect_box(alloc.box)
@@ -582,7 +299,7 @@ class IdagGenerator:
                         recv_alloc=alloc, transfer_id=cmd.transfer_id,
                         name=f"send {buf.name} {b} ->N{cmd.target}", command=cmd)
                     send.add_dependency(producer, DepKind.TRUE)
-                    ai = getattr(alloc, "alloc_instr", None)
+                    ai = alloc.alloc_instr
                     if ai is not None:
                         send.add_dependency(ai, DepKind.TRUE)
                     if self._last_horizon is not None:
@@ -598,8 +315,8 @@ class IdagGenerator:
         buf = cmd.buffer
         self._register(buf)
         # must be able to receive the whole union contiguously (case b)
-        alloc = self.ensure_allocation(buf, PINNED_HOST, cmd.region.bounding_box())
-        ms = self._memstate(buf.bid, PINNED_HOST)
+        alloc = self.mem.ensure(buf, PINNED_HOST, cmd.region.bounding_box())
+        ms = self.mem.state(buf.bid, PINNED_HOST)
 
         consumer_regions = self._consumer_split_regions(cmd)
         anti_deps: list[Instruction] = []
@@ -610,7 +327,7 @@ class IdagGenerator:
             anti_deps.append(w)
 
         def wire(instr: Instruction) -> Instruction:
-            ai = getattr(alloc, "alloc_instr", None)
+            ai = alloc.alloc_instr
             if ai is not None:
                 instr.add_dependency(ai, DepKind.TRUE)
             for a in anti_deps:
@@ -639,7 +356,9 @@ class IdagGenerator:
                     name=f"await-recv {buf.name} {creg}", command=cmd))
                 aw.add_dependency(split, DepKind.TRUE)
                 ms.producers.update(creg, aw)
-        self._coherence[buf.bid].update(cmd.region, frozenset([PINNED_HOST]))
+        self.mem.coherence[buf.bid].update(cmd.region, frozenset([PINNED_HOST]))
+        # fresh remote data supersedes anything spilled from this region
+        self.mem.note_write(buf.bid, cmd.region)
 
     def _consumer_split_regions(self, cmd: Command) -> list[Region]:
         """Subregions per local consumer (device chunk) of an await-push."""
@@ -667,53 +386,26 @@ class IdagGenerator:
         return uniq
 
     # -- reductions -----------------------------------------------------------
-    def _emit_scratch_alloc(self, mid: int, box: Box, dtype,
-                            name: str) -> Allocation:
-        """Emit a one-shot scratch ALLOC (outside the resize machinery),
-        sync-anchored like every other allocation."""
-        scratch = Allocation(mid=mid, bid=None, box=box, dtype=dtype)
-        alloc_instr = self._emit(Instruction(
-            InstructionType.ALLOC, node=self.node,
-            queue=self._queue_for_mem(mid), allocation=scratch, name=name))
-        if self._last_horizon is not None:
-            alloc_instr.add_dependency(self._last_horizon, DepKind.SYNC)
-        elif self._last_epoch is not None:
-            alloc_instr.add_dependency(self._last_epoch, DepKind.SYNC)
-        scratch.alloc_instr = alloc_instr  # type: ignore[attr-defined]
-        return scratch
-
-    def _emit_reduction_scratch(self, red: Reduction,
-                                mid: int) -> tuple[Allocation, Instruction]:
+    def _emit_reduction_scratch(self, red,
+                                mid: int) -> tuple:
         """Allocate + identity-fill one accumulator scratch in ``mid``."""
         buf = red.buffer
-        scratch = self._emit_scratch_alloc(
+        scratch = self.mem.scratch(
             mid, buf.full_box, red.op.acc_dtype(buf.dtype),
             f"alloc red-partial {buf.name} M{mid}")
         fill = self._emit(Instruction(
             InstructionType.FILL_IDENTITY, node=self.node,
-            queue=self._queue_for_mem(mid), allocation=scratch, reduction=red,
+            queue=queue_for_mem(mid), allocation=scratch, reduction=red,
             name=f"fill-identity {buf.name} ({red.op.name}) M{mid}"))
         fill.add_dependency(scratch.alloc_instr, DepKind.TRUE)
         return scratch, fill
-
-    def _free_scratch(self, alloc: Allocation,
-                      anti: list[Instruction]) -> Instruction:
-        """Free a one-shot scratch once all ``anti`` users completed."""
-        fr = self._emit(Instruction(
-            InstructionType.FREE, node=self.node,
-            queue=self._queue_for_mem(alloc.mid), allocation=alloc,
-            name=f"free {alloc}"))
-        for a in anti:
-            fr.add_dependency(a, DepKind.ANTI)
-        alloc.live = False
-        return fr
 
     def _compile_reduce_partial(self, cmd: Command) -> None:
         """Fold device partials into one node partial, broadcast it (§2.2)."""
         red, buf = cmd.reduction, cmd.buffer
         st = self._red_state[cmd.transfer_id]
-        device_parts: list[tuple[Allocation, Instruction]] = st["device"]
-        partial = self._emit_scratch_alloc(
+        device_parts: list[tuple] = st["device"]
+        partial = self.mem.scratch(
             PINNED_HOST, buf.full_box, red.op.acc_dtype(buf.dtype),
             f"alloc red-node-partial {buf.name}")
         lr = Instruction(
@@ -724,13 +416,12 @@ class IdagGenerator:
         lr.add_dependency(partial.alloc_instr, DepKind.TRUE)
         for alloc, producer in device_parts:
             lr.add_dependency(producer, DepKind.TRUE)
-            ai = getattr(alloc, "alloc_instr", None)
-            if ai is not None:
-                lr.add_dependency(ai, DepKind.TRUE)
+            if alloc.alloc_instr is not None:
+                lr.add_dependency(alloc.alloc_instr, DepKind.TRUE)
         self._emit(lr)
         st["partial"] = (partial, lr)
         for alloc, _ in device_parts:
-            self._free_scratch(alloc, [lr])
+            self.mem.free_scratch(alloc, [lr])
         # broadcast the node partial to every other rank; the receiver's
         # GATHER_RECEIVE matches this traffic by its 3-tuple transfer id
         # and lands each payload at its SOURCE rank's slot
@@ -766,7 +457,7 @@ class IdagGenerator:
             # fixed-stride gather staging: slot s holds rank s's partial
             slots = max(peers) + 1
             gbox = Box((0,) * (buf.full_box.rank + 1), (slots,) + buf.shape)
-            gather_alloc = self._emit_scratch_alloc(
+            gather_alloc = self.mem.scratch(
                 PINNED_HOST, gbox, red.op.acc_dtype(buf.dtype),
                 f"alloc red-gather {buf.name}")
             gather_instr = Instruction(
@@ -781,13 +472,13 @@ class IdagGenerator:
             self._emit(gather_instr)
 
         # the combined value lands in the buffer's host backing allocation
-        dst = self.ensure_allocation(buf, PINNED_HOST, buf.full_box)
+        dst = self.mem.ensure(buf, PINNED_HOST, buf.full_box)
         full = buf.full_region
         if red.include_current_value:
             # previous contents enter the fold exactly once — every node
             # holds the same replicated value, so this stays deterministic
-            self.make_coherent(buf, PINNED_HOST, full)
-        ms = self._memstate(buf.bid, PINNED_HOST)
+            self.mem.make_coherent(buf, PINNED_HOST, full)
+        ms = self.mem.state(buf.bid, PINNED_HOST)
         gi = Instruction(
             InstructionType.GLOBAL_REDUCE, node=self.node, queue=("host",),
             reduction=red, src_alloc=gather_alloc,
@@ -795,9 +486,8 @@ class IdagGenerator:
             dst_alloc=dst, participants=cmd.participants,
             include_current=red.include_current_value, command=cmd,
             name=f"global-reduce {buf.name} ({red.op.name})")
-        ai = getattr(dst, "alloc_instr", None)
-        if ai is not None:
-            gi.add_dependency(ai, DepKind.TRUE)
+        if dst.alloc_instr is not None:
+            gi.add_dependency(dst.alloc_instr, DepKind.TRUE)
         if gather_instr is not None:
             gi.add_dependency(gather_instr, DepKind.TRUE)
         if own_partial is not None:
@@ -814,13 +504,14 @@ class IdagGenerator:
         ms.producers.update(full, gi)
         ms.readers = [(r, t) for r, t in ms.readers
                       if not r.difference(full).is_empty()]
-        self._coherence[buf.bid].update(full, frozenset([PINNED_HOST]))
+        self.mem.coherence[buf.bid].update(full, frozenset([PINNED_HOST]))
+        self.mem.note_write(buf.bid, full)
         # scratch lifetimes: the gather staging dies with the fold; the node
         # partial must also outlive every outbound broadcast send
         if gather_alloc is not None:
-            self._free_scratch(gather_alloc, [gi])
+            self.mem.free_scratch(gather_alloc, [gi])
         if own_partial is not None:
-            self._free_scratch(own_partial[0], [gi] + st["sends"])
+            self.mem.free_scratch(own_partial[0], [gi] + st["sends"])
 
     # -- synchronization (§3.5) ---------------------------------------------
     def _compile_sync(self, cmd: Command, itype: InstructionType) -> None:
@@ -838,10 +529,7 @@ class IdagGenerator:
             self._last_epoch = instr
             self._last_horizon = None
         # horizon compaction: prior producers collapse onto the sync point
-        for ms in self._mem.values():
-            ms.producers.update(ms.producers.covered(), instr)
-            ms.producers.coalesce()
-            ms.readers = []
+        self.mem.compact_at_sync(instr)
         if self.retire:
             # everything before this sync is transitively dominated by it;
             # the generator only ever wires new deps against the sync point
@@ -853,20 +541,4 @@ class IdagGenerator:
     # -- shutdown -------------------------------------------------------------
     def free_all(self) -> list[Instruction]:
         """Emit frees for all live allocations (buffer destruction, §3.2)."""
-        out = []
-        for (bid, mid), allocs in self._allocs.items():
-            for a in allocs:
-                if not a.live or mid == USER_HOST:
-                    continue
-                fr = self._emit(Instruction(
-                    InstructionType.FREE, node=self.node,
-                    queue=self._queue_for_mem(mid), allocation=a,
-                    name=f"free {a}"))
-                ms = self._memstate(bid, mid)
-                for r, reader in ms.readers:
-                    fr.add_dependency(reader, DepKind.ANTI)
-                for sub, w in ms.producers.query(Region.from_box(a.box)):
-                    fr.add_dependency(w, DepKind.ANTI)
-                a.live = False
-                out.append(fr)
-        return out
+        return self.mem.free_all()

@@ -1,0 +1,156 @@
+"""Instruction vocabulary shared by the IDAG generator and the memory layer.
+
+The instruction types and the :class:`Instruction` node itself live in their
+own module so that :mod:`repro.core.memory` (allocation lifecycle, spilling)
+and :mod:`repro.core.instruction_graph` (command lowering) can both emit
+instructions without a circular import.  ``instruction_graph`` re-exports
+everything here, so external users keep importing from there.
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .allocation import Allocation
+from .buffer import Accessor
+from .reduction import Reduction
+from .region import Box, Region
+from .task_graph import DepKind
+
+
+class InstructionType(enum.Enum):
+    ALLOC = "alloc"
+    COPY = "copy"
+    FREE = "free"
+    # budget-pressure data movement (memory.py): a SPILL copies the only
+    # coherent replica of a region out of a budgeted memory before its
+    # allocation is evicted; a RELOAD is the lazy copy back on next access.
+    # Both execute exactly like COPY — the distinct types exist for
+    # dependency auditing, tracing and overhead accounting.
+    SPILL = "spill"
+    RELOAD = "reload"
+    SEND = "send"
+    RECEIVE = "receive"
+    SPLIT_RECEIVE = "split_receive"
+    AWAIT_RECEIVE = "await_receive"
+    # reduction pipeline (§2.2): identity-fill device scratch, combine device
+    # partials per node, gather peer partials (multi-peer, pilot-driven,
+    # fixed-stride slots) and fold them in canonical node order
+    FILL_IDENTITY = "fill_identity"
+    LOCAL_REDUCE = "local_reduce"
+    GATHER_RECEIVE = "gather_receive"
+    GLOBAL_REDUCE = "global_reduce"
+    DEVICE_KERNEL = "device_kernel"
+    HOST_TASK = "host_task"
+    HORIZON = "horizon"
+    EPOCH = "epoch"
+
+
+_instr_ids = itertools.count()
+
+
+@dataclass
+class AccessorBinding:
+    """Executor-facing: which allocation backs an accessor for one kernel."""
+    accessor: Accessor
+    allocation: Allocation
+    region: Region                # buffer-space region the kernel may touch
+
+
+@dataclass
+class ReductionBinding:
+    """Executor-facing: the identity-filled scratch a kernel reduces into."""
+    reduction: Reduction
+    allocation: Allocation        # per-device accumulator scratch
+
+
+@dataclass
+class Pilot:
+    """Pilot message: announces an inbound transfer to the receiver (§3.4).
+
+    ``transfer_id`` is ``(task id, buffer id)`` for push traffic and
+    ``(task id, buffer id, 1)`` for reduction-gather traffic, so the two
+    protocols never alias; the arbiter routes by transfer id and lands
+    gather payloads at the fixed-stride slot of their *source* rank rather
+    than at a buffer-space offset.  ``gather`` is wire metadata only (a
+    real MPI transport would select the superaccumulator datatype from
+    it); the in-process arbiter treats pilots as accounting.
+    """
+    source: int
+    target: int
+    transfer_id: tuple
+    box: Box                      # buffer-space box being sent
+    msg_id: int
+    gather: bool = False          # reduction-gather transfer (metadata)
+
+
+@dataclass
+class Instruction:
+    itype: InstructionType
+    node: int
+    # queue affinity: ("device", d) | ("host",) | ("comm",) — executor routing
+    queue: tuple = ("host",)
+    # ALLOC / FREE
+    allocation: Optional[Allocation] = None
+    # COPY / SPILL / RELOAD
+    src_alloc: Optional[Allocation] = None
+    dst_alloc: Optional[Allocation] = None
+    copy_box: Optional[Box] = None           # buffer-space box to copy
+    # SEND
+    dest: Optional[int] = None
+    msg_id: Optional[int] = None
+    send_box: Optional[Box] = None
+    # RECEIVE / SPLIT_RECEIVE / AWAIT_RECEIVE / GATHER_RECEIVE
+    transfer_id: Optional[tuple] = None
+    recv_region: Optional[Region] = None
+    recv_alloc: Optional[Allocation] = None
+    split_parent: Optional["Instruction"] = None
+    # reductions: FILL_IDENTITY fills ``allocation``; LOCAL_REDUCE folds
+    # ``reduce_srcs`` into ``dst_alloc``; GATHER_RECEIVE expects one partial
+    # per rank in ``gather_sources`` landed at slot=rank in ``recv_alloc``;
+    # GLOBAL_REDUCE folds slots of ``src_alloc`` (+ own partial in
+    # ``reduce_srcs``) over ``participants`` in node order into ``dst_alloc``
+    reduction: Optional[Reduction] = None
+    reduce_srcs: tuple[Allocation, ...] = ()
+    gather_sources: tuple[int, ...] = ()
+    participants: tuple[int, ...] = ()
+    include_current: bool = False
+    # DEVICE_KERNEL / HOST_TASK
+    kernel_fn: Optional[Callable] = None
+    chunk: Optional[Box] = None
+    bindings: tuple[AccessorBinding, ...] = ()
+    red_bindings: tuple[ReductionBinding, ...] = ()
+    device: Optional[int] = None
+    name: str = ""
+    command: Optional[object] = None          # the lowered Command, if any
+    iid: int = field(default_factory=lambda: next(_instr_ids))
+    dependencies: list[tuple["Instruction", DepKind]] = field(default_factory=list)
+    dependents: list["Instruction"] = field(default_factory=list)
+    # set by the executor:
+    state: str = "pending"
+
+    def add_dependency(self, dep: "Instruction", kind: DepKind) -> None:
+        if dep is self:
+            return
+        for d, _ in self.dependencies:
+            if d is dep:
+                return
+        self.dependencies.append((dep, kind))
+        dep.dependents.append(self)
+
+    def __hash__(self) -> int:
+        return self.iid
+
+    def __repr__(self) -> str:
+        extra = ""
+        if self.itype == InstructionType.DEVICE_KERNEL:
+            extra = f":{self.name}@D{self.device}"
+        elif self.itype in (InstructionType.ALLOC, InstructionType.FREE):
+            extra = f":{self.allocation}"
+        elif self.itype in (InstructionType.COPY, InstructionType.SPILL,
+                            InstructionType.RELOAD):
+            extra = f":{self.src_alloc and self.src_alloc.aid}->{self.dst_alloc and self.dst_alloc.aid}"
+        return f"I{self.iid}<{self.itype.value}{extra}>"

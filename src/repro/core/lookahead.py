@@ -43,10 +43,15 @@ class LookaheadScheduler:
     """Command queue between CDAG generation and IDAG compilation."""
 
     def __init__(self, idag: IdagGenerator, *, enabled: bool = True,
-                 horizon_flush: int = 2):
+                 horizon_flush: int = 2, retire_compiled: bool = False):
         self.idag = idag
         self.enabled = enabled
         self.horizon_flush = horizon_flush
+        # ``retire_compiled`` (runtime mode): clear a command's dependency
+        # lists once it is lowered, so retired CDAG prefixes are not kept
+        # alive through inter-command edges (O(window) scheduler memory).
+        # Structural tests that inspect command graphs leave this off.
+        self.retire_compiled = retire_compiled
         self.queue: list[Command] = []
         self._horizons_since_alloc = 0
         self._have_allocating = False
@@ -55,6 +60,19 @@ class LookaheadScheduler:
         # requirement covered by the pending window is not newly allocating.
         self._pending: dict[tuple[int, int], Region] = {}
         self.stats = LookaheadStats()
+
+    # ------------------------------------------------------------------
+    def _compile(self, cmd: Command) -> list[Instruction]:
+        out = self.idag.compile(cmd)
+        if self.retire_compiled:
+            # the command is fully lowered; its backward edges are no longer
+            # consulted — clearing them breaks the reference chain that
+            # would keep retired CDAG prefixes alive.  Dependents stay: the
+            # sync frontier scan (`not c.dependents`) relies on them to add
+            # SYNC edges only to graph leaves, and forward references die
+            # with the command when its window is trimmed.
+            cmd.dependencies.clear()
+        return out
 
     # ------------------------------------------------------------------
     def _is_allocating(self, cmd: Command) -> bool:
@@ -81,7 +99,7 @@ class LookaheadScheduler:
         """Feed one command; returns any instructions that became ready."""
         self.stats.commands_seen += 1
         if not self.enabled:
-            return self.idag.compile(cmd)
+            return self._compile(cmd)
 
         allocating = self._is_allocating(cmd)
         if allocating:
@@ -89,7 +107,7 @@ class LookaheadScheduler:
 
         if not self._have_allocating and not allocating:
             # steady state: pass through immediately (no latency added)
-            return self.idag.compile(cmd)
+            return self._compile(cmd)
 
         self.queue.append(cmd)
         self.stats.commands_queued_peak = max(self.stats.commands_queued_peak,
@@ -107,19 +125,32 @@ class LookaheadScheduler:
 
     # ------------------------------------------------------------------
     def flush(self) -> list[Instruction]:
-        """Compile all queued commands with widened allocation hints."""
+        """Compile all queued commands with widened allocation hints.
+
+        The merged window requirements go to the memory layer as
+        *reservations* (``MemoryManager.reserve``): they widen the first
+        ``alloc`` to cover everything observed — eliding the fig.-3 resize
+        chains — AND protect those regions from budget eviction, so the
+        lookahead and the eviction policy cooperate instead of fighting
+        (evicting a region the window is about to touch would guarantee a
+        spill/reload round-trip).
+        """
         if not self.queue:
             return []
         self.stats.flushes += 1
-        # merge allocation requirements of the whole window into hints
-        hints: dict[tuple[int, int], Region] = dict(self.idag.alloc_hints)
+        # merge allocation requirements of the whole window into hints;
+        # the widening hints accumulate across flushes, but only THIS
+        # window's requirements become eviction-protection reservations
+        hints: dict[tuple[int, int], Region] = dict(self.idag.mem.hints)
+        window: dict[tuple[int, int], Region] = {}
         for cmd in self.queue:
             for key, region in self.idag.allocation_requirements(cmd).items():
                 hints[key] = hints.get(key, Region.empty()).union(region)
-        self.idag.alloc_hints = hints
+                window[key] = window.get(key, Region.empty()).union(region)
+        self.idag.mem.reserve(hints, window=window)
         out: list[Instruction] = []
         for cmd in self.queue:
-            out.extend(self.idag.compile(cmd))
+            out.extend(self._compile(cmd))
         self.queue.clear()
         self._pending.clear()
         self._have_allocating = False

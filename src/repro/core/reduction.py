@@ -66,13 +66,38 @@ def _fixed_to_float(n: int) -> float:
     return float(Fraction(n, 1 << _SCALE_BITS))
 
 
+def _float_fixed_parts(values: np.ndarray):
+    """Vectorized decomposition of finite float64s on the 2^-1074 grid.
+
+    Returns ``(sign, a, s)`` int64 arrays with ``v == sign * a * 2**(s-1074)``
+    exactly, ``a < 2**53`` and ``s >= 0``: ``frexp`` yields ``v = m * 2**e``
+    with ``m`` holding <= 53 significant bits, so ``a = |m| * 2**53`` is an
+    exact int64 and ``s = e - 53 + 1074``.  Subnormals produce ``s < 0``
+    with enough trailing zero bits in ``a`` for an exact right shift.
+    """
+    values = np.ascontiguousarray(values, dtype=np.float64)
+    if not np.isfinite(values).all():
+        bad = values[~np.isfinite(values)].ravel()[0]
+        raise ValueError(f"non-finite contribution {bad!r} in exact-sum reduction")
+    m, e = np.frexp(values)
+    n = (m * float(1 << 53)).astype(np.int64)        # exact: integer-valued
+    sign = np.sign(n)
+    a = np.abs(n)
+    s = e.astype(np.int64) - 53 + _SCALE_BITS
+    neg = s < 0
+    if neg.any():
+        a = np.where(neg, a >> np.where(neg, -s, 0), a)
+        s = np.where(neg, 0, s)
+    return sign, a, s
+
+
 def _exact_scale(values: np.ndarray) -> np.ndarray:
     """Element-wise exact fixed-point lift into object dtype.
 
     Integer inputs lift as ``int(v) << 1074`` (exact for any int64, unlike
-    a cast through float64 which silently rounds above 2^53); floats go
-    through the frexp path.  Both land on the same 2^-1074 fixed-point
-    grid, so partials mix freely.
+    a cast through float64 which silently rounds above 2^53); floats use
+    the vectorized frexp decomposition with one big-int shift per element.
+    Both land on the same 2^-1074 fixed-point grid, so partials mix freely.
     """
     values = np.asarray(values)
     flat = values.ravel()
@@ -81,9 +106,60 @@ def _exact_scale(values: np.ndarray) -> np.ndarray:
         for i, v in enumerate(flat):
             out[i] = int(v) << _SCALE_BITS
     else:
-        for i, v in enumerate(flat):
-            out[i] = _float_to_fixed(v)
+        sign, a, s = _float_fixed_parts(flat)
+        for i in range(flat.size):
+            out[i] = int(sign[i]) * (int(a[i]) << int(s[i]))
     return out.reshape(values.shape)
+
+
+# two-level binned accumulator (ReproBLAS-style): level 1 sums signed 32-bit
+# limbs of each contribution into int64 bins (pure numpy, no Python ints on
+# the per-element path); level 2 folds the bins into one arbitrary-precision
+# integer per output element with a single carry pass.  2098 significant bits
+# (s <= 2045, 53-bit mantissa) span ceil(2098/32) = 66 limbs; +2 slack.
+_NBINS = 68
+# each limb contribution is < 2^32, so int64 bins absorb 2^31 additions
+# before overflow could occur — chunk longer inputs
+_BIN_CHUNK = 1 << 30
+
+
+def _exact_scale_sum(values: np.ndarray) -> np.ndarray:
+    """Exact fixed-point sum over the leading axis, fully vectorized.
+
+    ``values`` has shape ``(n_items, *out_shape)``; the result is an object
+    ndarray of Python ints with shape ``out_shape``, bitwise identical to
+    ``_exact_scale(values).sum(axis=0)`` (both are exact integer sums on the
+    same grid — the fast path changes the work, not the value).
+    """
+    values = np.asarray(values, dtype=np.float64)
+    out_shape = values.shape[1:]
+    size = int(np.prod(out_shape, dtype=np.int64)) if out_shape else 1
+    flat = values.reshape(values.shape[0], size)
+    out = np.zeros(size, dtype=object)
+    for lo in range(0, flat.shape[0], _BIN_CHUNK):
+        chunk = flat[lo:lo + _BIN_CHUNK]
+        # fresh bins per chunk: each row contributes at most one limb
+        # (< 2^32) per bin, so 2^30 rows stay below the int64 overflow
+        # threshold; the level-2 big-int fold below drains them
+        bins = np.zeros((_NBINS, size), dtype=np.int64)
+        pos = np.broadcast_to(np.arange(size, dtype=np.int64), chunk.shape)
+        sign, a, s = _float_fixed_parts(chunk)
+        q, r = s >> 5, s & 31
+        # |a| << r spans up to 85 bits -> three 32-bit limbs, computed
+        # without ever overflowing int64 (shift counts stay < 64)
+        c0 = (a & ((np.int64(1) << (32 - r)) - 1)) << r
+        c1 = (a >> (32 - r)) & np.int64(0xFFFFFFFF)
+        c2 = (a >> 32) >> (32 - r)
+        np.add.at(bins, (q, pos), sign * c0)
+        np.add.at(bins, (q + 1, pos), sign * c1)
+        np.add.at(bins, (q + 2, pos), sign * c2)
+        for j in range(size):
+            col = bins[:, j]
+            total = 0
+            for k in np.nonzero(col)[0]:
+                total += int(col[k]) << (32 * int(k))
+            out[j] += total
+    return out.reshape(out_shape)
 
 
 class ReductionOp:
@@ -148,7 +224,13 @@ class ReductionOp:
         if not values.size:
             return
         if self.exact_sum:
-            acc += _exact_scale(values).sum(axis=0)
+            if (np.issubdtype(values.dtype, np.integer)
+                    or values.dtype == np.dtype(object)):
+                acc += _exact_scale(values).sum(axis=0)
+            else:
+                # vectorized two-level binned accumulation; bitwise
+                # identical to the elementwise lift (both exact)
+                acc += _exact_scale_sum(values)
         elif isinstance(self._fold, np.ufunc):
             acc[...] = self._fold(
                 acc, self._fold.reduce(values.astype(acc.dtype, copy=False),

@@ -21,6 +21,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from .allocation import device_memory
 from .buffer import Accessor, VirtualBuffer
 from .command_graph import CommandGraphGenerator, CommandType
 from .communicator import Communicator
@@ -44,10 +45,15 @@ class _NodeScheduler:
     def __init__(self, node: int, rt: "Runtime"):
         self.node = node
         self.rt = rt
-        self.cdag = CommandGraphGenerator(rt.num_nodes)
+        self.cdag = CommandGraphGenerator(rt.num_nodes, retire_for=node)
+        budgets: dict[int, int] = dict(rt.memory_budgets or {})
+        if rt.device_memory_budget is not None:
+            for d in range(rt.devices_per_node):
+                budgets.setdefault(device_memory(d), rt.device_memory_budget)
         self.idag = IdagGenerator(node, rt.devices_per_node, d2d=rt.d2d,
-                                  retire=True)
-        self.lookahead = LookaheadScheduler(self.idag, enabled=rt.lookahead)
+                                  retire=True, budgets=budgets or None)
+        self.lookahead = LookaheadScheduler(self.idag, enabled=rt.lookahead,
+                                            retire_compiled=True)
         self.inbox: "queue.SimpleQueue" = queue.SimpleQueue()
         # bootstrap instructions (initial epoch) emitted at construction;
         # count its sync instruction so the throttle lag is not off by one
@@ -142,11 +148,19 @@ class Runtime:
                  lookahead: bool = True, d2d: bool = True,
                  check_bounds: bool = False, trace: bool = False,
                  horizon_step: int = 4, queues_per_device: int = 2,
-                 host_threads: int = 4, max_horizon_lag: int = 8):
+                 host_threads: int = 4, max_horizon_lag: int = 8,
+                 device_memory_budget: Optional[int] = None,
+                 memory_budgets: Optional[dict[int, int]] = None):
         self.num_nodes = num_nodes
         self.devices_per_node = devices_per_node
         self.lookahead = lookahead
         self.max_horizon_lag = max_horizon_lag
+        # per-device-memory byte budget (None = unbudgeted, the historical
+        # behavior); ``memory_budgets`` maps explicit memory ids -> bytes
+        # for finer control (e.g. a pinned-host budget), overriding the
+        # per-device default where both are given
+        self.device_memory_budget = device_memory_budget
+        self.memory_budgets = memory_budgets
         self.d2d = d2d
         self.tracer = Tracer() if trace else None
         self.tdag = TaskGraph(horizon_step=horizon_step)
@@ -184,7 +198,9 @@ class Runtime:
     _sent = 0
 
     def _broadcast(self) -> None:
-        newly = self.tdag.tasks[self._sent:]
+        # ``_sent`` counts lifetime task indices; the TDAG list may have a
+        # retired prefix (``_base``), so index relative to it
+        newly = self.tdag.tasks[self._sent - self.tdag._base:]
         for task in newly:
             if task.ttype == TaskType.EPOCH and task.name == "init":
                 self._sent += 1
@@ -192,13 +208,15 @@ class Runtime:
             for sched in self.schedulers:
                 sched.inbox.put(task)
             self._sent += 1
+        # everything broadcast and behind the last sync point can retire
+        self.tdag.retire_to(self._sent)
 
     def sync(self, timeout: float = 120.0) -> None:
         """Emit an epoch and block until every rank has executed it."""
         epoch = self.tdag.emit_epoch("sync")
         futures = [queue.SimpleQueue() for _ in range(self.num_nodes)]
         # flush any tasks emitted before the epoch, then the epoch itself
-        newly = self.tdag.tasks[self._sent:]
+        newly = self.tdag.tasks[self._sent - self.tdag._base:]
         for task in newly:
             if task is epoch:
                 req = _EpochRequest(task=epoch, futures=futures)
@@ -208,6 +226,7 @@ class Runtime:
                 for sched in self.schedulers:
                     sched.inbox.put(task)
             self._sent += 1
+        self.tdag.retire_to(self._sent)
         for n, ex in enumerate(self.executors):
             cid = futures[n].get(timeout=timeout)
             if cid is not None:
@@ -249,6 +268,29 @@ class Runtime:
 
     def total_allocs(self) -> int:
         return sum(s.idag.alloc_count for s in self.schedulers)
+
+    def device_peak_bytes(self) -> int:
+        """Max real materialized bytes observed in any device memory of any
+        node — the high-water mark budget acceptance compares against."""
+        from .allocation import is_device_memory
+        return max((v for ex in self.executors
+                    for mid, v in ex.mem_peak.items() if is_device_memory(mid)),
+                   default=0)
+
+    def memory_report(self) -> list[dict]:
+        """Per-node memory-layer report: the scheduler-side compile-time
+        model (budgets, modeled peaks, spill/reload/eviction counters) and
+        the executor-side real materialized-byte peaks per memory id."""
+        out = []
+        for n in range(self.num_nodes):
+            mm = self.schedulers[n].idag.mem
+            ex = self.executors[n]
+            rep = mm.snapshot()
+            rep["node"] = n
+            rep["real_used"] = dict(ex.mem_used)
+            rep["real_peak"] = dict(ex.mem_peak)
+            out.append(rep)
+        return out
 
     def shutdown(self) -> None:
         if self._shut:

@@ -89,6 +89,10 @@ class TaskGraph:
 
     def __init__(self, horizon_step: int = 4, max_front_width: int = 16):
         self.tasks: list[Task] = []
+        # prefix retirement (runtime mode): ``tasks[0]`` is lifetime index
+        # ``_base``; ``retire_to`` drops broadcast prefixes at sync points so
+        # TDAG memory is O(window) on long programs (DESIGN.md §3)
+        self._base = 0
         self.horizon_step = horizon_step
         self.max_front_width = max_front_width
         self._buffers: dict[int, _BufferState] = {}
@@ -255,6 +259,36 @@ class TaskGraph:
         self._last_epoch = epoch
         self._last_horizon = None
         return epoch
+
+    # ------------------------------------------------------------------
+    @property
+    def task_count(self) -> int:
+        """Lifetime number of tasks ever submitted (incl. retired ones)."""
+        return self._base + len(self.tasks)
+
+    def retire_to(self, lifetime_idx: int) -> int:
+        """Drop the task-list prefix below ``lifetime_idx``, bounded by the
+        last sync point (everything before it is transitively dominated by
+        that sync and all internal tracking maps were compacted onto it).
+
+        Retired tasks get their dependency lists cleared, breaking the
+        reference chain that would otherwise keep the whole task history
+        alive through horizon edges.  Callers must only pass indices of
+        tasks that every consumer (node scheduler) has already received —
+        the CDAG never reads task graph edges, so clearing is safe even if
+        a scheduler has not *processed* the task yet.  Returns the number
+        of tasks dropped.
+        """
+        cut = min(lifetime_idx - self._base, self._frontier_pos)
+        if cut <= 0:
+            return 0
+        for t in self.tasks[:cut]:
+            t.dependencies.clear()
+            t.dependents.clear()
+        del self.tasks[:cut]
+        self._base += cut
+        self._frontier_pos -= cut
+        return cut
 
     # ------------------------------------------------------------------
     def kernel_tasks(self) -> list[Task]:

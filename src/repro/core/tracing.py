@@ -31,6 +31,9 @@ class Tracer:
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self.spans: list[Span] = []
+        # counter tracks: name -> [(t, value)] — used for the per-memory
+        # byte high-water marks the budget acceptance checks read
+        self.counters: dict[str, list[tuple[float, float]]] = defaultdict(list)
         self._open: dict[tuple[int, int], float] = {}   # (node, iid) -> t_issue
         self.epoch = time.perf_counter()
 
@@ -40,6 +43,18 @@ class Tracer:
     def span(self, lane: str, kind: str, name: str, t0: float, t1: float) -> None:
         with self._lock:
             self.spans.append(Span(lane, kind, name, t0, t1))
+
+    def counter(self, name: str, value: float) -> None:
+        """Record one sample of a named counter (e.g. ``N0.M2.bytes``)."""
+        with self._lock:
+            self.counters[name].append((self.now(), value))
+
+    def counter_peaks(self, suffix: str = ".bytes") -> dict[str, float]:
+        """Max observed value per counter track ending in ``suffix``."""
+        with self._lock:
+            return {name: max(v for _, v in samples)
+                    for name, samples in self.counters.items()
+                    if name.endswith(suffix) and samples}
 
     # executor integration -------------------------------------------------
     def issue(self, node: int, instr) -> None:
@@ -113,6 +128,13 @@ class Tracer:
                                "name": s.name or s.kind, "cat": s.kind,
                                "ts": s.t0 * 1e6,
                                "dur": max((s.t1 - s.t0) * 1e6, 0.001)})
+        # counter tracks (per-memory bytes, …) render as area charts
+        with self._lock:
+            counters = {k: list(v) for k, v in self.counters.items()}
+        for name, samples in counters.items():
+            for t, v in samples:
+                events.append({"ph": "C", "pid": 1, "name": name,
+                               "ts": t * 1e6, "args": {"value": v}})
         with open(path, "w") as f:
             json.dump({"traceEvents": events,
                        "displayTimeUnit": "ms"}, f)

@@ -1,0 +1,343 @@
+"""Memory-layer tests (DESIGN.md §8): budgeted MemoryManager, spill/reload
+correctness against an unbudgeted oracle, eviction ordering under concurrent
+readers, and lookahead-reservation cooperation.
+"""
+
+import numpy as np
+
+from repro.core import (IdagGenerator, InstructionType, Runtime, TaskGraph,
+                        generate_cdag, one_to_one, read, read_write, write)
+from repro.core.allocation import PINNED_HOST, device_memory
+from repro.core.buffer import VirtualBuffer
+from repro.core.command_graph import CommandType
+from repro.core.task_graph import DepKind
+
+N = 4096                      # per-buffer doubles -> 32768 bytes
+BYTES = N * 8
+
+
+# --------------------------------------------------------------------------
+# end-to-end: budget pressure vs an unbudgeted oracle
+# --------------------------------------------------------------------------
+def _phased_program(q, groups=3, revisit=True):
+    """``groups`` disjoint (A, B) buffer pairs touched in phases; phase 0 is
+    split in half around the other phases so its buffers are evicted while
+    dirty (spill) and touched again afterwards (reload)."""
+    rng = np.random.default_rng(7)
+    bufs = [(q.buffer((N,), init=rng.normal(size=N), name=f"A{g}"),
+             q.buffer((N,), init=np.zeros(N), name=f"B{g}"))
+            for g in range(groups)]
+
+    def steps(g, lo, hi):
+        A, B = bufs[g]
+        for s in range(lo, hi):
+            def k(chunk, av, bv, s=s):
+                bv.set(chunk, bv.get(chunk) + av.get(chunk) * (s + 1))
+            q.submit(f"g{g}s{s}", (N,), [read(A, one_to_one()),
+                                         read_write(B, one_to_one())], k)
+
+    if revisit:
+        steps(0, 0, 3)
+        for g in range(1, groups):
+            steps(g, 0, 6)
+        steps(0, 3, 6)        # phase 0 resumes after eviction -> RELOAD
+    else:
+        for g in range(groups):
+            steps(g, 0, 6)
+    return [q.gather(B) for _, B in bufs]
+
+
+def _device_peak(report):
+    return max((v for k, v in report["real_peak"].items() if k >= 2),
+               default=0)
+
+
+def test_spill_reload_bitwise_oracle():
+    """Budget = 50% of the unbudgeted high-water mark: results stay
+    bit-identical, real per-memory peaks stay under budget, and both spill
+    and reload paths are actually exercised."""
+    with Runtime(1, 1) as q:
+        base = _phased_program(q)
+        rep = q.memory_report()[0]
+    hwm = _device_peak(rep)
+    assert rep["spills"] == rep["reloads"] == 0      # unbudgeted: no pressure
+
+    budget = hwm // 2
+    with Runtime(1, 1, device_memory_budget=budget) as q:
+        out = _phased_program(q)
+        rep2 = q.memory_report()[0]
+        warnings = q.warnings
+    assert warnings == []
+    for a, b in zip(base, out):
+        np.testing.assert_array_equal(a, b)
+    assert rep2["spills"] > 0 and rep2["reloads"] > 0
+    assert rep2["evictions"] > 0
+    assert rep2["over_budget"] == 0
+    assert _device_peak(rep2) <= budget
+    # the compile-time model never exceeded the budget either
+    assert all(v <= budget for k, v in rep2["peak"].items() if k >= 2)
+
+
+def test_budget_quarter_of_working_set():
+    """25% of the working set (6 phases): still bit-identical, still under
+    budget — one phase's working set fits, everything else cycles through."""
+    with Runtime(1, 1) as q:
+        base = _phased_program(q, groups=6, revisit=False)
+        rep = q.memory_report()[0]
+    hwm = _device_peak(rep)
+    budget = hwm // 4
+    with Runtime(1, 1, device_memory_budget=budget) as q:
+        out = _phased_program(q, groups=6, revisit=False)
+        rep2 = q.memory_report()[0]
+        warnings = q.warnings
+    assert warnings == []
+    for a, b in zip(base, out):
+        np.testing.assert_array_equal(a, b)
+    assert rep2["evictions"] > 0
+    assert _device_peak(rep2) <= budget
+
+
+def test_budget_multi_node_multi_device():
+    """Budgets are per device memory on every node; a 2x2 grid stays
+    bit-identical under 50% pressure."""
+    def run(budget):
+        with Runtime(2, 2, device_memory_budget=budget) as q:
+            out = _phased_program(q)
+            reps = q.memory_report()
+            warnings = q.warnings
+        return out, reps, warnings
+
+    base, reps, _ = run(None)
+    hwm = max(_device_peak(r) for r in reps)
+    out, reps2, warnings = run(hwm // 2)
+    assert warnings == []
+    for a, b in zip(base, out):
+        np.testing.assert_array_equal(a, b)
+    assert sum(r["evictions"] for r in reps2) > 0
+    assert all(_device_peak(r) <= hwm // 2 for r in reps2)
+
+
+def test_traced_memory_counters_match_executor_peaks():
+    """With tracing on, per-memory byte counter tracks are recorded and
+    their peaks (``Tracer.counter_peaks``) agree with the executor's
+    ground-truth accounting."""
+    with Runtime(1, 1, device_memory_budget=2 * BYTES, trace=True) as q:
+        _phased_program(q)
+        tracer = q.tracer
+        ex_peaks = {f"N0.M{mid}.bytes": v
+                    for mid, v in q.executors[0].mem_peak.items()}
+    peaks = tracer.counter_peaks()
+    assert peaks, "no counter tracks recorded"
+    for name, v in ex_peaks.items():
+        assert peaks.get(name) == v, (name, peaks.get(name), v)
+    dev = {k: v for k, v in peaks.items() if ".M2." in k}
+    assert dev and all(v <= 2 * BYTES for v in dev.values())
+
+
+def test_over_budget_fallback_never_fails():
+    """A budget smaller than a single kernel's working set cannot be met —
+    the manager goes over budget with a warning instead of failing, and the
+    results remain correct."""
+    with Runtime(1, 1, device_memory_budget=BYTES // 2) as q:
+        A = q.buffer((N,), init=np.ones(N), name="A")
+        B = q.buffer((N,), init=np.zeros(N), name="B")
+
+        def k(chunk, av, bv):
+            bv.set(chunk, av.get(chunk) * 2.0)
+
+        q.submit("k", (N,), [read(A, one_to_one()), write(B, one_to_one())], k)
+        out = q.gather(B)
+        rep = q.memory_report()[0]
+        warnings = q.warnings
+    np.testing.assert_array_equal(out, np.full(N, 2.0))
+    assert rep["over_budget"] > 0
+    assert any("over budget" in w for w in warnings)
+
+
+def test_reduction_under_budget_bit_for_bit():
+    """Reduction scratches are charged against the budget but never evicted;
+    a budgeted distributed sum stays bitwise equal to the unbudgeted one."""
+    import math
+    n = 8192
+    rng = np.random.default_rng(11)
+    data = rng.normal(size=n)
+    from repro.core import reduction
+
+    def run(budget):
+        with Runtime(2, 2, device_memory_budget=budget) as rt:
+            X = rt.buffer((n,), init=data, name="X")
+            Y = rt.buffer((n,), init=data * 2, name="Y")
+            E = rt.buffer((1,), init=np.zeros(1), name="E")
+
+            def k(chunk, v, red):
+                red.contribute(v.get(chunk))
+
+            rt.submit("r1", (n,), [read(X, one_to_one()), reduction(E, "sum")], k)
+            rt.submit("r2", (n,), [read(Y, one_to_one()), reduction(E, "sum")], k)
+            return float(rt.gather(E)[0])
+
+    unbudgeted = run(None)
+    assert unbudgeted == math.fsum(data * 2)
+    assert run(n * 8) == unbudgeted        # room for ~one buffer chunk set
+
+
+# --------------------------------------------------------------------------
+# structural: spill-chain dependency rules
+# --------------------------------------------------------------------------
+def _compile(tdag, idag):
+    gen = generate_cdag(tdag, 1)
+    out = []
+    for cmd in gen.commands[0]:
+        if cmd.ctype == CommandType.EPOCH and cmd.task is None:
+            continue
+        out.extend(idag.compile(cmd))
+    return out
+
+
+def test_spill_chain_dependency_rules():
+    """SPILL copies depend on the producer, the evicting FREE is
+    anti-ordered after the spill copy AND all prior readers, and the
+    pressure-causing ALLOC is anti-ordered after the FREE (so the executor
+    can never exceed the budget at runtime)."""
+    tdag = TaskGraph()
+    A = VirtualBuffer((N,), name="A")
+    B = VirtualBuffer((N,), name="B")
+    tdag.submit("wA", (N,), [write(A, one_to_one())])
+    tdag.submit("wB", (N,), [write(B, one_to_one())])   # evicts A (dirty)
+    tdag.submit("rA", (N,), [read_write(A, one_to_one())])  # reloads A
+    idag = IdagGenerator(0, 1, budgets={device_memory(0): BYTES})
+    _compile(tdag, idag)
+    instrs = idag.instructions
+    by_type = {}
+    for i in instrs:
+        by_type.setdefault(i.itype, []).append(i)
+
+    spills = by_type.get(InstructionType.SPILL, [])
+    reloads = by_type.get(InstructionType.RELOAD, [])
+    # A is spilled to make room for B; B is spilled when A returns
+    assert len(spills) == 2 and len(reloads) == 1
+    spill = next(s for s in spills if s.src_alloc.bid == A.bid)
+    assert spill.src_alloc.mid == device_memory(0)
+    assert spill.dst_alloc.mid == PINNED_HOST
+    # the spill reads what the kernel wrote
+    wA = next(i for i in instrs if i.name == "wA")
+    assert any(d is wA for d, _ in spill.dependencies)
+
+    # the FREE of the victim is anti-ordered after the spill copy
+    victim_free = next(i for i in by_type[InstructionType.FREE]
+                       if i.allocation is spill.src_alloc)
+    dep_kinds = {d.iid: k for d, k in victim_free.dependencies}
+    assert dep_kinds.get(spill.iid) == DepKind.ANTI
+    assert dep_kinds.get(wA.iid) == DepKind.ANTI
+
+    # the ALLOC that caused the pressure waits for the FREE
+    b_alloc = next(i for i in by_type[InstructionType.ALLOC]
+                   if i.allocation.bid == B.bid
+                   and i.allocation.mid == device_memory(0))
+    assert any(d is victim_free and k == DepKind.ANTI
+               for d, k in b_alloc.dependencies)
+    assert instrs.index(victim_free) < instrs.index(b_alloc)
+
+    # the reload brings the spilled bytes back and reads the spill copy
+    reload = reloads[0]
+    assert reload.dst_alloc.mid == device_memory(0)
+    assert reload.src_alloc is spill.dst_alloc
+    assert any(d is spill for d, _ in reload.dependencies)
+
+
+def test_eviction_orders_after_concurrent_readers():
+    """Two kernels read the victim allocation; the evicting FREE must be
+    anti-ordered after BOTH readers (the lifetime bookkeeping the manager
+    inherited from the reduction scratches)."""
+    tdag = TaskGraph()
+    A = VirtualBuffer((N,), name="A", initial_value=np.zeros(N))
+    O1 = VirtualBuffer((N,), name="O1")
+    O2 = VirtualBuffer((N,), name="O2")
+    C = VirtualBuffer((2 * N,), name="C")
+    tdag.submit("r1", (N,), [read(A, one_to_one()), write(O1, one_to_one())])
+    tdag.submit("r2", (N,), [read(A, one_to_one()), write(O2, one_to_one())])
+    tdag.submit("wC", (2 * N,), [write(C, one_to_one())])
+    # budget fits A+O1+O2; C needs two evictions — LRU reaches O1 then A
+    # (A was re-touched by r2, so it outlives O1 but not O2)
+    idag = IdagGenerator(0, 1, budgets={device_memory(0): 3 * BYTES})
+    _compile(tdag, idag)
+    readers = [i for i in idag.instructions
+               if i.itype == InstructionType.DEVICE_KERNEL
+               and i.name in ("r1", "r2")]
+    a_alloc = readers[0].bindings[0].allocation
+    victim_frees = [i for i in idag.instructions
+                    if i.itype == InstructionType.FREE
+                    and i.allocation is a_alloc]
+    assert victim_frees, "A's allocation was not evicted"
+    deps = {d.iid for d, k in victim_frees[0].dependencies
+            if k == DepKind.ANTI}
+    for r in readers:
+        assert r.iid in deps, f"FREE not ordered after reader {r.name}"
+
+
+def test_lookahead_reservation_protects_from_eviction():
+    """Under pressure the eviction policy prefers victims outside the
+    lookahead reservations; reserved allocations only fall when nothing
+    else is left."""
+    tdag = TaskGraph()
+    A = VirtualBuffer((N,), name="A")
+    B = VirtualBuffer((N,), name="B")
+    C = VirtualBuffer((N,), name="C")
+    tdag.submit("wA", (N,), [write(A, one_to_one())])   # A is LRU-oldest
+    tdag.submit("wB", (N,), [write(B, one_to_one())])
+    tdag.submit("wC", (N,), [write(C, one_to_one())])   # forces one eviction
+    idag = IdagGenerator(0, 1, budgets={device_memory(0): 2 * BYTES})
+    gen = generate_cdag(tdag, 1)
+    cmds = [c for c in gen.commands[0]
+            if not (c.ctype == CommandType.EPOCH and c.task is None)]
+    for cmd in cmds:
+        if cmd.task is not None and cmd.task.name == "wC":
+            # the lookahead window announced A is about to be accessed
+            idag.mem.reserve({(A.bid, device_memory(0)): A.full_region})
+        idag.compile(cmd)
+    freed_bids = {i.allocation.bid for i in idag.instructions
+                  if i.itype == InstructionType.FREE}
+    assert B.bid in freed_bids        # LRU alone would have picked A
+    assert A.bid not in freed_bids
+
+    # fallback: reserve EVERYTHING and force more pressure — eviction still
+    # proceeds (cooperate, but never wedge)
+    tdag2 = TaskGraph()
+    D = VirtualBuffer((N,), name="D")
+    E = VirtualBuffer((N,), name="E")
+    F = VirtualBuffer((N,), name="F")
+    tdag2.submit("wD", (N,), [write(D, one_to_one())])
+    tdag2.submit("wE", (N,), [write(E, one_to_one())])
+    tdag2.submit("wF", (N,), [write(F, one_to_one())])
+    idag2 = IdagGenerator(0, 1, budgets={device_memory(0): 2 * BYTES})
+    gen2 = generate_cdag(tdag2, 1)
+    cmds2 = [c for c in gen2.commands[0]
+             if not (c.ctype == CommandType.EPOCH and c.task is None)]
+    for cmd in cmds2:
+        if cmd.task is not None and cmd.task.name == "wF":
+            idag2.mem.reserve({
+                (D.bid, device_memory(0)): D.full_region,
+                (E.bid, device_memory(0)): E.full_region,
+            })
+        idag2.compile(cmd)
+    assert any(i.itype == InstructionType.FREE for i in idag2.instructions)
+    assert idag2.mem.stats.evictions >= 1
+    assert idag2.mem.stats.over_budget == 0
+
+
+def test_unbudgeted_stream_has_no_spill_instructions():
+    """With no budget the memory layer is inert: the instruction stream
+    contains no SPILL/RELOAD and allocations only ever grow (the historical
+    §3.2 behavior)."""
+    tdag = TaskGraph()
+    A = VirtualBuffer((N,), name="A")
+    B = VirtualBuffer((N,), name="B")
+    tdag.submit("wA", (N,), [write(A, one_to_one())])
+    tdag.submit("wB", (N,), [write(B, one_to_one())])
+    tdag.submit("rA", (N,), [read_write(A, one_to_one())])
+    idag = IdagGenerator(0, 1)
+    _compile(tdag, idag)
+    types = {i.itype for i in idag.instructions}
+    assert InstructionType.SPILL not in types
+    assert InstructionType.RELOAD not in types
+    assert idag.mem.stats.evictions == 0

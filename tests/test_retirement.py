@@ -1,0 +1,91 @@
+"""Scheduler-memory retirement tests (DESIGN.md §3): TDAG/CDAG prefixes are
+retired at horizons in runtime mode, so every graph layer holds O(window)
+state on long programs while lifetime counters keep the totals.
+"""
+
+import numpy as np
+
+from repro.core import (CommandGraphGenerator, Runtime, TaskGraph,
+                        generate_cdag, one_to_one, read, read_write, write)
+from repro.core.buffer import VirtualBuffer
+
+
+def _long_run(steps: int):
+    with Runtime(num_nodes=2, devices_per_node=1) as rt:
+        A = rt.buffer((64,), init=np.zeros(64), name="A")
+        B = rt.buffer((64,), init=np.zeros(64), name="B")
+        for s in range(steps):
+            def k(chunk, av, bv, s=s):
+                bv.set(chunk, bv.get(chunk) + av.get(chunk) + s)
+            rt.submit(f"k{s}", (64,), [read(A, one_to_one()),
+                                       read_write(B, one_to_one())], k)
+        rt.sync()
+        tdag_retained = len(rt.tdag.tasks)
+        tdag_total = rt.tdag.task_count
+        cdag_retained = [len(s.cdag.commands[n]) for s in rt.schedulers
+                         for n in range(rt.num_nodes)]
+        cdag_total = [sum(s.cdag.emitted_counts) for s in rt.schedulers]
+        out = rt.gather(B)
+    return tdag_retained, tdag_total, cdag_retained, cdag_total, out
+
+
+def test_long_run_bounded_tdag_cdag():
+    """Retained task/command counts are O(horizon window), independent of
+    program length; lifetime counters still see every emission."""
+    r60 = _long_run(60)
+    r240 = _long_run(240)
+    # totals grow with the program ...
+    assert r240[1] > r60[1] >= 60
+    assert min(r240[3]) > min(r60[3])
+    # ... retained state does not
+    assert r240[0] <= 32 and r60[0] <= 32
+    assert max(r240[2]) <= 32 and max(r60[2]) <= 32
+    assert r240[0] <= r60[0] + 4          # O(window), not O(program)
+    assert max(r240[2]) <= max(r60[2]) + 4
+    # and the computation is still correct
+    np.testing.assert_array_equal(
+        r240[4], np.full(64, sum(range(240)), dtype=float))
+
+
+def test_retirement_results_identical():
+    """Bit-identical results with the retiring runtime vs a standalone
+    unretired TDAG/CDAG replay of the same program."""
+    def run(steps=40):
+        with Runtime(num_nodes=1, devices_per_node=2) as rt:
+            B = rt.buffer((32,), init=np.ones(32), name="B")
+            for s in range(steps):
+                def k(chunk, bv, s=s):
+                    bv.set(chunk, bv.get(chunk) * 1.0001 + s * 1e-6)
+                rt.submit(f"s{s}", (32,), [read_write(B, one_to_one())], k)
+            return rt.gather(B)
+
+    a, b = run(), run()
+    np.testing.assert_array_equal(a, b)
+
+
+def test_standalone_generators_do_not_retire():
+    """Tests and tools that build their own graphs keep full history (the
+    retirement is opt-in via the runtime)."""
+    tdag = TaskGraph(horizon_step=2)
+    B = VirtualBuffer((16,), name="B", initial_value=np.zeros(16))
+    for i in range(20):
+        tdag.submit(f"k{i}", (16,), [read_write(B, one_to_one())])
+    assert len(tdag.tasks) == tdag.task_count > 20     # incl. horizons
+    gen = generate_cdag(tdag, 2)
+    assert all(len(cmds) == cnt
+               for cmds, cnt in zip(gen.commands, gen.emitted_counts))
+    assert all(len(cmds) > 20 for cmds in gen.commands)
+
+
+def test_cdag_retire_mode_trims_and_counts():
+    tdag = TaskGraph(horizon_step=2)
+    B = VirtualBuffer((16,), name="B", initial_value=np.zeros(16))
+    for i in range(20):
+        tdag.submit(f"k{i}", (16,), [write(B, one_to_one())])
+    gen = CommandGraphGenerator(2, retire_for=0)
+    for t in tdag.tasks:
+        if t.name == "init":
+            continue
+        gen.process(t)
+    assert all(len(cmds) <= 8 for cmds in gen.commands)
+    assert all(c > 20 for c in gen.emitted_counts)
