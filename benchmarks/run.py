@@ -495,6 +495,99 @@ def bench_memory() -> None:
 
 
 # ---------------------------------------------------------------------------
+# collective exchange layer (DESIGN.md §9): message count + steady-state
+# exchange latency vs node count, point-to-point vs collective topologies,
+# and fused vs unfused adjacent reductions
+
+
+def bench_collective() -> None:
+    """Replicated-exchange scaling: O(N^2) all-pairs vs O(N log N) rounds.
+
+    Two workloads per node count: (a) the write-partitioned / read-all
+    allgather pattern, (b) two adjacent scalar reductions per step (the
+    nbody E+Mx shape) fused vs unfused.  Emits per-exchange message counts
+    and steady-state latency; records ``collective_*`` keys in
+    ``SCHED_JSON`` (--json).
+    """
+    n, steps = 2048, 4
+
+    def allgather_app(rt) -> None:
+        P = rt.buffer((n,), init=np.zeros(n), name="P")
+        O = rt.buffer((n,), init=np.zeros(n), name="O")
+
+        def step(chunk, p):
+            p.set(chunk, p.get(chunk) + 1.0)
+
+        def fold(chunk, pall, out):
+            a = pall.get(Box((0,), (n,)))
+            out.set(chunk, out.get(chunk) + a.sum())
+
+        for _ in range(steps):
+            rt.submit("step", (n,), [read_write(P, one_to_one())], step)
+            rt.submit("fold", (n,), [read(P, all_range()),
+                                     read_write(O, one_to_one())], fold)
+        rt.sync(timeout=300)
+
+    for nodes in (2, 4, 6):
+        results = {}
+        for coll in (False, True):
+            with Runtime(num_nodes=nodes, devices_per_node=1,
+                         collectives=coll, host_threads=2) as rt:
+                allgather_app(rt)          # warmup window
+                m0 = rt.comm.num_messages
+                t0 = time.perf_counter()
+                allgather_app(rt)          # steady state
+                wall = time.perf_counter() - t0
+                msgs = rt.comm.num_messages - m0
+            results[coll] = (wall, msgs)
+            label = "coll" if coll else "p2p"
+            emit(f"collective/allgather/{nodes}n/{label}",
+                 wall / steps * 1e6, f"msgs_per_run={msgs}")
+            SCHED_JSON[f"collective_allgather_{nodes}n_{label}_us"] = \
+                wall / steps * 1e6
+            SCHED_JSON[f"collective_allgather_{nodes}n_{label}_msgs"] = \
+                float(msgs)
+        emit(f"collective/allgather/{nodes}n/summary", 0.0,
+             f"msg_ratio={results[False][1] / max(results[True][1], 1):.2f}")
+
+    def fused_app(rt) -> None:
+        X = rt.buffer((n,), init=np.zeros(n), name="X")
+        E = rt.buffer((1,), init=np.zeros(1), name="E")
+        M = rt.buffer((1,), init=np.zeros(1), name="M")
+
+        def k1(chunk, xv, red):
+            red.contribute(xv.get(chunk))
+
+        def k2(chunk, xv, red):
+            red.contribute(xv.get(chunk) * 2.0)
+
+        for _ in range(steps):
+            rt.submit("e", (n,), [read(X, one_to_one()),
+                                  reduction(E, "sum")], k1)
+            rt.submit("m", (n,), [read(X, one_to_one()),
+                                  reduction(M, "sum")], k2)
+        rt.sync(timeout=300)
+
+    for nodes in (2, 4):
+        for fused in (False, True):
+            with Runtime(num_nodes=nodes, devices_per_node=1,
+                         reduction_fusion=fused, host_threads=2) as rt:
+                fused_app(rt)              # warmup
+                m0 = rt.comm.coll_messages
+                t0 = time.perf_counter()
+                fused_app(rt)
+                wall = time.perf_counter() - t0
+                msgs = rt.comm.coll_messages - m0
+            label = "fused" if fused else "unfused"
+            emit(f"collective/reduction/{nodes}n/{label}",
+                 wall / steps * 1e6, f"coll_msgs_per_run={msgs}")
+            SCHED_JSON[f"collective_reduction_{nodes}n_{label}_us"] = \
+                wall / steps * 1e6
+            SCHED_JSON[f"collective_reduction_{nodes}n_{label}_msgs"] = \
+                float(msgs)
+
+
+# ---------------------------------------------------------------------------
 # distributed reductions (§2.2): node-count x reduction-size scaling
 
 
@@ -548,6 +641,7 @@ BENCHES = {
     "bench_lookahead": bench_lookahead,
     "bench_executor_latency": bench_executor_latency,
     "bench_reduction": bench_reduction,
+    "bench_collective": bench_collective,
     "bench_memory": bench_memory,
     "bench_scheduler_throughput": bench_scheduler_throughput,
     "bench_roofline": bench_roofline,

@@ -1,12 +1,15 @@
-"""N-body with a distributed total-energy reduction (paper listing 1 + §2.2).
+"""N-body with distributed total-energy + momentum reductions (§2.2 + §9).
 
-The dynamics run exactly like ``quickstart.py``; every few steps a kernel
-binds a scalar ``reduction(E, "sum")`` next to its accessors and contributes
-each body's energy.  The runtime identity-fills per-device partials, folds
-them per node, broadcasts/gathers the partials between all ranks
-(``GATHER_RECEIVE``) and folds them in canonical node order
-(``GLOBAL_REDUCE``) — the exact-sum accumulator makes the result **bitwise
-identical** to a single-node ``math.fsum`` oracle on any rank/device grid.
+The dynamics run exactly like ``quickstart.py``; every few steps two
+adjacent kernels bind scalar reductions — ``reduction(E, "sum")`` (total
+energy) and ``reduction(Mx, "sum")`` (x-momentum).  The runtime
+identity-fills per-device partials, folds them per node, and exchanges the
+node partials between all ranks with a dissemination allgather in
+``ceil(log2 N)`` rounds (DESIGN.md §9); the adjacent ``E``/``Mx``
+reductions **fuse into one packed exchange** (2 exchanges -> 1 per step),
+and ``GLOBAL_REDUCE`` folds the slots in canonical node order — the
+exact-sum accumulator makes both results **bitwise identical** to a
+single-node ``math.fsum`` oracle on any rank/device grid, fused or not.
 
 The second half demonstrates the budgeted memory layer (DESIGN.md §8):
 three independent simulations share one runtime, phase 0 pausing while the
@@ -137,16 +140,23 @@ def budget_demo(n_sims: int = 3, n_bodies: int = 256, steps: int = 8) -> None:
 
 
 def main() -> None:
+    from repro.core.collective import allgather_schedule, message_count
+
     rng = np.random.default_rng(42)
     P0 = rng.normal(size=(N, 3))
     V0 = rng.normal(size=(N, 3)) * 0.1
 
     results = {}
-    for nodes, devs in [(1, 1), (2, 2), (4, 1)]:
-        with Runtime(num_nodes=nodes, devices_per_node=devs) as q:
+    # 1x1, 2x2 and a non-power-of-two grid; ``fusion=False`` is the
+    # unfused oracle run that must agree bit-for-bit with the fused one
+    for nodes, devs, fusion in [(1, 1, True), (2, 2, True), (3, 1, True),
+                                (2, 2, False)]:
+        with Runtime(num_nodes=nodes, devices_per_node=devs,
+                     reduction_fusion=fusion) as q:
             P = q.buffer((N, 3), init=P0, name="P")
             V = q.buffer((N, 3), init=V0, name="V")
             E = q.buffer((1,), init=np.zeros(1), name="E")
+            Mx = q.buffer((1,), init=np.zeros(1), name="Mx")
 
             def timestep(chunk, p, v):
                 Pa = p.get(Box((0, 0), (N, 3)))
@@ -164,6 +174,9 @@ def main() -> None:
                 lo, hi = chunk.min[0], chunk.max[0]
                 red.contribute(body_energies(Pa, v.get(chunk), lo, hi))
 
+            def momentum(chunk, v, red):
+                red.contribute(MASS * v.get(chunk)[:, 0])
+
             for s in range(STEPS):
                 q.submit("timestep", (N, 3),
                          [read(P, all_range()), read_write(V, one_to_one())],
@@ -172,25 +185,47 @@ def main() -> None:
                          [read(V, one_to_one()), read_write(P, one_to_one())],
                          update)
                 if (s + 1) % ENERGY_EVERY == 0:
+                    # adjacent E + Mx reductions: ONE packed exchange (§9)
                     q.submit("energy", (N, 3),
                              [read(P, all_range()), read(V, one_to_one()),
                               reduction(E, "sum")], energy)
+                    q.submit("momentum", (N, 3),
+                             [read(V, one_to_one()), reduction(Mx, "sum")],
+                             momentum)
             result = q.gather(E)
+            mom = q.gather(Mx)
             Pg = q.gather(P)
+            stats = q.comm_stats()
             assert q.warnings == [], q.warnings
-        results[(nodes, devs)] = (float(result[0]), Pg)
+        per_exchange = message_count(
+            allgather_schedule(tuple(range(nodes)), tuple(range(nodes))))
+        exchanges = (stats["red_messages"] // per_exchange
+                     if per_exchange else 0)
+        results[(nodes, devs, fusion)] = (float(result[0]), float(mom[0]),
+                                          Pg, exchanges)
 
-    # single-node numpy oracle: same per-body energies, math.fsum combine
+    # single-node numpy oracle: same per-body values, math.fsum combine
     P, V = _oracle_run(P0, V0, STEPS)
     oracle = math.fsum(body_energies(P, V, 0, N))
+    oracle_mx = math.fsum(MASS * V[:, 0])
+    n_red_steps = STEPS // ENERGY_EVERY
 
-    print(f"n-body total energy after {STEPS} steps ({N} bodies):")
-    for (nodes, devs), (e, Pg) in results.items():
-        match = "bit-for-bit" if e == oracle else f"MISMATCH ({e - oracle:+.3e})"
-        print(f"  {nodes} nodes x {devs} devices: E = {e:+.15e}  [{match}]")
-        assert e == oracle, (e, oracle)
+    print(f"n-body total energy + x-momentum after {STEPS} steps ({N} bodies):")
+    for (nodes, devs, fusion), (e, mx, Pg, exchanges) in results.items():
+        match = "bit-for-bit" if (e, mx) == (oracle, oracle_mx) \
+            else f"MISMATCH ({e - oracle:+.3e})"
+        tag = "fused" if fusion else "unfused oracle"
+        print(f"  {nodes}x{devs} ({tag}): E = {e:+.15e}  Mx = {mx:+.10e}  "
+              f"[{match}]")
+        assert e == oracle and mx == oracle_mx, (e, oracle, mx, oracle_mx)
         np.testing.assert_array_equal(Pg, P)
-    print(f"  oracle (math.fsum):    E = {oracle:+.15e}")
+        if nodes > 1:
+            # fused: exactly ONE reduction exchange per energy step;
+            # unfused: two (E and Mx separately)
+            want = n_red_steps if fusion else 2 * n_red_steps
+            assert exchanges == want, (fusion, exchanges, want)
+    print(f"  oracle (math.fsum):  E = {oracle:+.15e}  Mx = {oracle_mx:+.10e}")
+    print(f"  fused reduction exchanges per energy step: 1 (vs 2 unfused)")
 
     budget_demo()
 

@@ -1,0 +1,124 @@
+"""Collective exchange topologies (DESIGN.md §9).
+
+Pure, replicated-deterministic schedule functions shared by the CDAG
+(collective detection + dependency wiring) and the IDAG (lowering into
+per-round ``COLL_SEND`` / ``COLL_RECV`` instructions).  A schedule is a
+list of *rounds*; each round is a list of :class:`CollMsg` — one point-to-
+point message carrying a set of *blocks* (identified by absolute rank).
+
+* **Allgather** uses the dissemination (Bruck-style) generalization of
+  recursive doubling: at round ``k`` every rank receives from the rank
+  ``2^k`` below it (mod P) everything that peer holds and it does not.
+  Works for ANY group size in ``ceil(log2 P)`` rounds with at most one
+  message per rank per round — total message count ``<= P * ceil(log2 P)``
+  versus ``P * (P - 1)`` for the all-pairs exchange.  Ranks without an own
+  contribution (e.g. non-participant nodes of a reduction) simply start
+  with an empty held set and forward what they receive.
+* **Broadcast / scatter** use a binomial tree rooted at the data owner:
+  ``ceil(log2 P)`` rounds, ``P - 1`` messages total, the root sends only
+  ``ceil(log2 P)`` of them.  Scatter messages carry exactly the blocks of
+  the receiver's subtree, so payloads halve per hop.
+
+Every round is independently schedulable: a round-``k`` send depends only
+on the previous rounds' receives of the blocks it forwards, so rounds of
+different collectives interleave freely in the out-of-order executor.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+
+@dataclass(frozen=True)
+class CollMsg:
+    """One message of one round: ``src`` sends ``blocks`` to ``dst``.
+
+    Ranks are absolute node ids; block ids are absolute ranks too (the
+    contributor whose piece/partial the block carries).
+    """
+
+    src: int
+    dst: int
+    blocks: tuple[int, ...]
+
+
+def num_rounds(p: int) -> int:
+    """``ceil(log2 p)`` — rounds needed to span a group of ``p`` ranks."""
+    r = 0
+    while (1 << r) < p:
+        r += 1
+    return r
+
+
+def allgather_schedule(group: Sequence[int],
+                       contributors: Sequence[int]) -> list[list[CollMsg]]:
+    """Dissemination allgather over ``group``; any size, any contributor set.
+
+    After round ``k`` rank ``j`` holds the initial blocks of ranks
+    ``j, j-1, ..., j-(2^(k+1)-1)`` (mod P), so ``ceil(log2 P)`` rounds
+    deliver every contribution everywhere.  Messages whose block set would
+    be empty are skipped, keeping the total ``<= P * ceil(log2 P)``.
+    """
+    ranks = list(group)
+    p = len(ranks)
+    pos = {r: i for i, r in enumerate(ranks)}
+    held: list[set[int]] = [set() for _ in range(p)]
+    for c in contributors:
+        held[pos[c]].add(c)
+    rounds: list[list[CollMsg]] = []
+    for k in range(num_rounds(p)):
+        d = 1 << k
+        snapshot = [set(h) for h in held]
+        msgs: list[CollMsg] = []
+        for j in range(p):
+            i = (j - d) % p               # j receives from i
+            blocks = snapshot[i] - snapshot[j]
+            if blocks:
+                msgs.append(CollMsg(ranks[i], ranks[j], tuple(sorted(blocks))))
+                held[j] |= blocks
+        rounds.append(msgs)
+    return rounds
+
+
+def tree_schedule(group: Sequence[int], root: int, *,
+                  scatter: bool = False) -> list[list[CollMsg]]:
+    """Binomial-tree broadcast (or scatter) rounds rooted at ``root``.
+
+    Relative rank 0 is the root; at the round with distance ``d`` every
+    holder ``r`` (``r % 2d == 0``) sends to ``r + d``.  For a broadcast the
+    payload is always the root's full block; for a scatter the message
+    carries exactly the blocks of the receiver's subtree
+    (relative ranks ``[r+d, r+2d)``), so no rank ever receives data it
+    neither consumes nor forwards.
+    """
+    rel = [root] + sorted(x for x in group if x != root)
+    p = len(rel)
+    rounds: list[list[CollMsg]] = []
+    for k in reversed(range(num_rounds(p))):
+        d = 1 << k
+        msgs: list[CollMsg] = []
+        for r in range(0, p, 2 * d):
+            if r + d < p:
+                blocks = (tuple(rel[r + d:min(r + 2 * d, p)]) if scatter
+                          else (root,))
+                msgs.append(CollMsg(rel[r], rel[r + d], blocks))
+        rounds.append(msgs)
+    return rounds
+
+
+def schedule_for(kind: str, group: Sequence[int], *,
+                 contributors: Sequence[int] = (),
+                 root: int | None = None) -> list[list[CollMsg]]:
+    """Uniform entry point used by CDAG and IDAG (must agree bit-for-bit)."""
+    if kind == "allgather":
+        return allgather_schedule(group, contributors)
+    if kind == "broadcast":
+        return tree_schedule(group, root, scatter=False)
+    if kind == "scatter":
+        return tree_schedule(group, root, scatter=True)
+    raise ValueError(f"unknown collective kind {kind!r}")
+
+
+def message_count(rounds: list[list[CollMsg]]) -> int:
+    return sum(len(msgs) for msgs in rounds)

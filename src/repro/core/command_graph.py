@@ -18,6 +18,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from .buffer import VirtualBuffer
+from .collective import schedule_for
 from .reduction import Reduction
 from .region import Box, Region, RegionMap, split_box
 from .task_graph import DepKind, Task, TaskGraph, TaskType
@@ -33,6 +34,13 @@ class CommandType(enum.Enum):
     # in canonical node order (REDUCE_GLOBAL) — replicated-deterministic.
     REDUCE_PARTIAL = "reduce_partial"
     REDUCE_GLOBAL = "reduce_global"
+    # collective exchanges (DESIGN.md §9): detected from the replicated
+    # all-pairs picture and lowered into O(log N) topology rounds.  One
+    # command per involved node; the point-to-point PUSH/AWAIT_PUSH path is
+    # kept for irregular / partial-overlap exchanges.
+    COLL_ALLGATHER = "coll_allgather"
+    COLL_BROADCAST = "coll_broadcast"
+    COLL_SCATTER = "coll_scatter"
     HORIZON = "horizon"
     EPOCH = "epoch"
 
@@ -55,6 +63,14 @@ class Command:
     reduction: Optional[Reduction] = None       # REDUCE_* only
     participants: tuple[int, ...] = ()          # REDUCE_*: nodes with chunks
     targets: tuple[int, ...] = ()               # REDUCE_PARTIAL: broadcast set
+    # collective metadata (COLL_*, replicated on every node; DESIGN.md §9)
+    coll_group: tuple[int, ...] = ()            # ordered exchange group
+    coll_blocks: Optional[dict] = None          # block rank -> Region
+    coll_root: Optional[int] = None             # broadcast/scatter root
+    # fused reduction exchange: ((rtid, Reduction), ...) member components
+    coll_members: tuple = ()
+    # REDUCE_PARTIAL/REDUCE_GLOBAL lowered in collective (staging-slot) mode
+    collective: bool = False
     cid: int = field(default_factory=lambda: next(_cmd_ids))
     dependencies: list[tuple["Command", DepKind]] = field(default_factory=list)
     dependents: list["Command"] = field(default_factory=list)
@@ -85,8 +101,18 @@ class _NodeBufferState:
 class CommandGraphGenerator:
     """Generates per-node command graphs from a TDAG stream."""
 
-    def __init__(self, num_nodes: int, *, retire_for: Optional[int] = None):
+    def __init__(self, num_nodes: int, *, retire_for: Optional[int] = None,
+                 collectives: bool = False):
         self.num_nodes = num_nodes
+        # ``collectives=True`` turns all-pairs exchange patterns into COLL_*
+        # commands and reduction exchanges into (fusable) allgathers; the
+        # point-to-point path remains for irregular exchanges and is the
+        # default for structural/back-compat consumers (``generate_cdag``).
+        self.collectives = collectives
+        # open fused-reduction group: reduction exchanges are deferred until
+        # the fusion chain breaks (next non-fusable task, horizon or epoch),
+        # then emitted as ONE packed allgather + per-member REDUCE_GLOBALs
+        self._open_red: Optional[dict] = None
         self.commands: list[list[Command]] = [[] for _ in range(num_nodes)]
         # ``retire_for=k`` (runtime mode, one generator per node scheduler):
         # at every horizon/epoch the per-node command lists are trimmed to
@@ -139,9 +165,9 @@ class CommandGraphGenerator:
     # ------------------------------------------------------------------
     def process(self, task: Task) -> list[Command]:
         if task.ttype == TaskType.HORIZON:
-            return self._emit_sync(task, CommandType.HORIZON)
+            return self._flush_reductions() + self._emit_sync(task, CommandType.HORIZON)
         if task.ttype == TaskType.EPOCH:
-            return self._emit_sync(task, CommandType.EPOCH)
+            return self._flush_reductions() + self._emit_sync(task, CommandType.EPOCH)
         return self._process_kernel(task)
 
     def _emit_sync(self, task: Task, ctype: CommandType) -> list[Command]:
@@ -232,6 +258,17 @@ class CommandGraphGenerator:
         node_chunks: dict[int, Box] = {i: c for i, c in enumerate(chunks)}
         new_cmds: list[Command] = []
 
+        # fused-reduction scope: the open group survives only while the
+        # (replicated) TDAG fusion chain continues AND the participant set
+        # is unchanged; otherwise its deferred exchange flushes first, so
+        # this task observes the folded results as the last writers.
+        if self._open_red is not None:
+            fusable = (task.reductions and task.fuse_with_prev
+                       and tuple(sorted(node_chunks))
+                       == self._open_red["participants"])
+            if not fusable:
+                new_cmds.extend(self._flush_reductions())
+
         # --- pass 1: writer-ownership + overlapping-write detection -------
         writes_per_node: dict[int, dict[int, Region]] = {}
         for n, chunk in node_chunks.items():
@@ -255,13 +292,22 @@ class CommandGraphGenerator:
             cmd = Command(CommandType.EXECUTION, node=n, task=task, chunk=chunk)
             exec_cmds[n] = cmd
 
-        for n, chunk in node_chunks.items():
-            cmd = exec_cmds[n]
+        if self.collectives:
+            handled: set[int] = set()
             for acc in task.accessors:
-                if not acc.mode.is_consumer:
+                if not acc.mode.is_consumer or acc.buffer.bid in handled:
                     continue
-                need = acc.mapped_region(chunk)
-                self._fetch_missing(n, acc.buffer, need, task, cmd, new_cmds)
+                handled.add(acc.buffer.bid)
+                self._exchange_buffer(task, acc.buffer, node_chunks,
+                                      exec_cmds, new_cmds)
+        else:
+            for n, chunk in node_chunks.items():
+                cmd = exec_cmds[n]
+                for acc in task.accessors:
+                    if not acc.mode.is_consumer:
+                        continue
+                    need = acc.mapped_region(chunk)
+                    self._fetch_missing(n, acc.buffer, need, task, cmd, new_cmds)
 
         # --- pass 3: local deps + ownership update for writes -------------
         for n, chunk in node_chunks.items():
@@ -299,9 +345,263 @@ class CommandGraphGenerator:
                     own.update(acc.mapped_region(chunk), frozenset([n]))
 
         # --- pass 4: reductions (N partials -> 1 replicated value) ---------
-        for red in task.reductions:
-            self._process_reduction(task, red, node_chunks, exec_cmds, new_cmds)
+        if self.collectives:
+            if task.reductions:
+                self._queue_reductions(task, node_chunks, exec_cmds, new_cmds)
+        else:
+            for red in task.reductions:
+                self._process_reduction(task, red, node_chunks, exec_cmds,
+                                        new_cmds)
         return new_cmds
+
+    # -- collective exchange detection (DESIGN.md §9) ---------------------
+    def _exchange_buffer(self, task: Task, buf: VirtualBuffer,
+                         node_chunks: dict[int, Box],
+                         exec_cmds: dict[int, Command],
+                         new_cmds: list[Command]) -> None:
+        """Satisfy every node's reads of ``buf`` for this task — as ONE
+        collective when the all-pairs picture matches a known topology,
+        falling back to the historical per-accessor point-to-point path."""
+        needs: dict[int, Region] = {}
+        for n, chunk in node_chunks.items():
+            r = Region.empty()
+            for acc in task.accessors:
+                if acc.buffer.bid == buf.bid and acc.mode.is_consumer:
+                    r = r.union(acc.mapped_region(chunk))
+            if not r.is_empty():
+                needs[n] = r
+        coll = self._classify_exchange(buf, needs)
+        if coll is None:
+            for n, chunk in node_chunks.items():
+                cmd = exec_cmds[n]
+                for acc in task.accessors:
+                    if acc.buffer.bid == buf.bid and acc.mode.is_consumer:
+                        self._fetch_missing(n, acc.buffer,
+                                            acc.mapped_region(chunk), task,
+                                            cmd, new_cmds)
+            return
+        self._emit_collective(task, buf, coll, needs, exec_cmds, new_cmds)
+
+    def _classify_exchange(self, buf: VirtualBuffer,
+                           needs: dict[int, Region]) -> Optional[dict]:
+        """Classify the missing-data transfer matrix of one buffer.
+
+        * ``allgather`` — >=2 single-owner pieces, every group member needs
+          every piece it does not own (the replicated-exchange pattern);
+        * ``broadcast`` — one source, >=2 destinations, identical region;
+        * ``scatter`` — one source, >=2 destinations, pairwise-disjoint
+          regions;
+        * ``None`` — irregular / partial overlap: point-to-point path.
+        """
+        own = self._ownership_map(buf)
+        srcmap: dict[int, dict[int, Region]] = {}
+        for n, need in needs.items():
+            for sub, owner in own.query(need):
+                if owner is None:
+                    continue  # uninitialized — TDAG already warned
+                owners = (owner if isinstance(owner, frozenset)
+                          else frozenset([owner]))
+                if n in owners:
+                    continue
+                src = min(owners)
+                dmap = srcmap.setdefault(src, {})
+                dmap[n] = dmap.get(n, Region.empty()).union(sub)
+        if not srcmap:
+            return None
+        sources = sorted(srcmap)
+        dests = sorted({d for dmap in srcmap.values() for d in dmap})
+        if len(sources) >= 2:
+            group = tuple(sorted(set(sources) | set(dests)))
+            blocks: dict[int, Region] = {}
+            for s in sources:
+                dmap = srcmap[s]
+                if set(dmap) != set(group) - {s}:
+                    return None
+                regs = list(dmap.values())
+                if any(r != regs[0] for r in regs[1:]):
+                    return None
+                blocks[s] = regs[0]
+            return dict(kind="allgather", group=group, blocks=blocks,
+                        root=None)
+        s = sources[0]
+        dmap = srcmap[s]
+        if len(dmap) < 2:
+            return None
+        group = (s,) + tuple(sorted(dmap))
+        regs = list(dmap.values())
+        if all(r == regs[0] for r in regs[1:]):
+            return dict(kind="broadcast", group=group, blocks={s: regs[0]},
+                        root=s)
+        ds = sorted(dmap)
+        if all(not dmap[ds[i]].overlaps(dmap[ds[j]])
+               for i in range(len(ds)) for j in range(i + 1, len(ds))):
+            return dict(kind="scatter", group=group, blocks=dict(dmap),
+                        root=s)
+        return None
+
+    def _emit_collective(self, task: Task, buf: VirtualBuffer, coll: dict,
+                         needs: dict[int, Region],
+                         exec_cmds: dict[int, Command],
+                         new_cmds: list[Command]) -> None:
+        kind, group, blocks, root = (coll["kind"], coll["group"],
+                                     coll["blocks"], coll["root"])
+        rounds = schedule_for(kind, group, contributors=tuple(sorted(blocks)),
+                              root=root)
+        ctype = {"allgather": CommandType.COLL_ALLGATHER,
+                 "broadcast": CommandType.COLL_BROADCAST,
+                 "scatter": CommandType.COLL_SCATTER}[kind]
+        base_tid = (task.tid, buf.bid, 2)
+        full_payload = Region.empty()
+        for r in blocks.values():
+            full_payload = full_payload.union(r)
+        for n in group:
+            if kind == "allgather":
+                own_region = blocks.get(n, Region.empty())
+            else:
+                own_region = full_payload if n == root else Region.empty()
+            recv_region = Region.empty()
+            for msgs in rounds:
+                for m in msgs:
+                    if m.dst == n:
+                        for b in m.blocks:
+                            recv_region = recv_region.union(blocks[b])
+            cmd = Command(ctype, node=n, task=task, buffer=buf,
+                          region=own_region.union(recv_region),
+                          transfer_id=base_tid, coll_group=group,
+                          coll_blocks=blocks, coll_root=root)
+            nst = self._node_buf(n, buf)
+            if not own_region.is_empty():
+                for sub, writer in nst.last_writers.query(own_region):
+                    cmd.add_dependency(writer, DepKind.TRUE)
+                nst.last_readers.append((own_region, cmd))
+            if not recv_region.is_empty():
+                # landing overwrites stale local data
+                for sub, writer in nst.last_writers.query(recv_region):
+                    cmd.add_dependency(writer, DepKind.ANTI)
+                for rreg, reader in nst.last_readers:
+                    if reader is not cmd and rreg.overlaps(recv_region):
+                        cmd.add_dependency(reader, DepKind.ANTI)
+                nst.last_writers.update(recv_region, cmd)
+            if self._last_horizon[n] is not None:
+                cmd.add_dependency(self._last_horizon[n], DepKind.SYNC)
+            elif not cmd.dependencies and self._last_epoch[n] is not None:
+                cmd.add_dependency(self._last_epoch[n], DepKind.SYNC)
+            self._add(n, cmd)
+            new_cmds.append(cmd)
+            if n in needs:
+                exec_cmds[n].add_dependency(cmd, DepKind.TRUE)
+        # replicated ownership: every rank that lands a block (consumers AND
+        # tree forwarders — both really hold the bytes) becomes up to date
+        own = self._ownership_map(buf)
+        for b, reg in blocks.items():
+            receivers = {m.dst for msgs in rounds for m in msgs
+                         if b in m.blocks}
+            for sub, owner in own.query(reg):
+                owners = (owner if isinstance(owner, frozenset)
+                          else frozenset([owner]))
+                own.update(sub, owners | receivers)
+
+    # -- fused reduction exchange (DESIGN.md §9) --------------------------
+    def _queue_reductions(self, task: Task, node_chunks: dict[int, Box],
+                          exec_cmds: dict[int, Command],
+                          new_cmds: list[Command]) -> None:
+        """Emit per-participant REDUCE_PARTIALs now; defer the exchange and
+        the folds into the open fusion group (flushed when the chain
+        breaks).  All reductions of one task always share the exchange."""
+        participants = tuple(sorted(node_chunks))
+        if self._open_red is None:
+            self._open_red = dict(participants=participants, members=[])
+        for red in task.reductions:
+            buf = red.buffer
+            self._ownership_map(buf)               # register buffer
+            rtid = (task.tid, buf.bid, 1)
+            partials: dict[int, Command] = {}
+            for n in participants:
+                pc = Command(CommandType.REDUCE_PARTIAL, node=n, task=task,
+                             buffer=buf, reduction=red,
+                             region=buf.full_region, transfer_id=rtid,
+                             participants=participants,
+                             coll_group=tuple(range(self.num_nodes)),
+                             collective=True)
+                pc.add_dependency(exec_cmds[n], DepKind.TRUE)
+                self._add(n, pc)
+                new_cmds.append(pc)
+                partials[n] = pc
+            self._open_red["members"].append(
+                dict(task=task, red=red, rtid=rtid, partials=partials))
+
+    def _flush_reductions(self) -> list[Command]:
+        """Emit the deferred exchange (one packed allgather for the whole
+        fusion group) plus every member's REDUCE_GLOBAL fold."""
+        group = self._open_red
+        if group is None:
+            return []
+        self._open_red = None
+        out: list[Command] = []
+        members = group["members"]
+        participants = group["participants"]
+        allnodes = tuple(range(self.num_nodes))
+        first = members[0]
+        base_tid = (first["task"].tid, first["red"].buffer.bid, 3)
+        coll_members = tuple((m["rtid"], m["red"]) for m in members)
+        ag_cmds: dict[int, Command] = {}
+        if self.num_nodes > 1:
+            for n in allnodes:
+                ag = Command(CommandType.COLL_ALLGATHER, node=n,
+                             task=first["task"], buffer=first["red"].buffer,
+                             reduction=first["red"], transfer_id=base_tid,
+                             participants=participants, coll_group=allnodes,
+                             coll_members=coll_members, collective=True)
+                for m in members:
+                    pc = m["partials"].get(n)
+                    if pc is not None:
+                        ag.add_dependency(pc, DepKind.TRUE)
+                if self._last_horizon[n] is not None:
+                    ag.add_dependency(self._last_horizon[n], DepKind.SYNC)
+                elif not ag.dependencies and self._last_epoch[n] is not None:
+                    ag.add_dependency(self._last_epoch[n], DepKind.SYNC)
+                self._add(n, ag)
+                out.append(ag)
+                ag_cmds[n] = ag
+        for m in members:
+            task, red, rtid = m["task"], m["red"], m["rtid"]
+            buf = red.buffer
+            full = buf.full_region
+            global_cmds = {
+                n: Command(CommandType.REDUCE_GLOBAL, node=n, task=task,
+                           buffer=buf, reduction=red, region=full,
+                           transfer_id=rtid, participants=participants,
+                           coll_group=allnodes, collective=True)
+                for n in allnodes}
+            if red.include_current_value:
+                for n in allnodes:
+                    self._fetch_missing(n, buf, full, task, global_cmds[n],
+                                        out)
+            for n in allnodes:
+                gc = global_cmds[n]
+                nst = self._node_buf(n, buf)
+                kind = (DepKind.TRUE if red.include_current_value
+                        else DepKind.ANTI)
+                for sub, writer in nst.last_writers.query(full):
+                    gc.add_dependency(writer, kind)
+                for rreg, reader in nst.last_readers:
+                    gc.add_dependency(reader, DepKind.ANTI)
+                if n in m["partials"]:
+                    gc.add_dependency(m["partials"][n], DepKind.TRUE)
+                if n in ag_cmds:
+                    gc.add_dependency(ag_cmds[n], DepKind.TRUE)
+                if self._last_horizon[n] is not None:
+                    gc.add_dependency(self._last_horizon[n], DepKind.SYNC)
+                elif not gc.dependencies and self._last_epoch[n] is not None:
+                    gc.add_dependency(self._last_epoch[n], DepKind.SYNC)
+                nst.last_writers.update(full, gc)
+                nst.last_readers = []
+                self._add(n, gc)
+                out.append(gc)
+            # the combined value is replicated on every node
+            self._ownership_map(buf).update(full,
+                                            frozenset(range(self.num_nodes)))
+        return out
 
     # -- reductions ------------------------------------------------------
     def _process_reduction(self, task: Task, red: Reduction,
@@ -375,10 +675,14 @@ class CommandGraphGenerator:
         self._ownership_map(buf).update(full, frozenset(range(self.num_nodes)))
 
 
-def generate_cdag(tdag: TaskGraph, num_nodes: int) -> CommandGraphGenerator:
-    gen = CommandGraphGenerator(num_nodes)
+def generate_cdag(tdag: TaskGraph, num_nodes: int, *,
+                  collectives: bool = False) -> CommandGraphGenerator:
+    gen = CommandGraphGenerator(num_nodes, collectives=collectives)
     for task in tdag.tasks:
         if task.name == "init" and task.ttype == TaskType.EPOCH:
             continue
         gen.process(task)
+    # a trailing open fusion group (stream ended without a sync) still
+    # needs its exchange: flush it into the per-node command lists
+    gen._flush_reductions()
     return gen

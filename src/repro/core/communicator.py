@@ -30,10 +30,20 @@ class Payload:
     source: int
     msg_id: int
     # (task id, buffer id) for push traffic; (task id, buffer id, 1) for
-    # reduction-gather traffic (see instruction_graph.Pilot)
+    # reduction-gather traffic; round-tagged (tid, bid, 2|3, round) for
+    # collective rounds (see instruction_graph.Pilot / DESIGN.md §9)
     transfer_id: tuple
-    box: Box
-    data: np.ndarray
+    box: Optional[Box] = None
+    data: Optional[np.ndarray] = None
+    # collective rounds ship ONE packed message of (key, ndarray) fragments:
+    # key = (member, slot) for reduction partials, a buffer-space Box for
+    # region blocks — matching what the peer's COLL_RECV expects
+    fragments: Optional[list[tuple]] = None
+
+    def nbytes(self) -> int:
+        if self.fragments is not None:
+            return sum(d.nbytes for _, d in self.fragments)
+        return self.data.nbytes if self.data is not None else 0
 
 
 class Communicator:
@@ -48,6 +58,13 @@ class Communicator:
         self._listeners: list[list[threading.Event]] = [[] for _ in range(num_nodes)]
         self.bytes_sent = 0
         self.num_messages = 0
+        # collective-round accounting (DESIGN.md §9): packed round messages
+        # and their real payload bytes, split out from point-to-point pushes;
+        # reduce-exchange rounds (transfer ids tagged 3) counted separately
+        # so fusion wins are observable next to region-collective traffic
+        self.coll_messages = 0
+        self.coll_bytes = 0
+        self.red_messages = 0
 
     def add_listener(self, node: int, event: threading.Event) -> None:
         """Register an event set whenever traffic arrives for ``node``.
@@ -72,8 +89,14 @@ class Communicator:
     def isend(self, target: int, payload: Payload) -> None:
         with self._cv:
             self.payload_box[target].append(payload)
-            self.bytes_sent += payload.data.nbytes
+            self.bytes_sent += payload.nbytes()
             self.num_messages += 1
+            if payload.fragments is not None:
+                self.coll_messages += 1
+                self.coll_bytes += payload.nbytes()
+                tid = payload.transfer_id
+                if len(tid) == 4 and tid[2] == 3:
+                    self.red_messages += 1
             self._cv.notify_all()
             self._notify(target)
 
@@ -95,6 +118,19 @@ class _PendingReceive:
     instr: Instruction                 # RECEIVE or SPLIT_RECEIVE
     remaining: Region                  # region still to be covered
     awaits: list[Instruction] = field(default_factory=list)  # AWAIT_RECEIVE children
+
+
+@dataclass
+class _PendingColl:
+    """A COLL_RECV: exactly one packed round message from one peer (§9).
+
+    Collective rounds are fully determined by the replicated schedule, so
+    the receiver knows the source rank AND the exact fragment keys it will
+    land: ``(member, slot)`` pairs for reduction partials, buffer-space
+    boxes for region blocks.  Completion requires every expected key.
+    """
+    instr: Instruction                 # COLL_RECV
+    remaining: set                     # fragment keys still outstanding
 
 
 @dataclass
@@ -124,6 +160,7 @@ class ReceiveArbiter:
         self.store = store                      # allocation id -> ndarray
         self.pending: dict[tuple, list[_PendingReceive]] = defaultdict(list)
         self.pending_gathers: dict[tuple, list[_PendingGather]] = defaultdict(list)
+        self.pending_colls: dict[tuple, list[_PendingColl]] = defaultdict(list)
         self.early_payloads: dict[tuple, list[Payload]] = defaultdict(list)
         self.received: dict[tuple, Region] = defaultdict(Region.empty)
 
@@ -131,10 +168,14 @@ class ReceiveArbiter:
         """Whether any receive is in flight (executor gates polling on this)."""
         return (any(self.pending.values())
                 or any(self.pending_gathers.values())
+                or any(self.pending_colls.values())
                 or any(self.early_payloads.values()))
 
     def begin(self, instr: Instruction) -> None:
-        if instr.itype == InstructionType.GATHER_RECEIVE:
+        if instr.itype == InstructionType.COLL_RECV:
+            pc = _PendingColl(instr=instr, remaining=set(instr.coll_expect))
+            self.pending_colls[instr.transfer_id].append(pc)
+        elif instr.itype == InstructionType.GATHER_RECEIVE:
             pg = _PendingGather(instr=instr,
                                 remaining=set(instr.gather_sources))
             self.pending_gathers[instr.transfer_id].append(pg)
@@ -163,6 +204,23 @@ class ReceiveArbiter:
         arr = self.store[pg.instr.recv_alloc.aid]
         arr[payload.source] = payload.data.reshape(arr.shape[1:])
 
+    def _land_coll(self, pc: _PendingColl, payload: Payload) -> None:
+        """Land every fragment of one packed collective round message."""
+        instr = pc.instr
+        for key, data in payload.fragments:
+            if isinstance(key, Box):    # buffer-space region fragment
+                alloc = instr.coll_allocs[0]
+                arr = self.store[alloc.aid]
+                off = alloc.offset_of(key)
+                slices = tuple(slice(o, o + s)
+                               for o, s in zip(off, key.shape))
+                arr[slices] = data
+            else:                       # (member, slot) partial fragment
+                member, slot = key
+                arr = self.store[instr.coll_allocs[member].aid]
+                arr[slot] = data.reshape(arr.shape[1:])
+            pc.remaining.discard(key)
+
     def step(self, completions: list[Instruction]) -> None:
         """Drain mailboxes; append completed instructions to ``completions``."""
         pilots, payloads = self.comm.poll(self.node)
@@ -170,6 +228,32 @@ class ReceiveArbiter:
         # payload itself carries geometry, so pilots only update accounting.
         for p in payloads:
             self.early_payloads[p.transfer_id].append(p)
+        # collective rounds: match by (round-tagged transfer id, source);
+        # one packed message lands all expected fragments at once
+        for tid, plist in list(self.early_payloads.items()):
+            pcs = self.pending_colls.get(tid)
+            if not pcs:
+                continue
+            still: list[Payload] = []
+            for payload in plist:
+                landed = False
+                if payload.fragments is not None:
+                    for pc in pcs:
+                        if payload.source == pc.instr.coll_source:
+                            self._land_coll(pc, payload)
+                            landed = True
+                            break
+                if not landed:
+                    still.append(payload)
+            self.early_payloads[tid] = still
+        for tid, pcs in list(self.pending_colls.items()):
+            done = [pc for pc in pcs
+                    if not pc.remaining and pc.instr.state == "issued"]
+            for pc in done:
+                completions.append(pc.instr)
+                pcs.remove(pc)
+            if not pcs:
+                del self.pending_colls[tid]
         # gather receives: match by (transfer id, source), complete when every
         # expected peer landed exactly once
         for tid, plist in list(self.early_payloads.items()):

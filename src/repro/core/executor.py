@@ -200,6 +200,7 @@ class Executor:
             InstructionType.SPILL: self._exec_copy,
             InstructionType.RELOAD: self._exec_copy,
             InstructionType.SEND: self._exec_send,
+            InstructionType.COLL_SEND: self._exec_coll_send,
             InstructionType.FILL_IDENTITY: self._exec_fill_identity,
             InstructionType.LOCAL_REDUCE: self._exec_local_reduce,
             InstructionType.GLOBAL_REDUCE: self._exec_global_reduce,
@@ -348,7 +349,8 @@ class Executor:
             self.tracer.issue(self.node, instr)
         it = instr.itype
         if it in (InstructionType.RECEIVE, InstructionType.SPLIT_RECEIVE,
-                  InstructionType.AWAIT_RECEIVE, InstructionType.GATHER_RECEIVE):
+                  InstructionType.AWAIT_RECEIVE, InstructionType.GATHER_RECEIVE,
+                  InstructionType.COLL_RECV):
             self.arbiter.begin(instr)       # completion via arbiter polling
             return
         if it in (InstructionType.HORIZON, InstructionType.EPOCH):
@@ -476,6 +478,24 @@ class Executor:
             source=self.node, msg_id=instr.msg_id,
             transfer_id=instr.transfer_id, box=box, data=arr[sl].copy()))
 
+    def _exec_coll_send(self, instr: Instruction) -> None:
+        """One packed collective round message: every fragment is copied out
+        of its source allocation and shipped in a single payload, so the
+        message count of a round is what the schedule says it is (real byte
+        accounting happens in ``Communicator.isend``)."""
+        frags: list[tuple] = []
+        for f in instr.coll_frags:
+            arr = self._arr(f.alloc)
+            if f.box is not None:
+                sl = tuple(slice(a - o, b - o) for a, b, o in
+                           zip(f.box.min, f.box.max, f.alloc.box.min))
+                frags.append((f.key, arr[sl].copy()))
+            else:
+                frags.append((f.key, arr[f.slot].copy()))
+        self.comm.isend(instr.dest, Payload(
+            source=self.node, msg_id=instr.msg_id,
+            transfer_id=instr.transfer_id, fragments=frags))
+
     def _exec_fill_identity(self, instr: Instruction) -> None:
         red = instr.reduction
         arr = self._arr(instr.allocation)
@@ -496,7 +516,10 @@ class Executor:
             acc = arr.copy() if acc is None else op.combine(acc, arr)
         if acc is None:
             acc = op.identity_acc(red.buffer.shape, red.buffer.dtype)
-        self._arr(instr.dst_alloc)[...] = acc
+        if instr.dst_slot is not None:   # collective mode: own staging slot
+            self._arr(instr.dst_alloc)[instr.dst_slot] = acc
+        else:
+            self._arr(instr.dst_alloc)[...] = acc
 
     def _exec_global_reduce(self, instr: Instruction) -> None:
         """Fold all rank partials in canonical node order into the buffer.
@@ -515,7 +538,10 @@ class Executor:
                if instr.reduce_srcs else None)
         acc = None
         for s in instr.participants:
-            part = own if s == self.node else gather_arr[s]
+            if instr.slot_all:          # collective mode: own slot included
+                part = gather_arr[s]
+            else:
+                part = own if s == self.node else gather_arr[s]
             acc = part.copy() if acc is None else op.combine(acc, part)
         if acc is None:                      # no participants: identity
             acc = op.identity_acc(buf.shape, buf.dtype)

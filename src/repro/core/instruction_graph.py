@@ -27,14 +27,17 @@ a pure consumer that requests regions and receives placements.
 from __future__ import annotations
 
 import itertools
+from contextlib import contextmanager
 from typing import Optional
 
 from .allocation import (PINNED_HOST, USER_HOST, device_memory,  # noqa: F401
                          is_device_memory, queue_for_mem)
 from .buffer import VirtualBuffer
+from .collective import schedule_for
 from .command_graph import Command, CommandType
-from .instructions import (AccessorBinding, Instruction,  # noqa: F401
-                           InstructionType, Pilot, ReductionBinding)
+from .instructions import (AccessorBinding, CollFragment,  # noqa: F401
+                           Instruction, InstructionType, Pilot,
+                           ReductionBinding)
 from .memory import MemoryManager
 from .region import Box, Region, split_box
 from .task_graph import DepKind, TaskType
@@ -63,6 +66,10 @@ class IdagGenerator:
         # device partial scratches (+ producing kernels), the node partial
         # (+ its LOCAL_REDUCE) and the partial-broadcast sends
         self._red_state: dict[tuple, dict] = {}
+        # collective-mode reduction state (DESIGN.md §9), keyed by rtid:
+        # the per-member staging (slot s = rank s's partial), the member's
+        # LOCAL_REDUCE and the fusion group's shared exchange instructions
+        self._coll_red: dict[tuple, dict] = {}
         self._msg_ids = itertools.count(node * 1_000_000)
         self._last_horizon: Optional[Instruction] = None
         self._last_epoch: Optional[Instruction] = None
@@ -74,8 +81,28 @@ class IdagGenerator:
             InstructionType.EPOCH, node=node, queue=("host",), name="init"))
         self._last_epoch = self._init_epoch
         self.mem.init_anchor = self._init_epoch
+        # the bootstrap epoch is consumed via ``instructions`` by the
+        # runtime; leave no open batch behind (capture_batch relies on it)
+        self._batch = []
 
     # -- small helpers ---------------------------------------------------
+    @contextmanager
+    def capture_batch(self, out: list):
+        """Collect EVERY instruction emitted inside the scope into ``out``.
+
+        For callers outside :meth:`compile` (e.g. the memory layer's reload
+        prefetch) that must schedule side-effect emissions — allocs, frees,
+        cascade spills — not just the instructions a helper returns.  Must
+        not be entered while a ``compile`` batch is open.
+        """
+        assert not self._batch, "capture_batch inside an open compile batch"
+        self._batch = []
+        try:
+            yield
+        finally:
+            out.extend(self._batch)
+            self._batch = []
+
     def _emit(self, instr: Instruction) -> Instruction:
         self.instructions.append(instr)
         self.emitted_count += 1
@@ -137,6 +164,13 @@ class IdagGenerator:
                 self._compile_reduce_partial(cmd)
             elif cmd.ctype == CommandType.REDUCE_GLOBAL:
                 self._compile_reduce_global(cmd)
+            elif cmd.ctype in (CommandType.COLL_ALLGATHER,
+                               CommandType.COLL_BROADCAST,
+                               CommandType.COLL_SCATTER):
+                if cmd.reduction is not None:
+                    self._compile_reduce_exchange(cmd)
+                else:
+                    self._compile_collective(cmd)
             elif cmd.ctype == CommandType.HORIZON:
                 self._compile_sync(cmd, InstructionType.HORIZON)
             elif cmd.ctype == CommandType.EPOCH:
@@ -179,6 +213,14 @@ class IdagGenerator:
             # the combined result lands in the buffer's host backing; the
             # partial/gather scratches are unhinted one-shot allocations
             add(cmd.buffer.bid, PINNED_HOST, cmd.buffer.full_box)
+        elif cmd.ctype in (CommandType.COLL_ALLGATHER,
+                           CommandType.COLL_BROADCAST,
+                           CommandType.COLL_SCATTER):
+            # region collectives stage through the buffer's pinned-host
+            # backing; reduction exchanges use unhinted one-shot staging
+            if cmd.reduction is None and cmd.region is not None \
+                    and not cmd.region.is_empty():
+                add(cmd.buffer.bid, PINNED_HOST, cmd.region.bounding_box())
         return reqs
 
     # -- execution commands (§3.1, §3.3) -------------------------------------
@@ -400,8 +442,50 @@ class IdagGenerator:
         fill.add_dependency(scratch.alloc_instr, DepKind.TRUE)
         return scratch, fill
 
+    def _red_staging(self, rtid: tuple, red, group_size: int) -> dict:
+        """Collective-mode staging for one reduction component: slot ``s``
+        holds rank ``s``'s partial (own slot written by LOCAL_REDUCE, peer
+        slots landed by the exchange rounds)."""
+        cst = self._coll_red.setdefault(rtid, {})
+        if "staging" not in cst:
+            buf = red.buffer
+            gbox = Box((0,) * (buf.full_box.rank + 1),
+                       (group_size,) + buf.shape)
+            cst["staging"] = self.mem.scratch(
+                PINNED_HOST, gbox, red.op.acc_dtype(buf.dtype),
+                f"alloc red-staging {buf.name}")
+        return cst
+
     def _compile_reduce_partial(self, cmd: Command) -> None:
-        """Fold device partials into one node partial, broadcast it (§2.2)."""
+        """Fold device partials into one node partial, broadcast it (§2.2).
+
+        Collective mode (DESIGN.md §9): the node partial is written straight
+        into this rank's slot of the staging allocation — the exchange
+        rounds (emitted by the fused COLL_ALLGATHER) read it from there, so
+        there is no separate partial scratch and no per-peer broadcast.
+        """
+        if cmd.collective:
+            red, buf = cmd.reduction, cmd.buffer
+            st = self._red_state[cmd.transfer_id]
+            device_parts = st["device"]
+            cst = self._red_staging(cmd.transfer_id, red,
+                                    max(cmd.coll_group) + 1)
+            staging = cst["staging"]
+            lr = Instruction(
+                InstructionType.LOCAL_REDUCE, node=self.node, queue=("host",),
+                reduction=red, reduce_srcs=tuple(a for a, _ in device_parts),
+                dst_alloc=staging, dst_slot=self.node, command=cmd,
+                name=f"local-reduce {buf.name} ({red.op.name}) ->slot{self.node}")
+            lr.add_dependency(staging.alloc_instr, DepKind.TRUE)
+            for alloc, producer in device_parts:
+                lr.add_dependency(producer, DepKind.TRUE)
+                if alloc.alloc_instr is not None:
+                    lr.add_dependency(alloc.alloc_instr, DepKind.TRUE)
+            self._emit(lr)
+            cst["local"] = lr
+            for alloc, _ in device_parts:
+                self.mem.free_scratch(alloc, [lr])
+            return
         red, buf = cmd.reduction, cmd.buffer
         st = self._red_state[cmd.transfer_id]
         device_parts: list[tuple] = st["device"]
@@ -442,8 +526,89 @@ class IdagGenerator:
                                      box=buf.full_box, msg_id=msg_id,
                                      gather=True))
 
+    def _compile_reduce_exchange(self, cmd: Command) -> None:
+        """Lower the (fused) reduction allgather into O(log N) rounds.
+
+        One COLL_SEND per (round, message) carries one *packed* payload:
+        for every member component of the fusion group, the partial slots
+        named by the dissemination schedule.  Each round is independently
+        schedulable (a round-k send depends only on the previous rounds'
+        landings of the slots it forwards), so rounds of different
+        collectives interleave in the out-of-order engine.
+        """
+        members = cmd.coll_members                 # ((rtid, Reduction), ...)
+        group = cmd.coll_group
+        gsize = max(group) + 1
+        stagings = []
+        for rtid, red in members:
+            cst = self._red_staging(rtid, red, gsize)
+            stagings.append(cst["staging"])
+        rounds = schedule_for("allgather", group,
+                              contributors=cmd.participants)
+        lane = f"N{self.node}.coll.t{cmd.transfer_id[0]}b{cmd.transfer_id[1]}"
+        slot_src: dict[int, Instruction] = {}      # slot rank -> landing recv
+        recvs: list[Instruction] = []
+        sends: list[Instruction] = []
+        for k, msgs in enumerate(rounds):
+            rtid_k = cmd.transfer_id + (k,)
+            for m in msgs:
+                if m.dst == self.node:
+                    expect = tuple((mi, b) for mi in range(len(members))
+                                   for b in m.blocks)
+                    rc = Instruction(
+                        InstructionType.COLL_RECV, node=self.node,
+                        queue=("comm",), transfer_id=rtid_k,
+                        coll_source=m.src, coll_allocs=tuple(stagings),
+                        coll_expect=expect, command=cmd, trace_lane=lane,
+                        name=f"coll-recv r{k} {cmd.buffer.name} <-N{m.src}")
+                    for a in stagings:
+                        rc.add_dependency(a.alloc_instr, DepKind.TRUE)
+                    if self._last_horizon is not None:
+                        rc.add_dependency(self._last_horizon, DepKind.SYNC)
+                    self._emit(rc)
+                    recvs.append(rc)
+                    for b in m.blocks:
+                        slot_src[b] = rc
+                if m.src == self.node:
+                    frags = tuple(CollFragment(key=(mi, b),
+                                               alloc=stagings[mi], slot=b)
+                                  for mi in range(len(members))
+                                  for b in m.blocks)
+                    msg_id = next(self._msg_ids)
+                    sd = Instruction(
+                        InstructionType.COLL_SEND, node=self.node,
+                        queue=("comm",), dest=m.dst, msg_id=msg_id,
+                        transfer_id=rtid_k, coll_frags=frags, command=cmd,
+                        trace_lane=lane,
+                        name=f"coll-send r{k} {cmd.buffer.name} ->N{m.dst}")
+                    for a in stagings:
+                        sd.add_dependency(a.alloc_instr, DepKind.TRUE)
+                    for b in m.blocks:
+                        if b == self.node:
+                            for rtid, _ in members:
+                                lr = self._coll_red[rtid].get("local")
+                                if lr is not None:
+                                    sd.add_dependency(lr, DepKind.TRUE)
+                        else:
+                            rc = slot_src.get(b)
+                            if rc is not None:
+                                sd.add_dependency(rc, DepKind.TRUE)
+                    if self._last_horizon is not None:
+                        sd.add_dependency(self._last_horizon, DepKind.SYNC)
+                    self._emit(sd)
+                    sends.append(sd)
+                    self.pilots.append(Pilot(
+                        source=self.node, target=m.dst, transfer_id=rtid_k,
+                        box=cmd.buffer.full_box, msg_id=msg_id, gather=True))
+        shared = dict(recvs=recvs, sends=sends)
+        for rtid, _ in members:
+            self._coll_red[rtid]["shared"] = shared
+
     def _compile_reduce_global(self, cmd: Command) -> None:
         """Gather peer partials and fold them in canonical node order."""
+        if cmd.collective:
+            self._compile_reduce_global_collective(cmd)
+            return
         red, buf = cmd.reduction, cmd.buffer
         self._register(buf)
         st = self._red_state.pop(cmd.transfer_id,
@@ -512,6 +677,155 @@ class IdagGenerator:
             self.mem.free_scratch(gather_alloc, [gi])
         if own_partial is not None:
             self.mem.free_scratch(own_partial[0], [gi] + st["sends"])
+
+    def _compile_reduce_global_collective(self, cmd: Command) -> None:
+        """Collective-mode fold: every participant slot (own included) is in
+        the staging allocation, so the fold reads ``staging[s]`` for all
+        ``s`` in canonical order (``slot_all``) — bitexactness per fused
+        component is untouched, only the transport changed."""
+        red, buf = cmd.reduction, cmd.buffer
+        self._register(buf)
+        self._red_state.pop(cmd.transfer_id, None)
+        cst = self._coll_red.pop(cmd.transfer_id)
+        staging = cst["staging"]
+        shared = cst.get("shared", {})
+        dst = self.mem.ensure(buf, PINNED_HOST, buf.full_box)
+        full = buf.full_region
+        if red.include_current_value:
+            self.mem.make_coherent(buf, PINNED_HOST, full)
+        ms = self.mem.state(buf.bid, PINNED_HOST)
+        gi = Instruction(
+            InstructionType.GLOBAL_REDUCE, node=self.node, queue=("host",),
+            reduction=red, src_alloc=staging, dst_alloc=dst, slot_all=True,
+            participants=cmd.participants,
+            include_current=red.include_current_value, command=cmd,
+            name=f"global-reduce {buf.name} ({red.op.name})")
+        gi.add_dependency(staging.alloc_instr, DepKind.TRUE)
+        if dst.alloc_instr is not None:
+            gi.add_dependency(dst.alloc_instr, DepKind.TRUE)
+        lr = cst.get("local")
+        if lr is not None:
+            gi.add_dependency(lr, DepKind.TRUE)
+        for rc in shared.get("recvs", ()):
+            gi.add_dependency(rc, DepKind.TRUE)
+        kind = DepKind.TRUE if red.include_current_value else DepKind.OUTPUT
+        for sub, producer in ms.producers.query(full):
+            gi.add_dependency(producer, kind)
+        for r, reader in ms.readers:
+            if r.overlaps(full):
+                gi.add_dependency(reader, DepKind.ANTI)
+        if self._last_horizon is not None:
+            gi.add_dependency(self._last_horizon, DepKind.SYNC)
+        self._emit(gi)
+        ms.producers.update(full, gi)
+        ms.readers = [(r, t) for r, t in ms.readers
+                      if not r.difference(full).is_empty()]
+        self.mem.coherence[buf.bid].update(full, frozenset([PINNED_HOST]))
+        self.mem.note_write(buf.bid, full)
+        # the member staging dies with its fold, but must outlive every
+        # packed exchange send of the whole fusion group
+        self.mem.free_scratch(staging, [gi] + list(shared.get("sends", ())))
+
+    # -- region collectives (DESIGN.md §9) ------------------------------------
+    def _compile_collective(self, cmd: Command) -> None:
+        """Lower a region collective into O(log N) rounds of COLL_SEND /
+        COLL_RECV against the buffer's pinned-host backing allocation."""
+        buf = cmd.buffer
+        self._register(buf)
+        kind = {CommandType.COLL_ALLGATHER: "allgather",
+                CommandType.COLL_BROADCAST: "broadcast",
+                CommandType.COLL_SCATTER: "scatter"}[cmd.ctype]
+        group, blocks, root = cmd.coll_group, cmd.coll_blocks, cmd.coll_root
+        rounds = schedule_for(kind, group, contributors=tuple(sorted(blocks)),
+                              root=root)
+        if kind == "allgather":
+            own_region = blocks.get(self.node, Region.empty())
+        else:
+            own_region = Region.empty()
+            if self.node == root:
+                for r in blocks.values():
+                    own_region = own_region.union(r)
+        recv_region = Region.empty()
+        for msgs in rounds:
+            for m in msgs:
+                if m.dst == self.node:
+                    for b in m.blocks:
+                        recv_region = recv_region.union(blocks[b])
+        touched = own_region.union(recv_region)
+        if touched.is_empty():
+            return
+        alloc = self.mem.ensure(buf, PINNED_HOST, touched.bounding_box())
+        if not own_region.is_empty():
+            self.mem.make_coherent(buf, PINNED_HOST, own_region)
+        ms = self.mem.state(buf.bid, PINNED_HOST)
+        anti_deps: list[Instruction] = []
+        if not recv_region.is_empty():
+            for r, reader in ms.readers:
+                if r.overlaps(recv_region):
+                    anti_deps.append(reader)
+            for sub, w in ms.producers.query(recv_region):
+                anti_deps.append(w)
+        lane = f"N{self.node}.coll.t{cmd.transfer_id[0]}b{cmd.transfer_id[1]}"
+        block_src: dict[int, Instruction] = {}     # block id -> landing recv
+        for k, msgs in enumerate(rounds):
+            rtid_k = cmd.transfer_id + (k,)
+            for m in msgs:
+                if m.dst == self.node:
+                    landed = Region.empty()
+                    for b in m.blocks:
+                        landed = landed.union(blocks[b])
+                    expect = tuple(bx for b in m.blocks
+                                   for bx in blocks[b].boxes)
+                    rc = Instruction(
+                        InstructionType.COLL_RECV, node=self.node,
+                        queue=("comm",), transfer_id=rtid_k,
+                        coll_source=m.src, coll_allocs=(alloc,),
+                        coll_expect=expect, recv_region=landed,
+                        recv_alloc=alloc, command=cmd, trace_lane=lane,
+                        name=f"coll-recv r{k} {buf.name} <-N{m.src}")
+                    rc.add_dependency(alloc.alloc_instr, DepKind.TRUE)
+                    for a in anti_deps:
+                        rc.add_dependency(a, DepKind.ANTI)
+                    if self._last_horizon is not None:
+                        rc.add_dependency(self._last_horizon, DepKind.SYNC)
+                    self._emit(rc)
+                    ms.producers.update(landed, rc)
+                    for b in m.blocks:
+                        block_src[b] = rc
+                if m.src == self.node:
+                    frags = tuple(CollFragment(key=bx, alloc=alloc, box=bx)
+                                  for b in m.blocks
+                                  for bx in blocks[b].boxes)
+                    sent = Region.empty()
+                    for b in m.blocks:
+                        sent = sent.union(blocks[b])
+                    msg_id = next(self._msg_ids)
+                    sd = Instruction(
+                        InstructionType.COLL_SEND, node=self.node,
+                        queue=("comm",), dest=m.dst, msg_id=msg_id,
+                        transfer_id=rtid_k, coll_frags=frags, command=cmd,
+                        trace_lane=lane,
+                        name=f"coll-send r{k} {buf.name} ->N{m.dst}")
+                    sd.add_dependency(alloc.alloc_instr, DepKind.TRUE)
+                    for b in m.blocks:
+                        rc = block_src.get(b)
+                        if rc is not None:
+                            sd.add_dependency(rc, DepKind.TRUE)
+                        else:   # own data: depend on its producers
+                            for psub, producer in ms.producers.query(blocks[b]):
+                                sd.add_dependency(producer, DepKind.TRUE)
+                    if self._last_horizon is not None:
+                        sd.add_dependency(self._last_horizon, DepKind.SYNC)
+                    self._emit(sd)
+                    ms.readers.append((sent, sd))
+                    self.pilots.append(Pilot(
+                        source=self.node, target=m.dst, transfer_id=rtid_k,
+                        box=sent.bounding_box(), msg_id=msg_id))
+        if not recv_region.is_empty():
+            # fresh remote data supersedes stale local replicas + spills
+            self.mem.coherence[buf.bid].update(recv_region,
+                                               frozenset([PINNED_HOST]))
+            self.mem.note_write(buf.bid, recv_region)
 
     # -- synchronization (§3.5) ---------------------------------------------
     def _compile_sync(self, cmd: Command, itype: InstructionType) -> None:

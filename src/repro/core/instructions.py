@@ -43,6 +43,13 @@ class InstructionType(enum.Enum):
     LOCAL_REDUCE = "local_reduce"
     GATHER_RECEIVE = "gather_receive"
     GLOBAL_REDUCE = "global_reduce"
+    # collective exchange rounds (DESIGN.md §9): one COLL_SEND is one packed
+    # message of one topology round (multiple block/slot fragments); a
+    # COLL_RECV expects exactly one such message from one peer and lands its
+    # fragments.  Transfer ids are round-tagged, so rounds of different
+    # collectives interleave freely.
+    COLL_SEND = "coll_send"
+    COLL_RECV = "coll_recv"
     DEVICE_KERNEL = "device_kernel"
     HOST_TASK = "host_task"
     HORIZON = "horizon"
@@ -65,6 +72,23 @@ class ReductionBinding:
     """Executor-facing: the identity-filled scratch a kernel reduces into."""
     reduction: Reduction
     allocation: Allocation        # per-device accumulator scratch
+
+
+@dataclass(frozen=True)
+class CollFragment:
+    """One packed fragment of a collective message.
+
+    ``key`` is the matching token the receiver expects: ``(member, slot)``
+    for reduction-partial slots (member index within a fused group, slot =
+    contributor rank) or a buffer-space :class:`Box` for region collectives.
+    ``alloc`` is the allocation the sender reads from (slot index or box
+    addressing, depending on the key form).
+    """
+
+    key: object
+    alloc: Allocation
+    slot: Optional[int] = None          # reduction slot within ``alloc``
+    box: Optional[Box] = None           # buffer-space box within ``alloc``
 
 
 @dataclass
@@ -118,6 +142,20 @@ class Instruction:
     gather_sources: tuple[int, ...] = ()
     participants: tuple[int, ...] = ()
     include_current: bool = False
+    # collective mode (DESIGN.md §9): LOCAL_REDUCE writes slot ``dst_slot``
+    # of the staging allocation; GLOBAL_REDUCE with ``slot_all`` folds every
+    # participant slot of ``src_alloc`` (own partial included).  COLL_SEND
+    # carries ``coll_frags``; COLL_RECV expects keys ``coll_expect`` from
+    # ``coll_source`` and lands them into ``coll_allocs``.
+    dst_slot: Optional[int] = None
+    slot_all: bool = False
+    coll_frags: tuple[CollFragment, ...] = ()
+    coll_allocs: tuple[Allocation, ...] = ()
+    coll_expect: tuple = ()
+    coll_source: Optional[int] = None
+    # optional tracer lane override (per-collective Perfetto tracks) — does
+    # not affect executor routing, which keys on ``queue``
+    trace_lane: Optional[str] = None
     # DEVICE_KERNEL / HOST_TASK
     kernel_fn: Optional[Callable] = None
     chunk: Optional[Box] = None
@@ -152,5 +190,6 @@ class Instruction:
             extra = f":{self.allocation}"
         elif self.itype in (InstructionType.COPY, InstructionType.SPILL,
                             InstructionType.RELOAD):
-            extra = f":{self.src_alloc and self.src_alloc.aid}->{self.dst_alloc and self.dst_alloc.aid}"
+            extra = (f":{self.src_alloc and self.src_alloc.aid}"
+                     f"->{self.dst_alloc and self.dst_alloc.aid}")
         return f"I{self.iid}<{self.itype.value}{extra}>"

@@ -77,10 +77,15 @@ class LookaheadScheduler:
     # ------------------------------------------------------------------
     def _is_allocating(self, cmd: Command) -> bool:
         # REDUCE_PARTIAL only touches one-shot scratch (never widened);
-        # REDUCE_GLOBAL writes the buffer's host backing and participates
+        # REDUCE_GLOBAL writes the buffer's host backing and participates,
+        # as do region collectives (their landing/staging region lives in
+        # the buffer's pinned-host backing)
         if cmd.ctype not in (CommandType.EXECUTION, CommandType.PUSH,
                              CommandType.AWAIT_PUSH,
-                             CommandType.REDUCE_GLOBAL):
+                             CommandType.REDUCE_GLOBAL,
+                             CommandType.COLL_ALLGATHER,
+                             CommandType.COLL_BROADCAST,
+                             CommandType.COLL_SCATTER):
             return False
         out = False
         for (bid, mid), region in self.idag.allocation_requirements(cmd).items():
@@ -149,6 +154,10 @@ class LookaheadScheduler:
                 window[key] = window.get(key, Region.empty()).union(region)
         self.idag.mem.reserve(hints, window=window)
         out: list[Instruction] = []
+        # spill-aware reload prefetch: the window's spilled device regions
+        # start their copy back BEFORE the commands that first touch them
+        # compile, hiding reload latency behind the preceding execution
+        out.extend(self.idag.mem.prefetch_reloads(window))
         for cmd in self.queue:
             out.extend(self._compile(cmd))
         self.queue.clear()

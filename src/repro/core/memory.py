@@ -73,12 +73,23 @@ class MemoryStats:
     reloads: int = 0              # RELOAD copy instructions emitted
     reload_bytes: int = 0
     over_budget: int = 0          # pressure events with no evictable victim
+    # write-back elision: evicted regions whose replica survives elsewhere
+    # are dropped without a device->host SPILL copy.  ``writeback_elisions``
+    # counts evictions that needed NO spill copy at all (fully clean
+    # victim); ``elided_bytes`` counts every dropped-clean byte.
+    writeback_elisions: int = 0
+    elided_bytes: int = 0
+    # reloads issued ahead of first use by the lookahead flush (§4.3)
+    prefetched_reloads: int = 0
 
     def as_dict(self) -> dict:
         return dict(evictions=self.evictions, spills=self.spills,
                     spill_bytes=self.spill_bytes, reloads=self.reloads,
                     reload_bytes=self.reload_bytes,
-                    over_budget=self.over_budget)
+                    over_budget=self.over_budget,
+                    writeback_elisions=self.writeback_elisions,
+                    elided_bytes=self.elided_bytes,
+                    prefetched_reloads=self.prefetched_reloads)
 
 
 class MemoryManager:
@@ -230,6 +241,39 @@ class MemoryManager:
         set is protected (direct callers outside the lookahead)."""
         self.hints = dict(hints)
         self.reserved = dict(hints if window is None else window)
+
+    def prefetch_reloads(self,
+                         window: dict[tuple[int, int], Region]) -> list[Instruction]:
+        """Spill-aware lookahead (§4.3 + DESIGN.md §8): issue RELOAD copies
+        for the window's spilled device regions AHEAD of their first use, so
+        reload latency hides behind execution like every other copy.
+
+        Called by the lookahead flush after :meth:`reserve` (the window is
+        already eviction-protected, so the prefetched bytes stay resident)
+        and BEFORE the window's commands compile — the later ``ensure`` /
+        ``make_coherent`` calls then find the region already in flight.
+        """
+        out: list[Instruction] = []
+        # capture EVERYTHING emitted (allocs, frees, cascade spills, copies)
+        with self.host.capture_batch(out):
+            for (bid, mid), region in window.items():
+                if not is_device_memory(mid):
+                    continue
+                sp = self.spilled.get(bid)
+                if sp is None or sp.is_empty():
+                    continue
+                need = sp.intersect(region)
+                if need.is_empty():
+                    continue
+                buf = self.buffers.get(bid)
+                if buf is None:
+                    continue
+                before = self.stats.reloads
+                with self.pin_scope():
+                    self.make_coherent(buf, mid, need)
+                self.stats.prefetched_reloads += \
+                    self.stats.reloads - before
+        return out
 
     # -- instruction emission helpers --------------------------------------
     def _emit_alloc(self, alloc: Allocation, name: str) -> Instruction:
@@ -403,9 +447,22 @@ class MemoryManager:
             self._spill(victim)
             self.stats.evictions += 1
 
+    def _is_dirty(self, a: Allocation) -> bool:
+        """Whether evicting ``a`` would need a write-back: some region of it
+        is coherent ONLY here.  In this coherence model a write makes its
+        memory the sole coherent holder, so clean <=> replica elsewhere."""
+        coh = self.coherence.get(a.bid)
+        if coh is None:
+            return False
+        for sub, mids in coh.query(Region.from_box(a.box)):
+            if mids and mids == frozenset([a.mid]):
+                return True
+        return False
+
     def _pick_victim(self, mid: int, protect) -> Optional[Allocation]:
-        """LRU victim; allocations under a lookahead reservation only fall
-        when nothing unreserved is left (cooperate, don't fight §4.3)."""
+        """Victim scoring: reservations first (cooperate, don't fight §4.3),
+        then clean-before-dirty (a clean victim's eviction elides the
+        write-back copy entirely), then LRU."""
         best = None
         best_key = None
         for (bid, m), lst in self.allocations.items():
@@ -418,7 +475,7 @@ class MemoryManager:
                     continue
                 reserved = bool(res is not None and not res.is_empty()
                                 and res.overlaps(Region.from_box(a.box)))
-                k = (reserved, a.last_use)
+                k = (reserved, self._is_dirty(a), a.last_use)
                 if best_key is None or k < best_key:
                     best, best_key = a, k
         return best
@@ -450,6 +507,12 @@ class MemoryManager:
                 spilled_out = spilled_out.union(sub)
             else:
                 elsewhere.append((sub, mids))
+                # write-back elision: the region is clean here (a coherent
+                # replica survives elsewhere), so dropping it needs no copy
+                self.stats.elided_bytes += \
+                    sum(b.volume() for b in sub.boxes) * buf.elem_bytes()
+        if not only_here:
+            self.stats.writeback_elisions += 1
         target_mid = PINNED_HOST if is_device_memory(mid) else USER_HOST
         if only_here:
             out = Region.empty()

@@ -33,6 +33,13 @@ Accumulator state is an ndarray of the reduction-buffer shape: dtype
 ``object`` holding Python ints for the exact-sum path, the buffer dtype
 otherwise.  On a real MPI wire the integer limbs would be serialized like
 ReproBLAS bins; the in-process mailbox ships the object array directly.
+
+Transport note (DESIGN.md §9): with the collective layer enabled the node
+partials travel as packed fragments of a dissemination allgather (fused
+across adjacent reductions) instead of N*(N-1) point-to-point sends.
+Integer addition stays associative/commutative, so the exchange topology
+— p2p, collective, fused or not — never changes a single bit of the
+result.
 """
 
 from __future__ import annotations

@@ -520,7 +520,8 @@ class RegionMap:
         by_val: dict[int, tuple[object, list[Box]]] = {}
         order: list[int] = []
         for r, v in self.entries:
-            k = id(v) if not isinstance(v, (int, str, tuple, frozenset)) else hash((type(v).__name__, v))
+            k = (id(v) if not isinstance(v, (int, str, tuple, frozenset))
+                 else hash((type(v).__name__, v)))
             if k in by_val:
                 by_val[k][1].extend(r.boxes)
             else:

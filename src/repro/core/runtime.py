@@ -45,7 +45,8 @@ class _NodeScheduler:
     def __init__(self, node: int, rt: "Runtime"):
         self.node = node
         self.rt = rt
-        self.cdag = CommandGraphGenerator(rt.num_nodes, retire_for=node)
+        self.cdag = CommandGraphGenerator(rt.num_nodes, retire_for=node,
+                                          collectives=rt.collectives)
         budgets: dict[int, int] = dict(rt.memory_budgets or {})
         if rt.device_memory_budget is not None:
             for d in range(rt.devices_per_node):
@@ -150,11 +151,17 @@ class Runtime:
                  horizon_step: int = 4, queues_per_device: int = 2,
                  host_threads: int = 4, max_horizon_lag: int = 8,
                  device_memory_budget: Optional[int] = None,
-                 memory_budgets: Optional[dict[int, int]] = None):
+                 memory_budgets: Optional[dict[int, int]] = None,
+                 collectives: bool = True, reduction_fusion: bool = True):
         self.num_nodes = num_nodes
         self.devices_per_node = devices_per_node
         self.lookahead = lookahead
         self.max_horizon_lag = max_horizon_lag
+        # collective exchange layer (DESIGN.md §9): tree/recursive-doubling
+        # collectives instead of N*(N-1) point-to-point pushes, and packed
+        # fusion of adjacent reduction exchanges
+        self.collectives = collectives
+        self.reduction_fusion = reduction_fusion and collectives
         # per-device-memory byte budget (None = unbudgeted, the historical
         # behavior); ``memory_budgets`` maps explicit memory ids -> bytes
         # for finer control (e.g. a pinned-host budget), overriding the
@@ -163,7 +170,8 @@ class Runtime:
         self.memory_budgets = memory_budgets
         self.d2d = d2d
         self.tracer = Tracer() if trace else None
-        self.tdag = TaskGraph(horizon_step=horizon_step)
+        self.tdag = TaskGraph(horizon_step=horizon_step,
+                              fuse_reductions=self.reduction_fusion)
         self.comm = Communicator(num_nodes)
         self.executors = [Executor(n, devices_per_node, self.comm,
                                    queues_per_device=queues_per_device,
@@ -262,6 +270,15 @@ class Runtime:
             w.extend(s.cdag.errors)
             w.extend(s.idag.warnings)
         return w
+
+    def comm_stats(self) -> dict:
+        """Wire-level accounting: total messages/bytes plus the collective-
+        round share (packed messages; DESIGN.md §9)."""
+        return dict(messages=self.comm.num_messages,
+                    bytes=self.comm.bytes_sent,
+                    coll_messages=self.comm.coll_messages,
+                    coll_bytes=self.comm.coll_bytes,
+                    red_messages=self.comm.red_messages)
 
     def total_instructions(self) -> int:
         return sum(s.idag.emitted_count for s in self.schedulers)

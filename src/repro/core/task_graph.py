@@ -48,6 +48,12 @@ class Task:
     dependencies: list[tuple["Task", DepKind]] = field(default_factory=list)
     dependents: list["Task"] = field(default_factory=list)
     critical_path: int = 0
+    # reduction-fusion chain marker (DESIGN.md §9): stamped by the TDAG on
+    # the MAIN thread, so the decision is replicated by construction — the
+    # CDAG may merge this task's reduction exchange with the immediately
+    # preceding reduction task's exchange (same horizon window, no
+    # dependency path between them).
+    fuse_with_prev: bool = False
 
     def add_dependency(self, dep: "Task", kind: DepKind) -> None:
         if dep is self:
@@ -87,8 +93,14 @@ class TaskGraph:
     bounding tracking structures.
     """
 
-    def __init__(self, horizon_step: int = 4, max_front_width: int = 16):
+    def __init__(self, horizon_step: int = 4, max_front_width: int = 16,
+                 fuse_reductions: bool = True):
         self.tasks: list[Task] = []
+        # reduction fusion scope (DESIGN.md §9): the task whose reduction
+        # exchange is still "open" for fusion; any non-reduction kernel,
+        # horizon/epoch, or dependency path breaks the chain
+        self.fuse_reductions = fuse_reductions
+        self._red_chain: list[Task] = []
         # prefix retirement (runtime mode): ``tasks[0]`` is lifetime index
         # ``_base``; ``retire_to`` drops broadcast prefixes at sync points so
         # TDAG memory is O(window) on long programs (DESIGN.md §3)
@@ -204,9 +216,40 @@ class TaskGraph:
         if self._last_horizon is not None:
             task.add_dependency(self._last_horizon, DepKind.SYNC)
 
+        # reduction-fusion chain (DESIGN.md §9): decided HERE, on the main
+        # thread, from replicated TDAG state only — every node scheduler
+        # sees the same ``fuse_with_prev`` stamps, so the fused exchange
+        # topology is identical everywhere.  A task extends the chain iff it
+        # has reductions and no dependency path to any open chain member
+        # (a path would make the fused exchange cyclic: the earlier member's
+        # result would wait on a partial that waits on the result).
+        if reds and self.fuse_reductions:
+            if self._red_chain and not self._reaches_any(task, self._red_chain):
+                task.fuse_with_prev = True
+                self._red_chain.append(task)
+            else:
+                self._red_chain = [task]
+        elif ttype in (TaskType.KERNEL, TaskType.HOST):
+            self._red_chain = []          # adjacency broken
+
         self._append(task)
         self._maybe_emit_horizon(task)
         return task
+
+    def _reaches_any(self, task: Task, targets: list[Task]) -> bool:
+        """Transitive dependency check bounded to the open-chain window."""
+        lo = targets[0].tid
+        target_ids = {t.tid for t in targets}
+        stack = [task]
+        seen: set[int] = set()
+        while stack:
+            for dep, _ in stack.pop().dependencies:
+                if dep.tid in target_ids:
+                    return True
+                if dep.tid >= lo and dep.tid not in seen:
+                    seen.add(dep.tid)
+                    stack.append(dep)
+        return False
 
     def _written_region(self, st: _BufferState) -> Region:
         out = Region.empty()
@@ -243,6 +286,7 @@ class TaskGraph:
                                if t.critical_path >= horizon.critical_path - self.horizon_step]
         self._prev_horizon, self._last_horizon = self._last_horizon, horizon
         self._cp_at_last_horizon = horizon.critical_path
+        self._red_chain = []              # fusion scope ends at the horizon
         return horizon
 
     def emit_epoch(self, name: str = "epoch") -> Task:
@@ -258,6 +302,7 @@ class TaskGraph:
             st.last_readers = []
         self._last_epoch = epoch
         self._last_horizon = None
+        self._red_chain = []              # fusion scope ends at the epoch
         return epoch
 
     # ------------------------------------------------------------------

@@ -62,7 +62,10 @@ class Tracer:
 
     def complete(self, node: int, instr) -> None:
         t0 = self._open.pop((node, instr.iid), self.now())
-        lane = f"N{node}." + ".".join(map(str, instr.queue))
+        # collective rounds carry a per-collective lane override so each
+        # exchange renders as its own named Perfetto track (DESIGN.md §9)
+        lane = getattr(instr, "trace_lane", None) \
+            or f"N{node}." + ".".join(map(str, instr.queue))
         self.span(lane, instr.itype.value, instr.name or repr(instr), t0, self.now())
 
     # analysis ---------------------------------------------------------------
@@ -86,13 +89,22 @@ class Tracer:
                 merged.append((a, b))
         return merged
 
-    def overlap_fraction(self, lane_a_prefix: str, lane_b_prefix: str) -> float:
-        """Fraction of lane-A busy time during which lane-B was also busy."""
+    def overlap_fraction(self, lane_a_prefix: str, lane_b_prefix: str, *,
+                         kind_a: str | None = None,
+                         kind_b: str | None = None) -> float:
+        """Fraction of lane-A busy time during which lane-B was also busy.
+
+        ``kind_a``/``kind_b`` optionally restrict each side to spans of one
+        kind (e.g. ``kind_a="reload"``, ``kind_b="device_kernel"`` measures
+        how much reload traffic hid behind kernel execution).
+        """
         lanes = self.lanes()
         a = self._busy_intervals([s for l, ss in lanes.items()
-                                  if l.startswith(lane_a_prefix) for s in ss])
+                                  if l.startswith(lane_a_prefix) for s in ss
+                                  if kind_a is None or s.kind == kind_a])
         b = self._busy_intervals([s for l, ss in lanes.items()
-                                  if l.startswith(lane_b_prefix) for s in ss])
+                                  if l.startswith(lane_b_prefix) for s in ss
+                                  if kind_b is None or s.kind == kind_b])
         total = sum(t1 - t0 for t0, t1 in a)
         if total == 0:
             return 0.0

@@ -1,0 +1,449 @@
+"""Collective exchange layer tests (DESIGN.md §9).
+
+Covers the topology schedules (coverage + O(N log N) message counts at
+power-of-two AND non-power-of-two group sizes), the CDAG collective
+detection (allgather / broadcast / scatter vs the point-to-point fallback),
+the structural message-count win over the all-pairs exchange, value
+bitexactness against the point-to-point oracle on 1/2/3/4/6/8 nodes, and
+packed reduction fusion (the nbody E+Mx pattern: one exchange per step,
+bit-identical per fused component).
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (IdagGenerator, InstructionType, Runtime, TaskGraph,
+                        all_range, fixed, generate_cdag, one_to_one, read,
+                        read_write, reduction, write)
+from repro.core.buffer import VirtualBuffer
+from repro.core.collective import (allgather_schedule, message_count,
+                                   num_rounds, tree_schedule)
+from repro.core.command_graph import CommandType
+from repro.core.region import Box
+
+NODE_COUNTS = [1, 2, 3, 4, 6, 8]
+
+
+# -- topology schedules ------------------------------------------------------
+@pytest.mark.parametrize("p", NODE_COUNTS)
+def test_allgather_schedule_coverage_and_counts(p):
+    group = tuple(range(p))
+    rounds = allgather_schedule(group, group)
+    assert len(rounds) == num_rounds(p)
+    held = {r: {r} for r in group}
+    for msgs in rounds:
+        sent_from = [m.src for m in msgs]
+        assert len(set(sent_from)) == len(sent_from)  # <=1 send/rank/round
+        for m in msgs:
+            # a rank only forwards blocks it already holds
+            assert set(m.blocks) <= held[m.src]
+        for m in msgs:
+            held[m.dst] |= set(m.blocks)
+    for r in group:
+        assert held[r] == set(group), f"rank {r} missing blocks"
+    assert message_count(rounds) <= p * num_rounds(p)
+    if p > 1:
+        assert message_count(rounds) < p * (p - 1) or p <= 3
+
+
+@pytest.mark.parametrize("p", NODE_COUNTS)
+def test_allgather_schedule_partial_contributors(p):
+    """Non-contributing ranks (e.g. nodes without reduction chunks) still
+    receive every block, purely by forwarding."""
+    group = tuple(range(p))
+    contributors = tuple(r for r in group if r % 2 == 0)
+    rounds = allgather_schedule(group, contributors)
+    held = {r: ({r} if r in contributors else set()) for r in group}
+    for msgs in rounds:
+        for m in msgs:
+            assert set(m.blocks) <= held[m.src]
+        for m in msgs:
+            held[m.dst] |= set(m.blocks)
+    for r in group:
+        assert held[r] == set(contributors)
+
+
+@pytest.mark.parametrize("p", NODE_COUNTS)
+def test_tree_schedules(p):
+    group = tuple(range(p))
+    bc = tree_schedule(group, 0)
+    held = {0}
+    for msgs in bc:
+        for m in msgs:
+            assert m.src in held          # only holders forward
+        for m in msgs:
+            held.add(m.dst)
+    assert held == set(group)
+    assert message_count(bc) == p - 1
+    assert len(bc) == num_rounds(p)
+
+    sc = tree_schedule(group, 0, scatter=True)
+    have = {0: set(group)}               # root holds every block
+    for msgs in sc:
+        for m in msgs:
+            assert set(m.blocks) <= have[m.src]
+            have[m.src] -= set(m.blocks)
+            have.setdefault(m.dst, set()).update(m.blocks)
+    for r in group[1:]:
+        assert r in have[r], f"rank {r} never received its block"
+    assert message_count(sc) == p - 1
+
+
+# -- CDAG detection + structural message counts ------------------------------
+def _allgather_tdag(n, steps=2):
+    """write one_to_one then read all_range: the replicated-exchange
+    pattern whose all-pairs materialization is N*(N-1) pushes."""
+    tdag = TaskGraph()
+    P = VirtualBuffer((n,), name="P", initial_value=np.zeros(n))
+    O = VirtualBuffer((n,), name="O", initial_value=np.zeros(n))
+    for _ in range(steps):
+        tdag.submit("w", (n,), [read_write(P, one_to_one())])
+        tdag.submit("r", (n,), [read(P, all_range()),
+                                read_write(O, one_to_one())])
+    return tdag, P
+
+
+def _compile_idags(cdag, num_nodes, num_devices=1):
+    idags = []
+    for n in range(num_nodes):
+        g = IdagGenerator(n, num_devices)
+        for cmd in cdag.commands[n]:
+            if cmd.ctype == CommandType.EPOCH and cmd.task is None:
+                continue
+            g.compile(cmd)
+        idags.append(g)
+    return idags
+
+
+@pytest.mark.parametrize("nodes", [n for n in NODE_COUNTS if n > 1])
+def test_allgather_replaces_all_pairs_pushes(nodes):
+    tdag, P = _allgather_tdag(64, steps=2)
+    cdag = generate_cdag(tdag, nodes, collectives=True)
+    cmds = [c for per_node in cdag.commands for c in per_node]
+    ags = [c for c in cmds if c.ctype == CommandType.COLL_ALLGATHER]
+    assert ags, "allgather pattern not detected"
+    # the replicated exchange produced NO point-to-point pushes at all
+    assert not any(c.ctype == CommandType.PUSH for c in cmds
+                   if c.buffer is not None and c.buffer.bid == P.bid)
+
+    # structural message count: per collective <= N * ceil(log2 N), versus
+    # the point-to-point oracle's N * (N - 1)
+    idags = _compile_idags(cdag, nodes)
+    sends_per_coll: dict[tuple, int] = {}
+    for g in idags:
+        for i in g.instructions:
+            if i.itype == InstructionType.COLL_SEND:
+                base = i.transfer_id[:3]
+                sends_per_coll[base] = sends_per_coll.get(base, 0) + 1
+    assert sends_per_coll
+    for base, count in sends_per_coll.items():
+        assert count <= nodes * num_rounds(nodes), (base, count)
+
+    # point-to-point oracle on the same TDAG shape
+    tdag2, P2 = _allgather_tdag(64, steps=2)
+    cdag2 = generate_cdag(tdag2, nodes, collectives=False)
+    idags2 = _compile_idags(cdag2, nodes)
+    p2p_sends = sum(1 for g in idags2 for i in g.instructions
+                    if i.itype == InstructionType.SEND)
+    n_exchanges = len(sends_per_coll)
+    assert p2p_sends == n_exchanges * nodes * (nodes - 1)
+    coll_sends = sum(sends_per_coll.values())
+    if nodes > 3:
+        assert coll_sends < p2p_sends
+
+
+def test_broadcast_and_scatter_detection():
+    nodes, n = 4, 32
+    tdag = TaskGraph()
+    B = VirtualBuffer((n,), name="B")
+    # a single-chunk task: only node 0 gets work, writing the whole buffer
+    tdag.submit("w0", Box((0,), (1,)), [write(B, fixed(Box((0,), (n,))))])
+    # every node reads everything -> broadcast from the sole owner
+    tdag.submit("rall", (n,), [read(B, all_range()),
+                               write(VirtualBuffer((n,), name="O1"),
+                                     one_to_one())])
+    cdag = generate_cdag(tdag, nodes, collectives=True)
+    cmds = [c for per_node in cdag.commands for c in per_node]
+    assert any(c.ctype == CommandType.COLL_BROADCAST for c in cmds)
+
+    tdag2 = TaskGraph()
+    C = VirtualBuffer((n,), name="C")
+    tdag2.submit("w0", Box((0,), (1,)), [write(C, fixed(Box((0,), (n,))))])
+    # every node reads its own disjoint chunk -> scatter from the owner
+    tdag2.submit("rown", (n,), [read_write(C, one_to_one())])
+    cdag2 = generate_cdag(tdag2, nodes, collectives=True)
+    cmds2 = [c for per_node in cdag2.commands for c in per_node]
+    scatters = [c for c in cmds2 if c.ctype == CommandType.COLL_SCATTER]
+    assert scatters
+    # binomial tree: N-1 messages total, root sends only ceil(log2 N)
+    idags = _compile_idags(cdag2, nodes)
+    sends = [i for g in idags for i in g.instructions
+             if i.itype == InstructionType.COLL_SEND]
+    assert len(sends) == nodes - 1
+    root_sends = [s for s in sends if s.node == 0]
+    assert len(root_sends) == num_rounds(nodes)
+
+
+def test_irregular_exchange_keeps_point_to_point():
+    """Neighborhood reads (partial-overlap pattern) must NOT be collectivized."""
+    from repro.core import neighborhood
+    nodes, n = 4, 64
+    tdag = TaskGraph()
+    U = VirtualBuffer((n,), name="U", initial_value=np.zeros(n))
+    V = VirtualBuffer((n,), name="V")
+    tdag.submit("w", (n,), [read_write(U, one_to_one())])
+    tdag.submit("st", (n,), [read(U, neighborhood((1,))),
+                             write(V, one_to_one())])
+    cdag = generate_cdag(tdag, nodes, collectives=True)
+    cmds = [c for per_node in cdag.commands for c in per_node]
+    assert any(c.ctype == CommandType.PUSH for c in cmds)
+    assert not any(c.ctype in (CommandType.COLL_ALLGATHER,
+                               CommandType.COLL_BROADCAST,
+                               CommandType.COLL_SCATTER) for c in cmds)
+
+
+# -- value bitexactness vs the point-to-point oracle -------------------------
+def _exchange_program(rt, n=48, steps=3):
+    P = rt.buffer((n,), init=np.arange(n, dtype=float), name="P")
+    O = rt.buffer((n,), init=np.zeros(n), name="O")
+
+    def step(chunk, p):
+        p.set(chunk, p.get(chunk) * 1.5 + 1.0)
+
+    def fold(chunk, pall, out):
+        a = pall.get(Box((0,), (n,)))
+        out.set(chunk, out.get(chunk) + a.sum() + a[:: 7].sum())
+
+    for _ in range(steps):
+        rt.submit("step", (n,), [read_write(P, one_to_one())], step)
+        rt.submit("fold", (n,), [read(P, all_range()),
+                                 read_write(O, one_to_one())], fold)
+    return rt.gather(P), rt.gather(O)
+
+
+@pytest.mark.parametrize("nodes", NODE_COUNTS)
+def test_allgather_bitexact_vs_p2p_oracle(nodes):
+    with Runtime(num_nodes=nodes, devices_per_node=1, collectives=False,
+                 host_threads=2) as rt:
+        p_ref, o_ref = _exchange_program(rt)
+        assert rt.warnings == []
+        assert rt.comm.coll_messages == 0
+    with Runtime(num_nodes=nodes, devices_per_node=1, collectives=True,
+                 host_threads=2) as rt:
+        p_c, o_c = _exchange_program(rt)
+        assert rt.warnings == []
+        stats = rt.comm_stats()
+    np.testing.assert_array_equal(p_ref, p_c)
+    np.testing.assert_array_equal(o_ref, o_c)
+    if nodes > 1:
+        assert stats["coll_messages"] > 0
+
+
+@pytest.mark.parametrize("nodes", [3, 4, 6])
+def test_scatter_bitexact_vs_p2p_oracle(nodes):
+    n = 48
+
+    def program(rt):
+        B = rt.buffer((n,), name="B")
+
+        def w0(chunk, bv):
+            bv.set(Box((0,), (n,)), np.arange(n, dtype=float) * 2.0)
+
+        def own(chunk, bv):
+            bv.set(chunk, bv.get(chunk) + 1.0)
+
+        rt.submit("w0", Box((0,), (1,)), [write(B, fixed(Box((0,), (n,))))],
+                  w0)
+        rt.submit("own", (n,), [read_write(B, one_to_one())], own)
+        return rt.gather(B)
+
+    with Runtime(num_nodes=nodes, devices_per_node=1, collectives=False,
+                 host_threads=2) as rt:
+        ref = program(rt)
+    with Runtime(num_nodes=nodes, devices_per_node=1, collectives=True,
+                 host_threads=2) as rt:
+        out = program(rt)
+    np.testing.assert_array_equal(ref, out)
+
+
+# -- reduction exchange as an allgather participant --------------------------
+@pytest.mark.parametrize("nodes", [2, 3, 4, 6])
+def test_reduction_exchange_message_count(nodes):
+    tdag = TaskGraph(horizon_step=100)
+    X = VirtualBuffer((32,), name="X", initial_value=np.zeros(32))
+    E = VirtualBuffer((1,), name="E", initial_value=np.zeros(1))
+    tdag.submit("k", (32,), [read(X, one_to_one()), reduction(E, "sum")])
+    cdag = generate_cdag(tdag, nodes, collectives=True)
+    idags = _compile_idags(cdag, nodes)
+    coll_sends = sum(1 for g in idags for i in g.instructions
+                     if i.itype == InstructionType.COLL_SEND)
+    assert 0 < coll_sends <= nodes * num_rounds(nodes)
+
+    # point-to-point oracle: the partial broadcast is N*(N-1) sends
+    tdag2 = TaskGraph(horizon_step=100)
+    X2 = VirtualBuffer((32,), name="X2", initial_value=np.zeros(32))
+    E2 = VirtualBuffer((1,), name="E2", initial_value=np.zeros(1))
+    tdag2.submit("k", (32,), [read(X2, one_to_one()), reduction(E2, "sum")])
+    cdag2 = generate_cdag(tdag2, nodes, collectives=False)
+    idags2 = _compile_idags(cdag2, nodes)
+    p2p_sends = sum(1 for g in idags2 for i in g.instructions
+                    if i.itype == InstructionType.SEND)
+    assert p2p_sends == nodes * (nodes - 1)
+    if nodes > 3:
+        assert coll_sends < p2p_sends
+
+
+@pytest.mark.parametrize("nodes,devs", [(1, 1), (2, 2), (3, 1), (6, 1)])
+def test_reduction_bitexact_collective_vs_p2p(nodes, devs):
+    rng = np.random.default_rng(17)
+    data = rng.normal(size=513) * 10.0 ** rng.integers(-20, 20, size=513)
+    oracle = math.fsum(data)
+    for coll in (False, True):
+        with Runtime(num_nodes=nodes, devices_per_node=devs,
+                     collectives=coll, host_threads=2) as rt:
+            X = rt.buffer((513,), init=data, name="X")
+            E = rt.buffer((1,), init=np.zeros(1), name="E")
+
+            def k(chunk, xv, red):
+                red.contribute(xv.get(chunk))
+
+            rt.submit("red", (513,),
+                      [read(X, one_to_one()), reduction(E, "sum")], k)
+            assert float(rt.gather(E)[0]) == oracle
+            assert rt.warnings == []
+
+
+# -- packed reduction fusion (the nbody E+Mx pattern) ------------------------
+def _energy_momentum(nodes, devs, *, fused, steps=3, n=96):
+    """Adjacent E (energy) and Mx (momentum) reductions each step."""
+    rng = np.random.default_rng(5)
+    data = rng.normal(size=(n,))
+    with Runtime(num_nodes=nodes, devices_per_node=devs,
+                 reduction_fusion=fused, host_threads=2) as rt:
+        X = rt.buffer((n,), init=data, name="X")
+        E = rt.buffer((1,), init=np.zeros(1), name="E")
+        M = rt.buffer((1,), init=np.zeros(1), name="Mx")
+
+        def evolve(chunk, xv):
+            xv.set(chunk, xv.get(chunk) * 1.125)
+
+        def energy(chunk, xv, red):
+            red.contribute(xv.get(chunk) ** 2)
+
+        def momentum(chunk, xv, red):
+            red.contribute(xv.get(chunk) * 3.0)
+
+        es, ms = [], []
+        for _ in range(steps):
+            rt.submit("evolve", (n,), [read_write(X, one_to_one())], evolve)
+            rt.submit("energy", (n,), [read(X, one_to_one()),
+                                       reduction(E, "sum")], energy)
+            rt.submit("momentum", (n,), [read(X, one_to_one()),
+                                         reduction(M, "sum")], momentum)
+            es.append(float(rt.gather(E)[0]))
+            ms.append(float(rt.gather(M)[0]))
+        stats = rt.comm_stats()
+        assert rt.warnings == []
+    # fsum oracle per step
+    x = data.copy()
+    oe, om = [], []
+    for _ in range(steps):
+        x = x * 1.125
+        oe.append(math.fsum(x ** 2))
+        om.append(math.fsum(x * 3.0))
+    return es, ms, oe, om, stats
+
+
+@pytest.mark.parametrize("nodes,devs", [(1, 1), (2, 2), (3, 1)])
+def test_fused_reduction_bitexact(nodes, devs):
+    es, ms, oe, om, _ = _energy_momentum(nodes, devs, fused=True)
+    assert es == oe and ms == om
+
+
+@pytest.mark.parametrize("nodes", [2, 3, 4])
+def test_fusion_halves_exchanges(nodes):
+    """Fused: ONE packed exchange per step (N*ceil(log2 N) round messages);
+    unfused: one exchange per reduction per step — exactly double."""
+    steps = 3
+    *_, fused_stats = _energy_momentum(nodes, 1, fused=True, steps=steps)
+    *_, unfused_stats = _energy_momentum(nodes, 1, fused=False, steps=steps)
+    per_exchange = message_count(
+        allgather_schedule(tuple(range(nodes)), tuple(range(nodes))))
+    assert fused_stats["coll_messages"] == steps * per_exchange
+    assert unfused_stats["coll_messages"] == 2 * steps * per_exchange
+
+
+def test_fusion_respects_dependencies():
+    """A reduction whose producing task READS the previous reduction's
+    result must not fuse (the packed exchange would deadlock); the chain
+    breaks and both values stay correct."""
+    n = 32
+    data = np.arange(n, dtype=float)
+    with Runtime(num_nodes=2, devices_per_node=1, host_threads=2) as rt:
+        X = rt.buffer((n,), init=data, name="X")
+        E = rt.buffer((1,), init=np.zeros(1), name="E")
+        F = rt.buffer((1,), init=np.zeros(1), name="F")
+
+        def k1(chunk, xv, red):
+            red.contribute(xv.get(chunk))
+
+        def k2(chunk, xv, ev, red):
+            red.contribute(xv.get(chunk) + ev.get(Box((0,), (1,)))[0])
+
+        t1 = rt.submit("e", (n,), [read(X, one_to_one()),
+                                   reduction(E, "sum")], k1)
+        t2 = rt.submit("f", (n,), [read(X, one_to_one()),
+                                   read(E, all_range()),
+                                   reduction(F, "sum")], k2)
+        assert not t2.fuse_with_prev      # dependency path E -> t2
+        e = float(rt.gather(E)[0])
+        f = float(rt.gather(F)[0])
+        assert rt.warnings == []
+    oe = math.fsum(data)
+    assert e == oe
+    assert f == math.fsum(data + oe)
+
+
+def test_fusion_within_one_task():
+    """Two reductions bound by ONE task share the packed exchange."""
+    n = 64
+    data = np.arange(n, dtype=float)
+    with Runtime(num_nodes=2, devices_per_node=1, host_threads=2) as rt:
+        X = rt.buffer((n,), init=data, name="X")
+        E = rt.buffer((1,), init=np.zeros(1), name="E")
+        M = rt.buffer((1,), init=np.zeros(1), name="M")
+
+        def k(chunk, xv, red_e, red_m):
+            red_e.contribute(xv.get(chunk) ** 2)
+            red_m.contribute(xv.get(chunk))
+
+        rt.submit("both", (n,), [read(X, one_to_one()),
+                                 reduction(E, "sum"), reduction(M, "sum")], k)
+        e = float(rt.gather(E)[0])
+        m = float(rt.gather(M)[0])
+        stats = rt.comm_stats()
+        assert rt.warnings == []
+    assert e == math.fsum(data ** 2)
+    assert m == math.fsum(data)
+    per_exchange = message_count(allgather_schedule((0, 1), (0, 1)))
+    assert stats["coll_messages"] == per_exchange     # ONE exchange, not two
+
+
+def test_include_current_value_with_collectives():
+    data = np.arange(24.0)
+    for nodes in (1, 2, 3):
+        with Runtime(num_nodes=nodes, devices_per_node=1,
+                     host_threads=2) as rt:
+            X = rt.buffer((24,), init=data, name="X")
+            E = rt.buffer((1,), init=np.full(1, 2.25), name="E")
+
+            def k(chunk, xv, red):
+                red.contribute(xv.get(chunk))
+
+            rt.submit("k", (24,),
+                      [read(X, one_to_one()),
+                       reduction(E, "sum", include_current_value=True)], k)
+            out = float(rt.gather(E)[0])
+        assert out == math.fsum(list(data) + [2.25])

@@ -1,0 +1,37 @@
+"""Format gate for ``src/repro/core/`` — container-side mirror of the CI
+``ruff check --select E101,E501,W191,W291,W292,W293`` step.
+
+The development container has no ruff (and no network to install it), so
+the same enumerable whitespace/line-length rules are enforced here in pure
+Python: a formatting regression fails tier-1 locally with the same rule
+names CI would report.
+"""
+
+from pathlib import Path
+
+CORE = Path(__file__).resolve().parents[1] / "src" / "repro" / "core"
+MAX_LINE = 100        # [tool.ruff] line-length in pyproject.toml
+
+
+def _violations() -> list[str]:
+    out: list[str] = []
+    for path in sorted(CORE.glob("*.py")):
+        text = path.read_text()
+        if text and not text.endswith("\n"):
+            out.append(f"{path.name}: W292 no newline at end of file")
+        for no, line in enumerate(text.splitlines(), 1):
+            indent = line[:len(line) - len(line.lstrip())]
+            if "\t" in indent:        # W191/E101 flag indentation tabs only
+                out.append(f"{path.name}:{no}: E101/W191 tab in indentation")
+            if line != line.rstrip():
+                rule = "W293" if not line.strip() else "W291"
+                out.append(f"{path.name}:{no}: {rule} trailing whitespace")
+            if len(line) > MAX_LINE and "# noqa" not in line:
+                out.append(f"{path.name}:{no}: E501 line too long "
+                           f"({len(line)} > {MAX_LINE})")
+    return out
+
+
+def test_core_tree_is_format_clean():
+    v = _violations()
+    assert not v, "format violations in src/repro/core/:\n" + "\n".join(v)

@@ -325,6 +325,105 @@ def test_lookahead_reservation_protects_from_eviction():
     assert idag2.mem.stats.over_budget == 0
 
 
+def test_writeback_elision_clean_victim():
+    """A victim whose regions are all coherent elsewhere (reloaded but never
+    re-written) is dropped WITHOUT a device->host SPILL copy, the elision is
+    counted, and the eviction policy prefers such clean victims over dirty
+    ones regardless of LRU order."""
+    tdag = TaskGraph()
+    A = VirtualBuffer((N,), name="A")
+    B = VirtualBuffer((N,), name="B")
+    C = VirtualBuffer((N,), name="C")
+    D = VirtualBuffer((N,), name="D")
+    tdag.submit("wA", (N,), [write(A, one_to_one())])
+    tdag.submit("wB", (N,), [write(B, one_to_one())])      # A+B fill budget
+    tdag.submit("wC", (N,), [write(C, one_to_one())])      # evicts A (dirty)
+    # reads A back (reload): A is now coherent on device AND host => clean
+    tdag.submit("rA", (N,), [read(A, one_to_one())])       # evicts B (dirty)
+    # pressure again: the clean A must fall before the dirty, LRU-older C —
+    # and its eviction needs NO spill copy (the host replica is current)
+    tdag.submit("wD", (N,), [write(D, one_to_one())])
+    idag = IdagGenerator(0, 1, budgets={device_memory(0): 2 * BYTES})
+    _compile(tdag, idag)
+    stats = idag.mem.stats
+    spills = [i for i in idag.instructions if i.itype == InstructionType.SPILL]
+    # exactly the two dirty evictions (A for C, B for A's reload) spilled;
+    # the clean re-eviction of A emitted NO spill copy
+    assert len(spills) == 2, spills
+    assert stats.evictions == 3
+    assert stats.writeback_elisions == 1
+    assert stats.elided_bytes == BYTES
+    reloads = [i for i in idag.instructions
+               if i.itype == InstructionType.RELOAD]
+    assert len(reloads) == 1
+    # the clean A was chosen over the dirty C (which LRU alone would evict)
+    freed_bids = [i.allocation.bid for i in idag.instructions
+                  if i.itype == InstructionType.FREE
+                  and i.allocation.mid == device_memory(0)]
+    assert freed_bids == [A.bid, B.bid, A.bid]
+    assert C.bid not in freed_bids
+
+
+def test_writeback_elision_in_memory_report():
+    """The elision counters surface through ``Runtime.memory_report()``."""
+    with Runtime(1, 1) as q:
+        _phased_program(q)
+        rep = q.memory_report()[0]
+    assert "writeback_elisions" in rep and "elided_bytes" in rep
+    assert "prefetched_reloads" in rep
+
+
+def test_prefetch_reload_overlaps_execution():
+    """Spill-aware lookahead: the resumed phase's RELOADs are issued at the
+    window flush, ahead of first use, and execute while the previous
+    phase's kernels are still running (Tracer.overlap_fraction on the
+    reload spans vs the kernel spans > 0)."""
+    import time as _time
+
+    def program(q, slow):
+        bufs = [q.buffer((N,), init=np.zeros(N), name=f"B{g}")
+                for g in range(3)]
+
+        def steps(g, lo, hi, sleep=0.0):
+            B = bufs[g]
+            for s in range(lo, hi):
+                def k(chunk, bv, s=s, sleep=sleep):
+                    if sleep:
+                        _time.sleep(sleep)
+                    bv.set(chunk, bv.get(chunk) * 0.5 + (s + 1))
+                q.submit(f"g{g}s{s}", (N,),
+                         [read_write(B, one_to_one())], k)
+
+        # phases long enough to reach allocation steady state (two horizons
+        # without a new alloc), so every phase is its OWN lookahead window:
+        # phase 0 pauses, is spilled while 1/2 compile (all buffers dirty),
+        # and its resume window prefetches the reload while the slow phase
+        # 2 is still executing — phase 1's bytes free without waiting on 2
+        steps(0, 0, 6)
+        steps(1, 0, 12)
+        steps(2, 0, 12, sleep=slow)
+        steps(0, 6, 12)
+        return [q.gather(B) for B in bufs]
+
+    with Runtime(1, 1) as q:
+        base = program(q, slow=0.0)
+        hwm = _device_peak(q.memory_report()[0])
+
+    # budget = two of the three phase working sets: the resumed phase can
+    # materialize by evicting the DONE phase 1, never the running phase 2
+    with Runtime(1, 1, device_memory_budget=(2 * hwm) // 3, trace=True) as q:
+        out = program(q, slow=0.02)
+        rep = q.memory_report()[0]
+        tracer = q.tracer
+    for a, b in zip(base, out):
+        np.testing.assert_array_equal(a, b)
+    assert rep["reloads"] > 0
+    assert rep["prefetched_reloads"] > 0, rep
+    f = tracer.overlap_fraction("N0.device", "N0.device",
+                                kind_a="reload", kind_b="device_kernel")
+    assert f > 0.0, f"prefetched reloads did not overlap kernels: {f}"
+
+
 def test_unbudgeted_stream_has_no_spill_instructions():
     """With no budget the memory layer is inert: the instruction stream
     contains no SPILL/RELOAD and allocations only ever grow (the historical

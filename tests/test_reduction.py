@@ -225,7 +225,8 @@ def test_nbody_energy_bit_for_bit(nodes, devs):
     assert "global_reduce" in kinds and "local_reduce" in kinds
     assert "fill_identity" in kinds
     if nodes > 1:
-        assert "gather_receive" in kinds
+        # the partial exchange runs as collective rounds (DESIGN.md §9)
+        assert "coll_recv" in kinds and "coll_send" in kinds
 
 
 # -- end-to-end: wavesim residual norm (acceptance criterion) ----------------

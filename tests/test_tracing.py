@@ -44,9 +44,13 @@ def test_chrome_trace_from_live_runtime(tmp_path):
     tr.to_chrome_trace(out)
     events = json.loads(out.read_text())["traceEvents"]
     cats = {e.get("cat") for e in events if e["ph"] == "X"}
-    # the reduction pipeline is visible in the exported timeline
-    assert {"fill_identity", "local_reduce", "gather_receive",
+    # the reduction pipeline is visible in the exported timeline; the
+    # partial exchange runs as collective rounds (DESIGN.md §9) on their
+    # own per-collective lane
+    assert {"fill_identity", "local_reduce", "coll_send", "coll_recv",
             "global_reduce"} <= cats
+    lanes = {e["args"]["name"] for e in events if e["ph"] == "M"}
+    assert any(".coll." in name for name in lanes), lanes
 
 
 def test_zero_length_spans_get_min_duration(tmp_path):
