@@ -586,6 +586,51 @@ def bench_collective() -> None:
             SCHED_JSON[f"collective_reduction_{nodes}n_{label}_msgs"] = \
                 float(msgs)
 
+    # reduce-scatter + allgather allreduce vs the full-partial slot
+    # allgather (DESIGN.md §9): bytes/messages of a vector reduction
+    def allreduce_app(rt) -> None:
+        X = rt.buffer((n,), init=np.zeros(n), name="X")
+        V = rt.buffer((4096,), init=np.zeros(4096), name="V")
+
+        def k(chunk, xv, red):
+            a = xv.get(chunk)
+            out = np.zeros((a.shape[0], 4096))
+            out[:, chunk.min[0] % 4096] = a
+            red.contribute(out)
+
+        for _ in range(steps):
+            rt.submit("vred", (n,), [read(X, one_to_one()),
+                                     reduction(V, "sum")], k)
+        rt.sync(timeout=300)
+
+    for nodes in (2, 4, 6):
+        results = {}
+        for arx in (False, True):
+            with Runtime(num_nodes=nodes, devices_per_node=1,
+                         reduction_allreduce=arx, host_threads=2) as rt:
+                allreduce_app(rt)          # warmup
+                m0, b0 = rt.comm.red_messages, rt.comm.red_bytes
+                t0 = time.perf_counter()
+                allreduce_app(rt)
+                wall = time.perf_counter() - t0
+                msgs = rt.comm.red_messages - m0
+                nbytes = rt.comm.red_bytes - b0
+            results[arx] = (wall, msgs, nbytes)
+            label = "allreduce" if arx else "fullpartial"
+            emit(f"collective/allreduce/{nodes}n/{label}",
+                 wall / steps * 1e6,
+                 f"red_msgs_per_run={msgs};red_bytes_per_run={nbytes}")
+            SCHED_JSON[f"collective_allreduce_{nodes}n_{label}_us"] = \
+                wall / steps * 1e6
+            SCHED_JSON[f"collective_allreduce_{nodes}n_{label}_msgs"] = \
+                float(msgs)
+            SCHED_JSON[f"collective_allreduce_{nodes}n_{label}_bytes"] = \
+                float(nbytes)
+        ratio = results[True][2] / max(results[False][2], 1)
+        emit(f"collective/allreduce/{nodes}n/summary", 0.0,
+             f"bytes_ratio={ratio:.2f}")
+        SCHED_JSON[f"collective_allreduce_{nodes}n_bytes_ratio"] = ratio
+
 
 # ---------------------------------------------------------------------------
 # distributed reductions (§2.2): node-count x reduction-size scaling

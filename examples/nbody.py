@@ -3,13 +3,16 @@
 The dynamics run exactly like ``quickstart.py``; every few steps two
 adjacent kernels bind scalar reductions — ``reduction(E, "sum")`` (total
 energy) and ``reduction(Mx, "sum")`` (x-momentum).  The runtime
-identity-fills per-device partials, folds them per node, and exchanges the
-node partials between all ranks with a dissemination allgather in
-``ceil(log2 N)`` rounds (DESIGN.md §9); the adjacent ``E``/``Mx``
-reductions **fuse into one packed exchange** (2 exchanges -> 1 per step),
-and ``GLOBAL_REDUCE`` folds the slots in canonical node order — the
-exact-sum accumulator makes both results **bitwise identical** to a
-single-node ``math.fsum`` oracle on any rank/device grid, fused or not.
+identity-fills per-device partials, folds them per node, and runs a
+**reduce-scatter + allgather allreduce** between the ranks (recursive
+halving with fold-on-receive, then a dissemination allgather of the
+folded shards — DESIGN.md §9; 2-node grids keep the byte-equivalent
+full-partial exchange); the adjacent ``E``/``Mx`` reductions
+**fuse into one packed exchange** (2 exchanges -> 1 per step).  The
+exact-sum accumulator is associative and commutative in exact integer
+arithmetic, so both results are **bitwise identical** to a single-node
+``math.fsum`` oracle on any rank/device grid, fused or not, under any
+exchange topology.
 
 The second half demonstrates the budgeted memory layer (DESIGN.md §8):
 three independent simulations share one runtime, phase 0 pausing while the
@@ -140,7 +143,7 @@ def budget_demo(n_sims: int = 3, n_bodies: int = 256, steps: int = 8) -> None:
 
 
 def main() -> None:
-    from repro.core.collective import allgather_schedule, message_count
+    from repro.core.collective import allreduce_message_count
 
     rng = np.random.default_rng(42)
     P0 = rng.normal(size=(N, 3))
@@ -197,8 +200,11 @@ def main() -> None:
             Pg = q.gather(P)
             stats = q.comm_stats()
             assert q.warnings == [], q.warnings
-        per_exchange = message_count(
-            allgather_schedule(tuple(range(nodes)), tuple(range(nodes))))
+        # the reduction exchange is a reduce-scatter + shard allgather
+        # allreduce (DESIGN.md §9); its replicated schedule fixes the
+        # wire-message count per exchange
+        group = tuple(range(nodes))
+        per_exchange = allreduce_message_count(group, group, 1)
         exchanges = (stats["red_messages"] // per_exchange
                      if per_exchange else 0)
         results[(nodes, devs, fusion)] = (float(result[0]), float(mom[0]),

@@ -18,6 +18,16 @@ point message carrying a set of *blocks* (identified by absolute rank).
   ``ceil(log2 P)`` rounds, ``P - 1`` messages total, the root sends only
   ``ceil(log2 P)`` of them.  Scatter messages carry exactly the blocks of
   the receiver's subtree, so payloads halve per hop.
+* **Reduce-scatter** (the first phase of the allreduce, DESIGN.md §9)
+  uses recursive halving: each round a rank folds the incoming slot-range
+  fragment into the half of its accumulator it keeps and sends the other
+  half, so after ``log2 m`` rounds each of the ``m`` active ranks owns one
+  fully folded shard of the slot space.  Non-power-of-two groups use the
+  standard pre-fold: the ``P - m`` excess ranks ship their whole partial
+  to a neighbour and drop out of the halving.  The schedule works in
+  *shard index* space (``m`` shards), so fused reduction members of
+  different sizes share one message structure and map shard ranges to
+  their own slot ranges via :func:`shard_bounds`.
 
 Every round is independently schedulable: a round-``k`` send depends only
 on the previous rounds' receives of the blocks it forwards, so rounds of
@@ -105,6 +115,107 @@ def tree_schedule(group: Sequence[int], root: int, *,
                 msgs.append(CollMsg(rel[r], rel[r + d], blocks))
         rounds.append(msgs)
     return rounds
+
+
+@dataclass(frozen=True)
+class RsMsg:
+    """One reduce-scatter message: ``src`` sends the partial sums of the
+    shard index range ``shards = (lo, hi)`` to ``dst``, which folds them
+    into its own accumulator (fold-on-receive)."""
+
+    src: int
+    dst: int
+    shards: tuple[int, int]
+
+
+def shard_bounds(num_slots: int, num_shards: int) -> list[int]:
+    """Slot-space boundaries of an even partition into ``num_shards``.
+
+    ``bounds[s] = s * num_slots // num_shards``; shard ``s`` covers slots
+    ``[bounds[s], bounds[s+1])``.  Degenerate shards (fewer slots than
+    shards) are empty ranges — their messages are simply skipped, which
+    every rank derives identically from the replicated schedule.
+    """
+    return [s * num_slots // num_shards for s in range(num_shards + 1)]
+
+
+def reduce_scatter_schedule(
+        group: Sequence[int]) -> tuple[list[list[RsMsg]], dict[int, int], int]:
+    """Recursive-halving reduce-scatter over ``group``, in shard space.
+
+    Returns ``(rounds, owner, m)`` where ``m`` is the largest power of two
+    ``<= len(group)``, ``owner`` maps each of the ``m`` *active* ranks to
+    the single shard index it ends up owning fully folded, and ``rounds``
+    is the message schedule:
+
+    * **pre-fold round** (non-power-of-two only): rank ``2i+1`` of the
+      first ``2(P - m)`` ranks sends its whole partial (all ``m`` shards)
+      to rank ``2i`` and drops out of the halving;
+    * **halving rounds**: at distance ``d = m/2, m/4, ..., 1`` active
+      ranks pair up (``i`` with ``i ^ d`` in active-index space); the pair
+      holds an identical shard range, the lower index keeps the lower
+      half and receives+folds it, the upper index keeps the upper half.
+
+    Each active rank sends and receives at most one message per round, so
+    fold-on-receive is a simple per-rank chain.  Total slot traffic is
+    ``~(P-1)/P`` of the slot space per rank versus the full slot space
+    ``P-1`` times over for the full-partial allgather — combined with the
+    shard allgather the allreduce ships ``~2/P`` of the bytes.
+    """
+    ranks = list(group)
+    p = len(ranks)
+    m = 1
+    while m * 2 <= p:
+        m *= 2
+    r = p - m
+    rounds: list[list[RsMsg]] = []
+    if r:
+        rounds.append([RsMsg(src=ranks[2 * i + 1], dst=ranks[2 * i],
+                             shards=(0, m)) for i in range(r)])
+    active = [ranks[2 * i] for i in range(r)] + ranks[2 * r:]
+    span: list[tuple[int, int]] = [(0, m)] * m
+    d = m // 2
+    while d >= 1:
+        msgs: list[RsMsg] = []
+        for i in range(m):
+            j = i ^ d
+            if j < i:
+                continue
+            lo, hi = span[i]                  # == span[j] by construction
+            mid = (lo + hi) // 2
+            # i (bit clear) keeps the lower half, j the upper half
+            msgs.append(RsMsg(active[i], active[j], (mid, hi)))
+            msgs.append(RsMsg(active[j], active[i], (lo, mid)))
+            span[i] = (lo, mid)
+            span[j] = (mid, hi)
+        rounds.append(msgs)
+        d //= 2
+    owner = {active[i]: span[i][0] for i in range(m)}
+    return rounds, owner, m
+
+
+def allreduce_message_count(participants: Sequence[int],
+                            group: Sequence[int], num_slots: int) -> int:
+    """Wire messages of one reduction exchange under the default policy
+    (used by tests/examples as the oracle): the reduce-scatter + shard
+    allgather at >= 3 nodes, the full-partial slot allgather below (where
+    the decomposition cannot reduce bytes — see CommandGraphGenerator).
+
+    ``num_slots`` models ONE member size; for fused groups it is exact
+    only when every member has that size (a message is skipped only when
+    EVERY member's slot range is empty, so mixed-size groups ship the
+    union of the per-member message sets and this count is a floor).
+    """
+    if len(group) < 3:
+        return message_count(allgather_schedule(group, participants))
+    rs_rounds, owner, m = reduce_scatter_schedule(participants)
+    bounds = shard_bounds(num_slots, m)
+    n = sum(1 for msgs in rs_rounds for msg in msgs
+            if bounds[msg.shards[0]] < bounds[msg.shards[1]])
+    contributors = tuple(sorted(a for a, s in owner.items()
+                                if bounds[s] < bounds[s + 1]))
+    n += message_count(allgather_schedule(group, contributors))
+    return n
 
 
 def schedule_for(kind: str, group: Sequence[int], *,

@@ -41,6 +41,13 @@ class CommandType(enum.Enum):
     COLL_ALLGATHER = "coll_allgather"
     COLL_BROADCAST = "coll_broadcast"
     COLL_SCATTER = "coll_scatter"
+    # reduce-scatter + allgather allreduce (DESIGN.md §9): the reduction
+    # exchange of a fusion group whose members all have an order-free
+    # combine.  Carries the same member metadata as the fused allgather;
+    # the IDAG derives the two-phase schedule from the replicated
+    # participant set.  The slot-allgather exchange stays available as the
+    # fallback/oracle path (``allreduce=False``).
+    COLL_ALLREDUCE = "coll_allreduce"
     HORIZON = "horizon"
     EPOCH = "epoch"
 
@@ -71,6 +78,9 @@ class Command:
     coll_members: tuple = ()
     # REDUCE_PARTIAL/REDUCE_GLOBAL lowered in collective (staging-slot) mode
     collective: bool = False
+    # reduction exchange lowered as reduce-scatter + allgather (flat
+    # slot-space staging) instead of the full-partial slot allgather
+    allreduce: bool = False
     cid: int = field(default_factory=lambda: next(_cmd_ids))
     dependencies: list[tuple["Command", DepKind]] = field(default_factory=list)
     dependents: list["Command"] = field(default_factory=list)
@@ -102,13 +112,21 @@ class CommandGraphGenerator:
     """Generates per-node command graphs from a TDAG stream."""
 
     def __init__(self, num_nodes: int, *, retire_for: Optional[int] = None,
-                 collectives: bool = False):
+                 collectives: bool = False, allreduce: bool = True):
         self.num_nodes = num_nodes
         # ``collectives=True`` turns all-pairs exchange patterns into COLL_*
         # commands and reduction exchanges into (fusable) allgathers; the
         # point-to-point path remains for irregular exchanges and is the
         # default for structural/back-compat consumers (``generate_cdag``).
         self.collectives = collectives
+        # ``allreduce=True`` (with collectives): reduction exchanges whose
+        # members all have an order-free combine lower as reduce-scatter +
+        # allgather (~2/N of the full-partial bytes); ``False`` keeps the
+        # slot-allgather exchange everywhere (the fallback/oracle path).
+        # Below 3 nodes the decomposition cannot reduce bytes (every slot
+        # crosses the wire once per direction regardless) and only doubles
+        # the message count, so the fallback stays in charge there.
+        self.allreduce = allreduce and collectives and num_nodes >= 3
         # open fused-reduction group: reduction exchanges are deferred until
         # the fusion chain breaks (next non-fusable task, horizon or epoch),
         # then emitted as ONE packed allgather + per-member REDUCE_GLOBALs
@@ -249,6 +267,23 @@ class CommandGraphGenerator:
                 owners = owner if isinstance(owner, frozenset) else frozenset([owner])
                 own.update(sub, owners | {n})
 
+    def _fetch_missing_grouped(self, task: Task, buf: VirtualBuffer,
+                               needs: dict[int, Region],
+                               consumers: dict[int, Command],
+                               new_cmds: list[Command]) -> None:
+        """Coherence pre-fetch for several consumers of the same buffer —
+        as ONE broadcast when a single owner serves every participant
+        (the ``include_current_value`` shape; ROADMAP "collectivize
+        include_current"), point-to-point pushes otherwise."""
+        if self.collectives:
+            coll = self._classify_exchange(buf, needs)
+            if coll is not None and coll["kind"] == "broadcast":
+                self._emit_collective(task, buf, coll, needs, consumers,
+                                      new_cmds)
+                return
+        for n, need in needs.items():
+            self._fetch_missing(n, buf, need, task, consumers[n], new_cmds)
+
     # ------------------------------------------------------------------
     def _process_kernel(self, task: Task) -> list[Command]:
         chunks = split_box(task.index_space, self.num_nodes,
@@ -265,7 +300,12 @@ class CommandGraphGenerator:
         if self._open_red is not None:
             fusable = (task.reductions and task.fuse_with_prev
                        and tuple(sorted(node_chunks))
-                       == self._open_red["participants"])
+                       == self._open_red["participants"]
+                       # the exchange mode (allreduce vs slot allgather) is
+                       # per group: an order-free task never shares a packed
+                       # exchange with a canonical-order one
+                       and self._order_free(task)
+                       == self._open_red["order_free"])
             if not fusable:
                 new_cmds.extend(self._flush_reductions())
 
@@ -502,6 +542,12 @@ class CommandGraphGenerator:
                 own.update(sub, owners | receivers)
 
     # -- fused reduction exchange (DESIGN.md §9) --------------------------
+    @staticmethod
+    def _order_free(task: Task) -> bool:
+        """Whether ALL of a task's reductions have an order-free combine
+        (the reduce-scatter fold tree is not the canonical node order)."""
+        return all(r.op.combine_order_free for r in task.reductions)
+
     def _queue_reductions(self, task: Task, node_chunks: dict[int, Box],
                           exec_cmds: dict[int, Command],
                           new_cmds: list[Command]) -> None:
@@ -510,7 +556,9 @@ class CommandGraphGenerator:
         breaks).  All reductions of one task always share the exchange."""
         participants = tuple(sorted(node_chunks))
         if self._open_red is None:
-            self._open_red = dict(participants=participants, members=[])
+            self._open_red = dict(participants=participants, members=[],
+                                  order_free=self._order_free(task))
+        arx = self.allreduce and self._open_red["order_free"]
         for red in task.reductions:
             buf = red.buffer
             self._ownership_map(buf)               # register buffer
@@ -522,7 +570,7 @@ class CommandGraphGenerator:
                              region=buf.full_region, transfer_id=rtid,
                              participants=participants,
                              coll_group=tuple(range(self.num_nodes)),
-                             collective=True)
+                             collective=True, allreduce=arx)
                 pc.add_dependency(exec_cmds[n], DepKind.TRUE)
                 self._add(n, pc)
                 new_cmds.append(pc)
@@ -540,18 +588,22 @@ class CommandGraphGenerator:
         out: list[Command] = []
         members = group["members"]
         participants = group["participants"]
+        arx = self.allreduce and group["order_free"]
         allnodes = tuple(range(self.num_nodes))
         first = members[0]
         base_tid = (first["task"].tid, first["red"].buffer.bid, 3)
         coll_members = tuple((m["rtid"], m["red"]) for m in members)
         ag_cmds: dict[int, Command] = {}
         if self.num_nodes > 1:
+            xtype = (CommandType.COLL_ALLREDUCE if arx
+                     else CommandType.COLL_ALLGATHER)
             for n in allnodes:
-                ag = Command(CommandType.COLL_ALLGATHER, node=n,
+                ag = Command(xtype, node=n,
                              task=first["task"], buffer=first["red"].buffer,
                              reduction=first["red"], transfer_id=base_tid,
                              participants=participants, coll_group=allnodes,
-                             coll_members=coll_members, collective=True)
+                             coll_members=coll_members, collective=True,
+                             allreduce=arx)
                 for m in members:
                     pc = m["partials"].get(n)
                     if pc is not None:
@@ -571,12 +623,13 @@ class CommandGraphGenerator:
                 n: Command(CommandType.REDUCE_GLOBAL, node=n, task=task,
                            buffer=buf, reduction=red, region=full,
                            transfer_id=rtid, participants=participants,
-                           coll_group=allnodes, collective=True)
+                           coll_group=allnodes, collective=True,
+                           allreduce=arx)
                 for n in allnodes}
             if red.include_current_value:
-                for n in allnodes:
-                    self._fetch_missing(n, buf, full, task, global_cmds[n],
-                                        out)
+                self._fetch_missing_grouped(task, buf,
+                                            {n: full for n in allnodes},
+                                            global_cmds, out)
             for n in allnodes:
                 gc = global_cmds[n]
                 nst = self._node_buf(n, buf)
@@ -676,8 +729,10 @@ class CommandGraphGenerator:
 
 
 def generate_cdag(tdag: TaskGraph, num_nodes: int, *,
-                  collectives: bool = False) -> CommandGraphGenerator:
-    gen = CommandGraphGenerator(num_nodes, collectives=collectives)
+                  collectives: bool = False,
+                  allreduce: bool = True) -> CommandGraphGenerator:
+    gen = CommandGraphGenerator(num_nodes, collectives=collectives,
+                                allreduce=allreduce)
     for task in tdag.tasks:
         if task.name == "init" and task.ttype == TaskType.EPOCH:
             continue

@@ -65,6 +65,7 @@ class Communicator:
         self.coll_messages = 0
         self.coll_bytes = 0
         self.red_messages = 0
+        self.red_bytes = 0
 
     def add_listener(self, node: int, event: threading.Event) -> None:
         """Register an event set whenever traffic arrives for ``node``.
@@ -97,6 +98,7 @@ class Communicator:
                 tid = payload.transfer_id
                 if len(tid) == 4 and tid[2] == 3:
                     self.red_messages += 1
+                    self.red_bytes += payload.nbytes()
             self._cv.notify_all()
             self._notify(target)
 
@@ -207,6 +209,18 @@ class ReceiveArbiter:
     def _land_coll(self, pc: _PendingColl, payload: Payload) -> None:
         """Land every fragment of one packed collective round message."""
         instr = pc.instr
+        if instr.coll_land:
+            # allreduce slot-range fragments: the landing map names the
+            # target allocation and flat range per expected key
+            lmap = {f.key: f for f in instr.coll_land}
+            for key, data in payload.fragments:
+                f = lmap.get(key)
+                if f is None:
+                    continue
+                lo, hi = f.srange
+                self.store[f.alloc.aid][lo:hi] = data
+                pc.remaining.discard(key)
+            return
         for key, data in payload.fragments:
             if isinstance(key, Box):    # buffer-space region fragment
                 alloc = instr.coll_allocs[0]

@@ -490,6 +490,9 @@ class Executor:
                 sl = tuple(slice(a - o, b - o) for a, b, o in
                            zip(f.box.min, f.box.max, f.alloc.box.min))
                 frags.append((f.key, arr[sl].copy()))
+            elif f.srange is not None:       # allreduce slot-range fragment
+                lo, hi = f.srange
+                frags.append((f.key, arr[lo:hi].copy()))
             else:
                 frags.append((f.key, arr[f.slot].copy()))
         self.comm.isend(instr.dest, Payload(
@@ -510,6 +513,16 @@ class Executor:
         """
         red = instr.reduction
         op = red.op
+        if instr.slot_range is not None:
+            # allreduce fold-on-receive: fold the landed slot-range
+            # fragment into the flat accumulator in place (the combine is
+            # order-free, so the halving tree never changes a bit)
+            lo, hi = instr.slot_range
+            dst = self._arr(instr.dst_alloc)
+            src = self._arr(instr.reduce_srcs[0])
+            dst[lo:hi] = op.combine(dst[lo:hi], src) if instr.accumulate \
+                else src
+            return
         acc = None
         for src in instr.reduce_srcs:
             arr = self._arr(src)
@@ -519,7 +532,10 @@ class Executor:
         if instr.dst_slot is not None:   # collective mode: own staging slot
             self._arr(instr.dst_alloc)[instr.dst_slot] = acc
         else:
-            self._arr(instr.dst_alloc)[...] = acc
+            # destination may be the buffer-shaped node partial or the
+            # allreduce-mode flat slot-space accumulator
+            darr = self._arr(instr.dst_alloc)
+            darr[...] = acc.reshape(darr.shape)
 
     def _exec_global_reduce(self, instr: Instruction) -> None:
         """Fold all rank partials in canonical node order into the buffer.
@@ -534,17 +550,22 @@ class Executor:
         op, buf = red.op, red.buffer
         gather_arr = (self._arr(instr.src_alloc)
                       if instr.src_alloc is not None else None)
-        own = (self._arr(instr.reduce_srcs[0])
-               if instr.reduce_srcs else None)
-        acc = None
-        for s in instr.participants:
-            if instr.slot_all:          # collective mode: own slot included
-                part = gather_arr[s]
-            else:
-                part = own if s == self.node else gather_arr[s]
-            acc = part.copy() if acc is None else op.combine(acc, part)
-        if acc is None:                      # no participants: identity
-            acc = op.identity_acc(buf.shape, buf.dtype)
+        if instr.prefolded:
+            # allreduce mode: the flat accumulator already holds the fully
+            # folded value for every slot — lift/finalize only
+            acc = gather_arr.reshape(buf.shape)
+        else:
+            own = (self._arr(instr.reduce_srcs[0])
+                   if instr.reduce_srcs else None)
+            acc = None
+            for s in instr.participants:
+                if instr.slot_all:      # collective mode: own slot included
+                    part = gather_arr[s]
+                else:
+                    part = own if s == self.node else gather_arr[s]
+                acc = part.copy() if acc is None else op.combine(acc, part)
+            if acc is None:                  # no participants: identity
+                acc = op.identity_acc(buf.shape, buf.dtype)
         dst = instr.dst_alloc
         darr = self._arr(dst)
         box = buf.full_box

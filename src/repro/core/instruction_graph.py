@@ -33,7 +33,8 @@ from typing import Optional
 from .allocation import (PINNED_HOST, USER_HOST, device_memory,  # noqa: F401
                          is_device_memory, queue_for_mem)
 from .buffer import VirtualBuffer
-from .collective import schedule_for
+from .collective import (allgather_schedule, reduce_scatter_schedule,
+                         schedule_for, shard_bounds)
 from .command_graph import Command, CommandType
 from .instructions import (AccessorBinding, CollFragment,  # noqa: F401
                            Instruction, InstructionType, Pilot,
@@ -164,6 +165,8 @@ class IdagGenerator:
                 self._compile_reduce_partial(cmd)
             elif cmd.ctype == CommandType.REDUCE_GLOBAL:
                 self._compile_reduce_global(cmd)
+            elif cmd.ctype == CommandType.COLL_ALLREDUCE:
+                self._compile_allreduce(cmd)
             elif cmd.ctype in (CommandType.COLL_ALLGATHER,
                                CommandType.COLL_BROADCAST,
                                CommandType.COLL_SCATTER):
@@ -215,7 +218,8 @@ class IdagGenerator:
             add(cmd.buffer.bid, PINNED_HOST, cmd.buffer.full_box)
         elif cmd.ctype in (CommandType.COLL_ALLGATHER,
                            CommandType.COLL_BROADCAST,
-                           CommandType.COLL_SCATTER):
+                           CommandType.COLL_SCATTER,
+                           CommandType.COLL_ALLREDUCE):
             # region collectives stage through the buffer's pinned-host
             # backing; reduction exchanges use unhinted one-shot staging
             if cmd.reduction is None and cmd.region is not None \
@@ -456,6 +460,22 @@ class IdagGenerator:
                 f"alloc red-staging {buf.name}")
         return cst
 
+    def _red_staging_flat(self, rtid: tuple, red) -> dict:
+        """Allreduce-mode staging: ONE flat accumulator over the member's
+        slot space (flattened buffer elements).  LOCAL_REDUCE writes the
+        whole node partial into it; reduce-scatter rounds fold incoming
+        slot-range fragments in place; allgather rounds land the final
+        folded shards of the other owners (DESIGN.md §9)."""
+        cst = self._coll_red.setdefault(rtid, {})
+        if "staging" not in cst:
+            buf = red.buffer
+            cst["staging"] = self.mem.scratch(
+                PINNED_HOST, Box((0,), (buf.full_box.volume(),)),
+                red.op.acc_dtype(buf.dtype), f"alloc red-acc {buf.name}")
+            cst["mode"] = "allreduce"
+            cst["tail"] = None          # fold chain: LOCAL_REDUCE, rs folds
+        return cst
+
     def _compile_reduce_partial(self, cmd: Command) -> None:
         """Fold device partials into one node partial, broadcast it (§2.2).
 
@@ -468,14 +488,24 @@ class IdagGenerator:
             red, buf = cmd.reduction, cmd.buffer
             st = self._red_state[cmd.transfer_id]
             device_parts = st["device"]
-            cst = self._red_staging(cmd.transfer_id, red,
-                                    max(cmd.coll_group) + 1)
-            staging = cst["staging"]
+            if cmd.allreduce:
+                # flat slot-space accumulator: the whole node partial lands
+                # in it, reduce-scatter folds happen in place
+                cst = self._red_staging_flat(cmd.transfer_id, red)
+                staging = cst["staging"]
+                dst_slot = None
+                tag = "->acc"
+            else:
+                cst = self._red_staging(cmd.transfer_id, red,
+                                        max(cmd.coll_group) + 1)
+                staging = cst["staging"]
+                dst_slot = self.node
+                tag = f"->slot{self.node}"
             lr = Instruction(
                 InstructionType.LOCAL_REDUCE, node=self.node, queue=("host",),
                 reduction=red, reduce_srcs=tuple(a for a, _ in device_parts),
-                dst_alloc=staging, dst_slot=self.node, command=cmd,
-                name=f"local-reduce {buf.name} ({red.op.name}) ->slot{self.node}")
+                dst_alloc=staging, dst_slot=dst_slot, command=cmd,
+                name=f"local-reduce {buf.name} ({red.op.name}) {tag}")
             lr.add_dependency(staging.alloc_instr, DepKind.TRUE)
             for alloc, producer in device_parts:
                 lr.add_dependency(producer, DepKind.TRUE)
@@ -483,6 +513,8 @@ class IdagGenerator:
                     lr.add_dependency(alloc.alloc_instr, DepKind.TRUE)
             self._emit(lr)
             cst["local"] = lr
+            if cmd.allreduce:
+                cst["tail"] = lr
             for alloc, _ in device_parts:
                 self.mem.free_scratch(alloc, [lr])
             return
@@ -604,6 +636,192 @@ class IdagGenerator:
         for rtid, _ in members:
             self._coll_red[rtid]["shared"] = shared
 
+    def _compile_allreduce(self, cmd: Command) -> None:
+        """Lower the (fused) reduction exchange as reduce-scatter + shard
+        allgather (DESIGN.md §9) — ~2/N of the full-partial bytes.
+
+        Phase 1 (recursive halving over the participants): each message
+        ships, per fused member, the partial sums of one *slot range* out
+        of the flat accumulator; the receiver lands them in a one-shot
+        scratch and a LOCAL_REDUCE folds them into the half it keeps
+        (fold-on-receive) — communication and fold work interleave inside
+        the schedule.  Phase 2 (dissemination allgather over ALL nodes):
+        the final folded shards travel as overwrite fragments, landing
+        straight into every rank's accumulator.  Both phases share the
+        round-tagged transfer-id space of the exchange (allgather rounds
+        are offset by the reduce-scatter round count), so rounds remain
+        independently schedulable and interleave with other collectives.
+        """
+        members = cmd.coll_members                 # ((rtid, Reduction), ...)
+        group = cmd.coll_group                     # all nodes
+        rs_rounds, owner, m = reduce_scatter_schedule(cmd.participants)
+        # per fused member: staging accumulator + slot-space shard bounds
+        info = []
+        for rtid, red in members:
+            cst = self._red_staging_flat(rtid, red)
+            bounds = shard_bounds(cst["staging"].box.shape[0], m)
+            info.append((cst, cst["staging"], red, bounds))
+        lane = f"N{self.node}.coll.t{cmd.transfer_id[0]}b{cmd.transfer_id[1]}"
+        all_sends: list[Instruction] = []
+        ag_recvs: list[Instruction] = []
+
+        def sync_dep(instr: Instruction) -> None:
+            if self._last_horizon is not None:
+                instr.add_dependency(self._last_horizon, DepKind.SYNC)
+
+        # -- phase 1: reduce-scatter (fold-on-receive) --------------------
+        for k, msgs in enumerate(rs_rounds):
+            rtid_k = cmd.transfer_id + (k,)
+            for msg in msgs:
+                s_lo, s_hi = msg.shards
+                spans = [(mi, b[s_lo], b[s_hi])
+                         for mi, (_, _, _, b) in enumerate(info)
+                         if b[s_lo] < b[s_hi]]
+                if not spans:
+                    continue               # every member's range is empty
+                if msg.dst == self.node:
+                    scr = {}
+                    for mi, lo, hi in spans:
+                        cst, _, red, _ = info[mi]
+                        scr[mi] = self.mem.scratch(
+                            PINNED_HOST, Box((0,), (hi - lo,)),
+                            red.op.acc_dtype(red.buffer.dtype),
+                            f"alloc rs-recv {red.buffer.name} r{k}")
+                    land = tuple(CollFragment(key=(mi, lo, hi),
+                                              alloc=scr[mi],
+                                              srange=(0, hi - lo))
+                                 for mi, lo, hi in spans)
+                    rc = Instruction(
+                        InstructionType.COLL_RECV, node=self.node,
+                        queue=("comm",), transfer_id=rtid_k,
+                        coll_source=msg.src,
+                        coll_allocs=tuple(scr[mi] for mi, _, _ in spans),
+                        coll_expect=tuple(f.key for f in land),
+                        coll_land=land, command=cmd, trace_lane=lane,
+                        name=f"rs-recv r{k} {cmd.buffer.name} <-N{msg.src}")
+                    for a in rc.coll_allocs:
+                        rc.add_dependency(a.alloc_instr, DepKind.TRUE)
+                    sync_dep(rc)
+                    self._emit(rc)
+                    for mi, lo, hi in spans:
+                        cst, staging, red, _ = info[mi]
+                        fold = Instruction(
+                            InstructionType.LOCAL_REDUCE, node=self.node,
+                            queue=("host",), reduction=red,
+                            reduce_srcs=(scr[mi],), dst_alloc=staging,
+                            slot_range=(lo, hi), accumulate=True,
+                            command=cmd, trace_lane=lane,
+                            name=(f"fold r{k} {red.buffer.name} "
+                                  f"[{lo}:{hi})"))
+                        fold.add_dependency(rc, DepKind.TRUE)
+                        fold.add_dependency(staging.alloc_instr, DepKind.TRUE)
+                        fold.add_dependency(scr[mi].alloc_instr, DepKind.TRUE)
+                        if cst["tail"] is not None:
+                            fold.add_dependency(cst["tail"], DepKind.TRUE)
+                        self._emit(fold)
+                        cst["tail"] = fold
+                        self.mem.free_scratch(scr[mi], [fold])
+                if msg.src == self.node:
+                    frags = tuple(CollFragment(key=(mi, lo, hi),
+                                               alloc=info[mi][1],
+                                               srange=(lo, hi))
+                                  for mi, lo, hi in spans)
+                    msg_id = next(self._msg_ids)
+                    sd = Instruction(
+                        InstructionType.COLL_SEND, node=self.node,
+                        queue=("comm",), dest=msg.dst, msg_id=msg_id,
+                        transfer_id=rtid_k, coll_frags=frags, command=cmd,
+                        trace_lane=lane,
+                        name=f"rs-send r{k} {cmd.buffer.name} ->N{msg.dst}")
+                    for mi, lo, hi in spans:
+                        cst, staging, _, _ = info[mi]
+                        sd.add_dependency(staging.alloc_instr, DepKind.TRUE)
+                        if cst["tail"] is not None:
+                            sd.add_dependency(cst["tail"], DepKind.TRUE)
+                    sync_dep(sd)
+                    self._emit(sd)
+                    all_sends.append(sd)
+                    self.pilots.append(Pilot(
+                        source=self.node, target=msg.dst, transfer_id=rtid_k,
+                        box=cmd.buffer.full_box, msg_id=msg_id, gather=True))
+
+        # -- phase 2: allgather of the folded shards ----------------------
+        # a rank contributes iff its shard is non-empty for ANY member;
+        # per-member empty fragments are skipped inside each message
+        contributors = tuple(sorted(
+            r for r, s in owner.items()
+            if any(b[s] < b[s + 1] for _, _, _, b in info)))
+        ag_rounds = allgather_schedule(group, contributors)
+        off = len(rs_rounds)
+        shard_src: dict[int, Instruction] = {}     # owner rank -> landing rc
+
+        def shard_frags(blocks):
+            """Per-member fragments of the given owners' shards — the SAME
+            construction on both sides of a message, so sender keys and
+            receiver expected keys never diverge."""
+            return tuple(
+                CollFragment(key=(mi, b), alloc=staging,
+                             srange=(bounds[owner[b]], bounds[owner[b] + 1]))
+                for b in blocks
+                for mi, (_, staging, _, bounds) in enumerate(info)
+                if bounds[owner[b]] < bounds[owner[b] + 1])
+
+        for k, msgs in enumerate(ag_rounds):
+            rtid_k = cmd.transfer_id + (off + k,)
+            for msg in msgs:
+                if msg.dst == self.node:
+                    land = shard_frags(msg.blocks)
+                    rc = Instruction(
+                        InstructionType.COLL_RECV, node=self.node,
+                        queue=("comm",), transfer_id=rtid_k,
+                        coll_source=msg.src,
+                        coll_allocs=tuple(st for _, st, _, _ in info),
+                        coll_expect=tuple(f.key for f in land),
+                        coll_land=tuple(land), command=cmd, trace_lane=lane,
+                        name=f"ag-recv r{k} {cmd.buffer.name} <-N{msg.src}")
+                    for _, staging, _, _ in info:
+                        rc.add_dependency(staging.alloc_instr, DepKind.TRUE)
+                    # landing overwrites partially folded ranges: after the
+                    # fold chain and every reduce-scatter send that read them
+                    for cst, _, _, _ in info:
+                        if cst["tail"] is not None:
+                            rc.add_dependency(cst["tail"], DepKind.ANTI)
+                    for sd in all_sends:
+                        rc.add_dependency(sd, DepKind.ANTI)
+                    sync_dep(rc)
+                    self._emit(rc)
+                    ag_recvs.append(rc)
+                    for b in msg.blocks:
+                        shard_src[b] = rc
+                if msg.src == self.node:
+                    msg_id = next(self._msg_ids)
+                    sd = Instruction(
+                        InstructionType.COLL_SEND, node=self.node,
+                        queue=("comm",), dest=msg.dst, msg_id=msg_id,
+                        transfer_id=rtid_k, coll_frags=shard_frags(msg.blocks),
+                        command=cmd, trace_lane=lane,
+                        name=f"ag-send r{k} {cmd.buffer.name} ->N{msg.dst}")
+                    for cst, staging, _, _ in info:
+                        sd.add_dependency(staging.alloc_instr, DepKind.TRUE)
+                    for b in msg.blocks:
+                        rc = shard_src.get(b)
+                        if rc is not None:
+                            sd.add_dependency(rc, DepKind.TRUE)
+                        else:          # own fully folded shard
+                            for cst, _, _, _ in info:
+                                if cst["tail"] is not None:
+                                    sd.add_dependency(cst["tail"],
+                                                      DepKind.TRUE)
+                    sync_dep(sd)
+                    self._emit(sd)
+                    all_sends.append(sd)
+                    self.pilots.append(Pilot(
+                        source=self.node, target=msg.dst, transfer_id=rtid_k,
+                        box=cmd.buffer.full_box, msg_id=msg_id, gather=True))
+        shared = dict(recvs=ag_recvs, sends=all_sends)
+        for rtid, _ in members:
+            self._coll_red[rtid]["shared"] = shared
+
     def _compile_reduce_global(self, cmd: Command) -> None:
         """Gather peer partials and fold them in canonical node order."""
         if cmd.collective:
@@ -689,6 +907,7 @@ class IdagGenerator:
         cst = self._coll_red.pop(cmd.transfer_id)
         staging = cst["staging"]
         shared = cst.get("shared", {})
+        allreduce = cst.get("mode") == "allreduce"
         dst = self.mem.ensure(buf, PINNED_HOST, buf.full_box)
         full = buf.full_region
         if red.include_current_value:
@@ -696,14 +915,15 @@ class IdagGenerator:
         ms = self.mem.state(buf.bid, PINNED_HOST)
         gi = Instruction(
             InstructionType.GLOBAL_REDUCE, node=self.node, queue=("host",),
-            reduction=red, src_alloc=staging, dst_alloc=dst, slot_all=True,
+            reduction=red, src_alloc=staging, dst_alloc=dst,
+            slot_all=not allreduce, prefolded=allreduce,
             participants=cmd.participants,
             include_current=red.include_current_value, command=cmd,
             name=f"global-reduce {buf.name} ({red.op.name})")
         gi.add_dependency(staging.alloc_instr, DepKind.TRUE)
         if dst.alloc_instr is not None:
             gi.add_dependency(dst.alloc_instr, DepKind.TRUE)
-        lr = cst.get("local")
+        lr = cst.get("tail") if allreduce else cst.get("local")
         if lr is not None:
             gi.add_dependency(lr, DepKind.TRUE)
         for rc in shared.get("recvs", ()):

@@ -80,15 +80,19 @@ class CollFragment:
 
     ``key`` is the matching token the receiver expects: ``(member, slot)``
     for reduction-partial slots (member index within a fused group, slot =
-    contributor rank) or a buffer-space :class:`Box` for region collectives.
-    ``alloc`` is the allocation the sender reads from (slot index or box
-    addressing, depending on the key form).
+    contributor rank), ``(member, lo, hi)`` for allreduce slot-range
+    fragments, or a buffer-space :class:`Box` for region collectives.
+    ``alloc`` is the allocation the sender reads from — or, on a
+    ``COLL_RECV``'s ``coll_land`` list, the allocation the fragment lands
+    into — addressed by slot index, slot range or box depending on which
+    field is set.
     """
 
     key: object
     alloc: Allocation
     slot: Optional[int] = None          # reduction slot within ``alloc``
     box: Optional[Box] = None           # buffer-space box within ``alloc``
+    srange: Optional[tuple] = None      # flat slot range [lo, hi) in alloc
 
 
 @dataclass
@@ -149,9 +153,20 @@ class Instruction:
     # ``coll_source`` and lands them into ``coll_allocs``.
     dst_slot: Optional[int] = None
     slot_all: bool = False
+    # allreduce mode (DESIGN.md §9): LOCAL_REDUCE with ``slot_range`` and
+    # ``accumulate`` folds ``reduce_srcs[0]`` INTO ``dst_alloc[lo:hi]``
+    # (fold-on-receive of one reduce-scatter fragment); GLOBAL_REDUCE with
+    # ``prefolded`` takes ``src_alloc`` as the already fully folded flat
+    # accumulator and only lifts/finalizes.  A COLL_RECV with ``coll_land``
+    # lands each expected fragment at the slot range of its entry instead
+    # of the (member, slot) addressing.
+    slot_range: Optional[tuple] = None
+    accumulate: bool = False
+    prefolded: bool = False
     coll_frags: tuple[CollFragment, ...] = ()
     coll_allocs: tuple[Allocation, ...] = ()
     coll_expect: tuple = ()
+    coll_land: tuple[CollFragment, ...] = ()
     coll_source: Optional[int] = None
     # optional tracer lane override (per-collective Perfetto tracks) — does
     # not affect executor routing, which keys on ``queue``

@@ -135,6 +135,10 @@ class MemoryManager:
         # FREEs emitted per budgeted memory since the last sync — every new
         # ALLOC in that memory anti-depends on them (runtime ordering)
         self._free_anchor: dict[int, list[Instruction]] = {}
+        # over-budget warning dedup per memory id (the node is fixed per
+        # manager): warning-list index + repeat count, so long over-budget
+        # runs keep ``Runtime.warnings`` bounded like everything else
+        self._over_budget_warned: dict[int, tuple[int, int]] = {}
         # pin scope: allocations touched while compiling the current command
         self._pins: set[int] = set()
         self._pin_depth = 0
@@ -439,10 +443,22 @@ class MemoryManager:
             victim = self._pick_victim(mid, protect)
             if victim is None:
                 self.stats.over_budget += 1
-                self.host.warnings.append(
-                    f"memory M{mid} over budget on N{self.host.node}: "
-                    f"{self.used.get(mid, 0)} bytes live + {need} requested "
-                    f"> budget {budget}, nothing evictable")
+                msg = (f"memory M{mid} over budget on N{self.host.node}: "
+                       f"{self.used.get(mid, 0)} bytes live + {need} "
+                       f"requested > budget {budget}, nothing evictable")
+                prev = self._over_budget_warned.get(mid)
+                if prev is None:
+                    # first occurrence for this (memory, node): new entry
+                    self.host.warnings.append(msg)
+                    self._over_budget_warned[mid] = \
+                        (len(self.host.warnings) - 1, 1)
+                else:
+                    # repeat: update the entry in place with the latest
+                    # numbers and a counter instead of growing the list
+                    idx, count = prev
+                    self.host.warnings[idx] = \
+                        f"{msg} (repeated {count + 1} times)"
+                    self._over_budget_warned[mid] = (idx, count + 1)
                 return
             self._spill(victim)
             self.stats.evictions += 1

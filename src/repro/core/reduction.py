@@ -178,11 +178,20 @@ class ReductionOp:
     """
 
     def __init__(self, name: str, *, exact_sum: bool,
-                 fold: Optional[Callable] = None, identity=None):
+                 fold: Optional[Callable] = None, identity=None,
+                 order_free: bool = False):
         self.name = name
         self.exact_sum = exact_sum
         self._fold = fold                    # binary elementwise fold
         self._identity = identity
+        # ``combine`` is associative, commutative AND exact: any combine
+        # tree yields bitwise identical results.  True for the exact-sum
+        # superaccumulator (integer addition) and max/min (elementwise
+        # selection); False for float prod and custom callables, whose
+        # results depend on the canonical fold order.  Gates the
+        # reduce-scatter allreduce (DESIGN.md §9), whose recursive-halving
+        # fold tree is not the canonical node order.
+        self.combine_order_free = exact_sum or order_free
 
     # -- accumulator lifecycle -------------------------------------------
     def acc_dtype(self, buf_dtype: np.dtype) -> np.dtype:
@@ -289,10 +298,10 @@ def _make_op(op: Union[str, Callable], identity) -> ReductionOp:
         return ReductionOp("sum", exact_sum=True)
     if op == "max":
         return ReductionOp("max", exact_sum=False, fold=np.maximum,
-                           identity=identity)
+                           identity=identity, order_free=True)
     if op == "min":
         return ReductionOp("min", exact_sum=False, fold=np.minimum,
-                           identity=identity)
+                           identity=identity, order_free=True)
     if op == "prod":
         return ReductionOp("prod", exact_sum=False, fold=np.multiply,
                            identity=identity)

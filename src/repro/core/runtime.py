@@ -46,7 +46,8 @@ class _NodeScheduler:
         self.node = node
         self.rt = rt
         self.cdag = CommandGraphGenerator(rt.num_nodes, retire_for=node,
-                                          collectives=rt.collectives)
+                                          collectives=rt.collectives,
+                                          allreduce=rt.reduction_allreduce)
         budgets: dict[int, int] = dict(rt.memory_budgets or {})
         if rt.device_memory_budget is not None:
             for d in range(rt.devices_per_node):
@@ -152,7 +153,8 @@ class Runtime:
                  host_threads: int = 4, max_horizon_lag: int = 8,
                  device_memory_budget: Optional[int] = None,
                  memory_budgets: Optional[dict[int, int]] = None,
-                 collectives: bool = True, reduction_fusion: bool = True):
+                 collectives: bool = True, reduction_fusion: bool = True,
+                 reduction_allreduce: bool = True):
         self.num_nodes = num_nodes
         self.devices_per_node = devices_per_node
         self.lookahead = lookahead
@@ -162,6 +164,11 @@ class Runtime:
         # fusion of adjacent reduction exchanges
         self.collectives = collectives
         self.reduction_fusion = reduction_fusion and collectives
+        # reduce-scatter + allgather allreduce for order-free reduction
+        # exchanges (DESIGN.md §9): ~2/N of the full-partial bytes.
+        # ``False`` retains the slot-allgather exchange everywhere — the
+        # fallback/oracle path the allreduce must match bit for bit.
+        self.reduction_allreduce = reduction_allreduce and collectives
         # per-device-memory byte budget (None = unbudgeted, the historical
         # behavior); ``memory_budgets`` maps explicit memory ids -> bytes
         # for finer control (e.g. a pinned-host budget), overriding the
@@ -278,7 +285,8 @@ class Runtime:
                     bytes=self.comm.bytes_sent,
                     coll_messages=self.comm.coll_messages,
                     coll_bytes=self.comm.coll_bytes,
-                    red_messages=self.comm.red_messages)
+                    red_messages=self.comm.red_messages,
+                    red_bytes=self.comm.red_bytes)
 
     def total_instructions(self) -> int:
         return sum(s.idag.emitted_count for s in self.schedulers)

@@ -1,0 +1,447 @@
+"""Reduce-scatter + allgather allreduce tests (DESIGN.md §9).
+
+Covers the recursive-halving schedule (fold coverage, per-rank message
+bounds, non-power-of-two pre-fold), the structural slot-traffic win over
+the full-partial slot allgather (~2/N of the bytes, asserted from the
+per-message slot-range block sets AND confirmed by ``Communicator`` byte
+accounting), CDAG classification (COLL_ALLREDUCE vs the retained
+slot-allgather fallback, order-free gating), value bitexactness against
+the ``math.fsum`` oracle and the fallback path on 1/2/3/4/6/8-rank
+groups, packed-fusion interop, and the ``ReceiveArbiter``'s slot-range
+fragment matching with late pilots.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (IdagGenerator, InstructionType, Runtime, TaskGraph,
+                        generate_cdag, one_to_one, read, read_write,
+                        reduction)
+from repro.core.allocation import PINNED_HOST
+from repro.core.buffer import VirtualBuffer
+from repro.core.collective import (allgather_schedule, allreduce_message_count,
+                                   reduce_scatter_schedule, shard_bounds)
+from repro.core.command_graph import CommandType
+from repro.core.communicator import Communicator, Payload, ReceiveArbiter
+from repro.core.instruction_graph import CollFragment, Instruction, Pilot
+from repro.core.region import Box
+
+NODE_COUNTS = [1, 2, 3, 4, 6, 8]
+
+
+# -- the reduce-scatter schedule ---------------------------------------------
+@pytest.mark.parametrize("p", NODE_COUNTS + [5, 7, 12])
+def test_reduce_scatter_schedule_folds_everything(p):
+    """Contributor-set simulation: after the rounds every active rank owns
+    its shard folded over ALL participants, with at most one send and one
+    receive per rank per round."""
+    group = tuple(range(p))
+    rounds, owner, m = reduce_scatter_schedule(group)
+    held = {r: {s: {r} for s in range(m)} for r in group}
+    for msgs in rounds:
+        snap = {r: {s: set(v) for s, v in d.items()} for r, d in held.items()}
+        srcs = [msg.src for msg in msgs]
+        dsts = [msg.dst for msg in msgs]
+        assert len(set(srcs)) == len(srcs)       # <= 1 send per rank/round
+        assert len(set(dsts)) == len(dsts)       # <= 1 recv per rank/round
+        for msg in msgs:
+            lo, hi = msg.shards
+            for s in range(lo, hi):
+                held[msg.dst][s] |= snap[msg.src][s]
+    for r, s in owner.items():
+        assert held[r][s] == set(group), (p, r, s)
+    # each active rank owns exactly one distinct shard; m = 2^floor(log2 p)
+    assert sorted(owner.values()) == list(range(m))
+    assert m <= p < 2 * m and (m & (m - 1)) == 0
+
+
+def test_reduce_scatter_non_power_of_two_prefold():
+    """p=6: the two excess ranks ship their whole partial in a pre-round
+    and drop out; the remaining 4 ranks run the pure halving."""
+    rounds, owner, m = reduce_scatter_schedule(range(6))
+    assert m == 4
+    pre = rounds[0]
+    assert [(msg.src, msg.dst, msg.shards) for msg in pre] == \
+        [(1, 0, (0, 4)), (3, 2, (0, 4))]
+    assert set(owner) == {0, 2, 4, 5}            # excess ranks own nothing
+
+
+@pytest.mark.parametrize("p", [4, 6, 8])
+@pytest.mark.parametrize("slots", [1, 64, 1024])
+def test_allreduce_slot_traffic_vs_full_partial(p, slots):
+    """Structural byte model from the per-message slot-range block sets:
+    reduce-scatter + shard allgather ships <= 0.6x the slots of the
+    full-partial dissemination allgather at >= 4 ranks."""
+    group = tuple(range(p))
+    rounds, owner, m = reduce_scatter_schedule(group)
+    bounds = shard_bounds(slots, m)
+    rs = sum(bounds[msg.shards[1]] - bounds[msg.shards[0]]
+             for msgs in rounds for msg in msgs)
+    contributors = tuple(sorted(r for r, s in owner.items()
+                                if bounds[s] < bounds[s + 1]))
+    ag = sum(bounds[owner[b] + 1] - bounds[owner[b]]
+             for msgs in allgather_schedule(group, contributors)
+             for msg in msgs for b in msg.blocks)
+    full = sum(slots for msgs in allgather_schedule(group, group)
+               for msg in msgs for _ in msg.blocks)
+    assert (rs + ag) / full <= 0.6, (p, slots, rs + ag, full)
+
+
+# -- CDAG classification ------------------------------------------------------
+def _reduction_tdag(op="sum", n=64):
+    tdag = TaskGraph(horizon_step=100)
+    X = VirtualBuffer((n,), name="X", initial_value=np.zeros(n))
+    E = VirtualBuffer((1,), name="E", initial_value=np.ones(1))
+    tdag.submit("k", (n,), [read(X, one_to_one()), reduction(E, op)])
+    return tdag
+
+
+def _cmds(cdag):
+    return [c for per_node in cdag.commands for c in per_node]
+
+
+def test_cdag_classifies_allreduce_with_fallback_flag():
+    cdag = generate_cdag(_reduction_tdag(), 4, collectives=True)
+    cmds = _cmds(cdag)
+    assert any(c.ctype == CommandType.COLL_ALLREDUCE for c in cmds)
+    assert not any(c.ctype == CommandType.COLL_ALLGATHER for c in cmds)
+    assert all(c.allreduce for c in cmds
+               if c.ctype in (CommandType.REDUCE_PARTIAL,
+                              CommandType.REDUCE_GLOBAL))
+    # the retained slot-allgather path, behind the flag
+    cdag2 = generate_cdag(_reduction_tdag(), 4, collectives=True,
+                          allreduce=False)
+    cmds2 = _cmds(cdag2)
+    assert any(c.ctype == CommandType.COLL_ALLGATHER for c in cmds2)
+    assert not any(c.ctype == CommandType.COLL_ALLREDUCE for c in cmds2)
+
+
+def test_two_node_groups_keep_full_partial_exchange():
+    """Below 3 nodes the decomposition cannot reduce bytes (every slot
+    crosses the wire once per direction regardless) and would only double
+    the message count — the fallback stays in charge."""
+    cdag = generate_cdag(_reduction_tdag(), 2, collectives=True)
+    cmds = _cmds(cdag)
+    assert any(c.ctype == CommandType.COLL_ALLGATHER for c in cmds)
+    assert not any(c.ctype == CommandType.COLL_ALLREDUCE for c in cmds)
+
+
+def test_cdag_prod_falls_back_to_slot_allgather():
+    """float prod has no order-free combine: the recursive-halving fold
+    tree would change bits, so it keeps the canonical slot allgather."""
+    cdag = generate_cdag(_reduction_tdag(op="prod"), 4, collectives=True)
+    cmds = _cmds(cdag)
+    assert any(c.ctype == CommandType.COLL_ALLGATHER for c in cmds)
+    assert not any(c.ctype == CommandType.COLL_ALLREDUCE for c in cmds)
+
+
+def test_mixed_order_free_reductions_do_not_fuse():
+    """An order-free (sum) and a canonical-order (prod) reduction never
+    share a packed exchange: the fusion chain breaks on the class change
+    and each exchange keeps its own mode."""
+    n = 32
+    tdag = TaskGraph(horizon_step=100)
+    X = VirtualBuffer((n,), name="X", initial_value=np.zeros(n))
+    E = VirtualBuffer((1,), name="E", initial_value=np.zeros(1))
+    P = VirtualBuffer((1,), name="P", initial_value=np.ones(1))
+    tdag.submit("e", (n,), [read(X, one_to_one()), reduction(E, "sum")])
+    tdag.submit("p", (n,), [read(X, one_to_one()), reduction(P, "prod")])
+    cdag = generate_cdag(tdag, 4, collectives=True)
+    cmds = _cmds(cdag)
+    arx = [c for c in cmds if c.ctype == CommandType.COLL_ALLREDUCE]
+    ag = [c for c in cmds if c.ctype == CommandType.COLL_ALLGATHER]
+    assert arx and ag                         # two exchanges, one per mode
+    assert all(len(c.coll_members) == 1 for c in arx + ag)
+    assert {m[1].buffer.name for c in arx for m in c.coll_members} == {"E"}
+    assert {m[1].buffer.name for c in ag for m in c.coll_members} == {"P"}
+
+
+# -- IDAG structural: per-message block sets + bytes --------------------------
+def _compile_idags(cdag, num_nodes, num_devices=1):
+    idags = []
+    for n in range(num_nodes):
+        g = IdagGenerator(n, num_devices)
+        for cmd in cdag.commands[n]:
+            if cmd.ctype == CommandType.EPOCH and cmd.task is None:
+                continue
+            g.compile(cmd)
+        idags.append(g)
+    return idags
+
+
+def _exchange_slots(idags):
+    """Slots shipped by reduction-exchange COLL_SENDs (tid tagged 3),
+    derived from each message's slot-range / slot fragments."""
+    slots = 0
+    for g in idags:
+        for i in g.instructions:
+            if (i.itype != InstructionType.COLL_SEND
+                    or len(i.transfer_id) != 4 or i.transfer_id[2] != 3):
+                continue
+            for f in i.coll_frags:
+                if f.srange is not None:
+                    slots += f.srange[1] - f.srange[0]
+                else:                  # full-partial slot fragment
+                    slots += f.alloc.box.volume() // f.alloc.box.shape[0]
+    return slots
+
+
+@pytest.mark.parametrize("nodes", [4, 6, 8])
+def test_allreduce_structural_bytes_vs_fallback(nodes):
+    n = 256
+    slots = {}
+    for arx in (False, True):
+        tdag = TaskGraph(horizon_step=100)
+        X = VirtualBuffer((n,), name="X", initial_value=np.zeros(n))
+        V = VirtualBuffer((n,), name="V", initial_value=np.zeros(n))
+        tdag.submit("k", (n,), [read(X, one_to_one()), reduction(V, "sum")])
+        cdag = generate_cdag(tdag, nodes, collectives=True, allreduce=arx)
+        slots[arx] = _exchange_slots(_compile_idags(cdag, nodes))
+    assert slots[True] > 0 < slots[False]
+    assert slots[True] <= 0.6 * slots[False], slots
+
+
+# -- runtime: bitexactness + wire accounting ----------------------------------
+def _run_reductions(nodes, devs, *, allreduce, n=193):
+    rng = np.random.default_rng(23)
+    data = rng.normal(size=n) * 10.0 ** rng.integers(-18, 18, size=n)
+    vdata = rng.normal(size=(n, 3))
+    with Runtime(num_nodes=nodes, devices_per_node=devs,
+                 reduction_allreduce=allreduce, host_threads=2) as rt:
+        X = rt.buffer((n,), init=data, name="X")
+        E = rt.buffer((1,), init=np.zeros(1), name="E")
+        Y = rt.buffer((n, 3), init=vdata, name="Y")
+        W = rt.buffer((3,), init=np.zeros(3), name="W")
+
+        def ke(chunk, xv, red):
+            red.contribute(xv.get(chunk))
+
+        def kw(chunk, yv, red):
+            red.contribute(yv.get(Box((chunk.min[0], 0), (chunk.max[0], 3))))
+
+        rt.submit("e", (n,), [read(X, one_to_one()), reduction(E, "sum")],
+                  ke)
+        rt.submit("w", (n, 3), [read(Y, one_to_one()), reduction(W, "sum")],
+                  kw)
+        e = float(rt.gather(E)[0])
+        w = rt.gather(W)
+        stats = rt.comm_stats()
+        assert rt.warnings == [], rt.warnings
+    return e, w, data, vdata, stats
+
+
+@pytest.mark.parametrize("nodes", NODE_COUNTS)
+def test_allreduce_bitexact_vs_fsum_and_fallback(nodes):
+    """Scalar + multi-dim vector reduction: the allreduce result is
+    bitwise identical to ``math.fsum`` AND to the retained slot-allgather
+    path on every grid, power-of-two or not."""
+    e_a, w_a, data, vdata, stats_a = _run_reductions(nodes, 1, allreduce=True)
+    e_f, w_f, _, _, stats_f = _run_reductions(nodes, 1, allreduce=False)
+    assert e_a == math.fsum(data)
+    assert list(w_a) == [math.fsum(vdata[:, j]) for j in range(3)]
+    assert e_a == e_f and list(w_a) == list(w_f)
+    if nodes >= 4:
+        # wire ground truth: the dominant vector exchange halves traffic
+        assert 0 < stats_a["red_bytes"] <= 0.6 * stats_f["red_bytes"], \
+            (stats_a, stats_f)
+
+
+@pytest.mark.parametrize("nodes,devs", [(2, 2), (3, 2)])
+def test_allreduce_multi_device(nodes, devs):
+    """Device partials fold into the flat accumulator before the exchange."""
+    e, w, data, vdata, _ = _run_reductions(nodes, devs, allreduce=True)
+    assert e == math.fsum(data)
+    assert list(w) == [math.fsum(vdata[:, j]) for j in range(3)]
+
+
+@pytest.mark.parametrize("nodes", [2, 3, 4, 6])
+def test_allreduce_fusion_interop(nodes):
+    """Adjacent E+M reductions share ONE two-phase exchange; the wire
+    message count equals the replicated schedule's."""
+    n = 96
+    rng = np.random.default_rng(7)
+    data = rng.normal(size=(n,))
+    with Runtime(num_nodes=nodes, devices_per_node=1, host_threads=2) as rt:
+        X = rt.buffer((n,), init=data, name="X")
+        E = rt.buffer((1,), init=np.zeros(1), name="E")
+        M = rt.buffer((1,), init=np.zeros(1), name="M")
+
+        def ke(chunk, xv, red):
+            red.contribute(xv.get(chunk) ** 2)
+
+        def km(chunk, xv, red):
+            red.contribute(xv.get(chunk) * 3.0)
+
+        rt.submit("e", (n,), [read(X, one_to_one()), reduction(E, "sum")], ke)
+        rt.submit("m", (n,), [read(X, one_to_one()), reduction(M, "sum")], km)
+        e = float(rt.gather(E)[0])
+        m = float(rt.gather(M)[0])
+        stats = rt.comm_stats()
+        assert rt.warnings == [], rt.warnings
+    assert e == math.fsum(data ** 2)
+    assert m == math.fsum(data * 3.0)
+    group = tuple(range(nodes))
+    assert stats["red_messages"] == allreduce_message_count(group, group, 1)
+
+
+@pytest.mark.parametrize("nodes", [1, 2, 3, 4])
+def test_allreduce_include_current_value(nodes):
+    data = np.arange(24.0)
+    with Runtime(num_nodes=nodes, devices_per_node=1, host_threads=2) as rt:
+        X = rt.buffer((24,), init=data, name="X")
+        E = rt.buffer((1,), init=np.full(1, 2.25), name="E")
+
+        def k(chunk, xv, red):
+            red.contribute(xv.get(chunk))
+
+        rt.submit("k", (24,),
+                  [read(X, one_to_one()),
+                   reduction(E, "sum", include_current_value=True)], k)
+        out = float(rt.gather(E)[0])
+        assert rt.warnings == [], rt.warnings
+    assert out == math.fsum(list(data) + [2.25])
+
+
+@pytest.mark.parametrize("nodes", [2, 3, 4, 6])
+def test_allreduce_subset_participants(nodes):
+    """A single-chunk reduction task: only node 0 contributes, yet every
+    node ends with the replicated result (the allgather phase spans ALL
+    nodes; non-participants start empty and forward)."""
+    from repro.core import all_range, fixed
+    with Runtime(num_nodes=nodes, devices_per_node=1, host_threads=2) as rt:
+        X = rt.buffer((8,), init=np.arange(8.0), name="X")
+        E = rt.buffer((1,), init=np.zeros(1), name="E")
+        O = rt.buffer((nodes,), init=np.zeros(nodes), name="O")
+
+        def k(chunk, xv, red):
+            red.contribute(xv.get(Box((0,), (8,))))
+
+        def use(chunk, ev, ov):
+            ov.set(chunk, ov.get(chunk) + ev.get(Box((0,), (1,)))[0])
+
+        rt.submit("red", Box((0,), (1,)),
+                  [read(X, fixed(Box((0,), (8,)))), reduction(E, "sum")], k)
+        rt.submit("use", (nodes,), [read(E, all_range()),
+                                    read_write(O, one_to_one())], use)
+        o = rt.gather(O)
+        assert rt.warnings == [], rt.warnings
+    assert list(o) == [math.fsum(np.arange(8.0))] * nodes
+
+
+@pytest.mark.parametrize("nodes", [2, 3, 4])
+def test_prod_matches_p2p_oracle(nodes):
+    """The canonical-order fallback keeps prod identical to the
+    point-to-point oracle at the same grid."""
+    vals = {}
+    for coll in (False, True):
+        with Runtime(num_nodes=nodes, devices_per_node=1, collectives=coll,
+                     host_threads=2) as rt:
+            X = rt.buffer((12,), init=1.0 + np.arange(12.0) / 7, name="X")
+            P = rt.buffer((1,), init=np.ones(1), name="P")
+
+            def k(chunk, xv, red):
+                red.contribute(xv.get(chunk))
+
+            rt.submit("p", (12,), [read(X, one_to_one()),
+                                   reduction(P, "prod")], k)
+            vals[coll] = float(rt.gather(P)[0])
+            assert rt.warnings == [], rt.warnings
+    assert vals[False] == vals[True]
+
+
+@pytest.mark.parametrize("nodes", [2, 4, 6])
+@pytest.mark.parametrize("op", ["max", "min"])
+def test_order_free_minmax_allreduce(nodes, op):
+    rng = np.random.default_rng(31)
+    data = rng.normal(size=57)
+    with Runtime(num_nodes=nodes, devices_per_node=1, host_threads=2) as rt:
+        X = rt.buffer((57,), init=data, name="X")
+        M = rt.buffer((1,), init=np.zeros(1), name="M")
+
+        def k(chunk, xv, red):
+            red.contribute(xv.get(chunk))
+
+        rt.submit("m", (57,), [read(X, one_to_one()), reduction(M, op)], k)
+        out = float(rt.gather(M)[0])
+        assert rt.warnings == [], rt.warnings
+    assert out == (data.max() if op == "max" else data.min())
+
+
+# -- ReceiveArbiter: slot-range fragment matching -----------------------------
+def _coll_recv(tid, source, land):
+    rc = Instruction(InstructionType.COLL_RECV, node=0, transfer_id=tid,
+                     coll_source=source,
+                     coll_allocs=tuple({f.alloc.aid: f.alloc
+                                        for f in land}.values()),
+                     coll_expect=tuple(f.key for f in land),
+                     coll_land=tuple(land))
+    rc.state = "issued"
+    return rc
+
+
+def test_arbiter_slot_range_fragments_with_late_pilots():
+    """A COLL_RECV with a slot-range landing map: fragments land at the
+    flat ranges of their entries, completion requires every expected key,
+    and pilots arriving after the payload change nothing."""
+    from repro.core.allocation import Allocation
+    comm = Communicator(2)
+    store = {}
+    acc = Allocation(mid=PINNED_HOST, bid=None, box=Box((0,), (8,)))
+    scr = Allocation(mid=PINNED_HOST, bid=None, box=Box((0,), (4,)))
+    store[acc.aid] = np.full(8, -1.0)
+    store[scr.aid] = np.full(4, -1.0)
+    arb = ReceiveArbiter(0, comm, store)
+    tid = (5, 0, 3, 1)
+    land = [CollFragment(key=(0, 4, 8), alloc=acc, srange=(4, 8)),
+            CollFragment(key=(1, 0, 4), alloc=scr, srange=(0, 4))]
+    rc = _coll_recv(tid, source=1, land=land)
+    arb.begin(rc)
+    done = []
+    arb.step(done)
+    assert done == []
+    # first fragment only -> no completion, lands at [4:8) of the acc
+    comm.isend(0, Payload(source=1, msg_id=0, transfer_id=tid,
+                          fragments=[((0, 4, 8), np.arange(4.0))]))
+    arb.step(done)
+    assert done == []
+    np.testing.assert_array_equal(store[acc.aid][4:], np.arange(4.0))
+    np.testing.assert_array_equal(store[acc.aid][:4], np.full(4, -1.0))
+    # the pilot arrives LATE (after the payload): accounting only
+    comm.post_pilot(Pilot(source=1, target=0, transfer_id=tid,
+                          box=Box((0,), (8,)), msg_id=1, gather=True))
+    arb.step(done)
+    assert done == []
+    # the remaining key, in a second packed message from the same source
+    comm.isend(0, Payload(source=1, msg_id=1, transfer_id=tid,
+                          fragments=[((1, 0, 4), np.full(4, 7.0))]))
+    arb.step(done)
+    assert done == [rc]
+    np.testing.assert_array_equal(store[scr.aid], np.full(4, 7.0))
+    assert not arb.has_pending()
+
+
+def test_arbiter_slot_range_wrong_source_does_not_land():
+    """Packed slot-range messages are source-addressed: a payload from a
+    different rank with colliding keys must not land."""
+    from repro.core.allocation import Allocation
+    comm = Communicator(3)
+    store = {}
+    acc = Allocation(mid=PINNED_HOST, bid=None, box=Box((0,), (4,)))
+    store[acc.aid] = np.zeros(4)
+    arb = ReceiveArbiter(0, comm, store)
+    tid = (6, 0, 3, 0)
+    rc = _coll_recv(tid, source=2, land=[
+        CollFragment(key=(0, 0, 4), alloc=acc, srange=(0, 4))])
+    arb.begin(rc)
+    done = []
+    comm.isend(0, Payload(source=1, msg_id=0, transfer_id=tid,
+                          fragments=[((0, 0, 4), np.full(4, 9.0))]))
+    arb.step(done)
+    assert done == [] and store[acc.aid].sum() == 0.0
+    comm.isend(0, Payload(source=2, msg_id=1, transfer_id=tid,
+                          fragments=[((0, 0, 4), np.full(4, 3.0))]))
+    arb.step(done)
+    assert done == [rc]
+    np.testing.assert_array_equal(store[acc.aid], np.full(4, 3.0))

@@ -18,7 +18,8 @@ from repro.core import (IdagGenerator, InstructionType, Runtime, TaskGraph,
                         all_range, fixed, generate_cdag, one_to_one, read,
                         read_write, reduction, write)
 from repro.core.buffer import VirtualBuffer
-from repro.core.collective import (allgather_schedule, message_count,
+from repro.core.collective import (allgather_schedule,
+                                   allreduce_message_count, message_count,
                                    num_rounds, tree_schedule)
 from repro.core.command_graph import CommandType
 from repro.core.region import Box
@@ -184,6 +185,151 @@ def test_broadcast_and_scatter_detection():
     assert len(sends) == nodes - 1
     root_sends = [s for s in sends if s.node == 0]
     assert len(root_sends) == num_rounds(nodes)
+
+
+def test_scatter_forwarder_ownership_elides_pushes():
+    """A binomial-scatter forwarder transiently holds the blocks of its
+    subtree; those replicas must be recorded in the replicated ownership
+    map so later exchanges elide pushes of data the forwarder already
+    holds (ROADMAP "scatter ownership")."""
+    from repro.core.command_graph import CommandGraphGenerator
+    from repro.core.region import Region
+    nodes, n = 4, 32
+    tdag = TaskGraph(horizon_step=100)
+    C = VirtualBuffer((n,), name="C")
+    O = VirtualBuffer((n,), name="O", initial_value=np.zeros(n))
+    O2 = VirtualBuffer((n,), name="O2", initial_value=np.zeros(n))
+    gen = CommandGraphGenerator(nodes, collectives=True)
+
+    def feed():
+        gen.process(tdag.tasks[-1])
+
+    tdag.submit("w0", Box((0,), (1,)), [write(C, fixed(Box((0,), (n,))))])
+    feed()
+    # read-only scatter: node i consumes chunk i; the binomial tree routes
+    # node 3's chunk [24,32) through forwarder node 2
+    tdag.submit("rown", (n,), [read(C, one_to_one()),
+                               read_write(O, one_to_one())])
+    feed()
+    cmds = [c for per in gen.commands for c in per]
+    assert any(c.ctype == CommandType.COLL_SCATTER for c in cmds)
+    own = gen._ownership[C.bid]
+    owners_b3 = {o for _, o in own.query(Region.from_box(Box((24,), (32,))))}
+    assert owners_b3 == {frozenset({0, 2, 3})}, owners_b3   # 2 = forwarder
+    # a later read-all exchange: pushes to the forwarder exclude BOTH its
+    # consumed chunk and the transiently forwarded block
+    tdag.submit("rall", (n,), [read(C, all_range()),
+                               read_write(O2, one_to_one())])
+    feed()
+    cmds = [c for per in gen.commands for c in per]
+    pushes = [c for c in cmds if c.ctype == CommandType.PUSH
+              and c.buffer is C]
+    to_fwd = [c for c in pushes if c.target == 2]
+    assert len(to_fwd) == 2, to_fwd                # blocks 0 and 1 only
+    held = Region.from_box(Box((16,), (32,)))      # own chunk + forwarded
+    assert all(not c.region.overlaps(held) for c in to_fwd)
+    # the pure consumer at the same tree depth still needs 3 pushes
+    assert len([c for c in pushes if c.target == 1]) == 3
+
+
+def test_scatter_forwarder_serves_later_push():
+    """End-to-end: with the scatter rooted at node 2 the binomial order is
+    [2, 0, 1, 3], so forwarder node 1 transiently holds node 3's block and
+    — as the minimum-rank owner — becomes the SOURCE of a later push of
+    that block.  Values must survive the forwarder-served transfer."""
+    from repro.core.region import Region
+    nodes, n = 4, 32
+
+    def only_node(k):
+        def rm(chunk, buffer_shape):
+            if chunk.min[0] <= k < chunk.max[0]:
+                return Region.from_box(Box.full(buffer_shape))
+            return Region.empty()
+        rm.__name__ = f"only_node{k}"
+        return rm
+
+    def block3(chunk, buffer_shape):
+        if chunk.max[0] <= 8:
+            return Region.from_box(Box((24 + chunk.min[0],),
+                                       (24 + chunk.max[0],)))
+        return Region.empty()
+
+    with Runtime(num_nodes=nodes, devices_per_node=1, host_threads=2) as rt:
+        C = rt.buffer((n,), name="C")
+        O = rt.buffer((n,), init=np.zeros(n), name="O")
+        R = rt.buffer((8,), init=np.zeros(8), name="R")
+
+        def w2(chunk, *views):
+            if views:
+                views[0].set(Box((0,), (n,)),
+                             np.arange(n, dtype=float) * 3.0)
+
+        def rd(chunk, cv, ov):
+            ov.set(chunk, ov.get(chunk) + cv.get(chunk))
+
+        def rd3(chunk, *views):
+            if len(views) == 2:
+                a, b = 24 + chunk.min[0], 24 + chunk.max[0]
+                views[1].set(chunk, views[0].get(Box((a,), (b,))))
+
+        rt.submit("w2", (nodes,), [write(C, only_node(2))], w2)
+        rt.submit("rown", (n,), [read(C, one_to_one()),
+                                 read_write(O, one_to_one())], rd)
+        rt.submit("rd3", (8,), [read(C, block3),
+                                read_write(R, one_to_one())], rd3)
+        o = rt.gather(O)
+        r = rt.gather(R)
+        assert rt.warnings == [], rt.warnings
+    ref = np.arange(n, dtype=float) * 3.0
+    np.testing.assert_array_equal(o, ref)
+    np.testing.assert_array_equal(r, ref[24:])
+
+
+def test_include_current_prefetch_collectivized():
+    """The ``include_current_value`` pre-fetch from a single owner becomes
+    ONE broadcast instead of N-1 point-to-point pushes (ROADMAP
+    "collectivize include_current")."""
+    nodes, n = 4, 32
+    tdag = TaskGraph(horizon_step=100)
+    X = VirtualBuffer((n,), name="X", initial_value=np.zeros(n))
+    E = VirtualBuffer((1,), name="E")
+    # a single-chunk task seeds E on node 0 only -> one owner
+    tdag.submit("seed", Box((0,), (1,)), [write(E, fixed(Box((0,), (1,))))])
+    tdag.submit("red", (n,), [read(X, one_to_one()),
+                              reduction(E, "sum",
+                                        include_current_value=True)])
+    cdag = generate_cdag(tdag, nodes, collectives=True)
+    cmds = [c for per in cdag.commands for c in per]
+    bcasts = [c for c in cmds if c.ctype == CommandType.COLL_BROADCAST
+              and c.buffer is E]
+    assert bcasts, "include_current pre-fetch was not collectivized"
+    assert not any(c.ctype == CommandType.PUSH and c.buffer is E
+                   for c in cmds)
+
+
+def test_include_current_collectivized_value():
+    """Value semantics of the broadcast pre-fetch: the single-owner seed
+    enters the fold exactly once, bit-identical to the fsum oracle."""
+    nodes, n = 3, 24
+    data = np.arange(float(n))
+    with Runtime(num_nodes=nodes, devices_per_node=1, host_threads=2) as rt:
+        X = rt.buffer((n,), init=data, name="X")
+        E = rt.buffer((1,), name="E")
+
+        def seed(chunk, ev):
+            ev.set(Box((0,), (1,)), np.full(1, 2.25))
+
+        def k(chunk, xv, red):
+            red.contribute(xv.get(chunk))
+
+        rt.submit("seed", Box((0,), (1,)),
+                  [write(E, fixed(Box((0,), (1,))))], seed)
+        rt.submit("red", (n,),
+                  [read(X, one_to_one()),
+                   reduction(E, "sum", include_current_value=True)], k)
+        out = float(rt.gather(E)[0])
+        assert rt.warnings == [], rt.warnings
+    assert out == math.fsum(list(data) + [2.25])
 
 
 def test_irregular_exchange_keeps_point_to_point():
@@ -364,13 +510,14 @@ def test_fused_reduction_bitexact(nodes, devs):
 
 @pytest.mark.parametrize("nodes", [2, 3, 4])
 def test_fusion_halves_exchanges(nodes):
-    """Fused: ONE packed exchange per step (N*ceil(log2 N) round messages);
-    unfused: one exchange per reduction per step — exactly double."""
+    """Fused: ONE packed exchange per step; unfused: one exchange per
+    reduction per step — exactly double.  The per-exchange message count
+    is the allreduce schedule's (reduce-scatter + shard allgather)."""
     steps = 3
     *_, fused_stats = _energy_momentum(nodes, 1, fused=True, steps=steps)
     *_, unfused_stats = _energy_momentum(nodes, 1, fused=False, steps=steps)
-    per_exchange = message_count(
-        allgather_schedule(tuple(range(nodes)), tuple(range(nodes))))
+    group = tuple(range(nodes))
+    per_exchange = allreduce_message_count(group, group, 1)
     assert fused_stats["coll_messages"] == steps * per_exchange
     assert unfused_stats["coll_messages"] == 2 * steps * per_exchange
 
@@ -427,7 +574,7 @@ def test_fusion_within_one_task():
         assert rt.warnings == []
     assert e == math.fsum(data ** 2)
     assert m == math.fsum(data)
-    per_exchange = message_count(allgather_schedule((0, 1), (0, 1)))
+    per_exchange = allreduce_message_count((0, 1), (0, 1), 1)
     assert stats["coll_messages"] == per_exchange     # ONE exchange, not two
 
 

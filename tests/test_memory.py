@@ -154,6 +154,32 @@ def test_over_budget_fallback_never_fails():
     assert any("over budget" in w for w in warnings)
 
 
+def test_over_budget_warning_dedup():
+    """Long over-budget runs must not grow ``Runtime.warnings`` without
+    bound: repeated pressure on the same (memory, node) updates ONE entry
+    with a repeat counter instead of appending per pressuring ALLOC."""
+    steps = 12
+    with Runtime(1, 1, device_memory_budget=BYTES // 2) as q:
+        A = q.buffer((N,), init=np.ones(N), name="A")
+        B = q.buffer((N,), init=np.zeros(N), name="B")
+
+        def k(chunk, av, bv, s=0):
+            bv.set(chunk, av.get(chunk) + bv.get(chunk))
+
+        for s in range(steps):
+            q.submit(f"k{s}", (N,),
+                     [read(A, one_to_one()), read_write(B, one_to_one())], k)
+        out = q.gather(B)
+        rep = q.memory_report()[0]
+        warnings = q.warnings
+    np.testing.assert_array_equal(out, np.full(N, float(steps)))
+    over = [w for w in warnings if "over budget" in w]
+    assert rep["over_budget"] > 1
+    # one deduped entry per (memory, node), carrying the repeat count
+    assert len(over) == 1, over
+    assert f"repeated {rep['over_budget']} times" in over[0], over[0]
+
+
 def test_reduction_under_budget_bit_for_bit():
     """Reduction scratches are charged against the budget but never evicted;
     a budgeted distributed sum stays bitwise equal to the unbudgeted one."""
