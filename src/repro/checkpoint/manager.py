@@ -43,6 +43,20 @@ class CheckpointManager:
             err, self._error = self._error, None
             raise err
 
+    def close(self) -> Optional[BaseException]:
+        """Join any in-flight async save without raising.
+
+        Fault-triggered teardown must not orphan the save thread — a
+        half-written checkpoint racing the next grid's restore — nor mask
+        the original failure with a save error.  Returns the pending save
+        error (if any) and clears it; the manager stays usable.
+        """
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        err, self._error = self._error, None
+        return err
+
     def save(self, step: int, tree) -> None:
         # snapshot to host BEFORE going async (donated buffers may be reused)
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)

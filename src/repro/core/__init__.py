@@ -7,15 +7,18 @@ from .buffer import (AccessMode, Accessor, VirtualBuffer, read, read_write,
                      write)
 from .command_graph import Command, CommandGraphGenerator, CommandType, generate_cdag
 from .executor import BoundsError, BufferView, Executor, ReductionView
-from .instruction_graph import (IdagGenerator, Instruction, InstructionType,
-                                Pilot)
+from .faults import (EpochTimeoutError, ExecutionAborted, FaultError,
+                     FaultPlan, InjectedCrash, NodeFailure, PeerAborted,
+                     TransportError, run_with_restarts)
+from .instruction_graph import (EpochAbort, IdagGenerator, Instruction,
+                                InstructionType, Pilot)
 from .memory import MemoryManager, MemoryStats, MemState
 from .reduction import Reduction, ReductionOp, reduction
 from .lookahead import LookaheadScheduler
 from .range_mapper import (all_range, fixed, fixed_row, neighborhood,
                            one_to_one, rows_upto, slice_dim)
 from .region import Box, Region, RegionMap, split_box
-from .runtime import Runtime
+from .runtime import Runtime, SupervisedResult
 from .task_graph import DepKind, Task, TaskGraph, TaskType
 from .tracing import Tracer
 
@@ -24,14 +27,17 @@ __all__ = [
     "AccessMode", "Accessor", "VirtualBuffer", "read", "read_write", "write",
     "Command", "CommandGraphGenerator", "CommandType", "generate_cdag",
     "BoundsError", "BufferView", "Executor", "ReductionView",
-    "IdagGenerator", "Instruction", "InstructionType", "Pilot",
+    "EpochTimeoutError", "ExecutionAborted", "FaultError", "FaultPlan",
+    "InjectedCrash", "NodeFailure", "PeerAborted", "TransportError",
+    "run_with_restarts",
+    "EpochAbort", "IdagGenerator", "Instruction", "InstructionType", "Pilot",
     "MemoryManager", "MemoryStats", "MemState",
     "Reduction", "ReductionOp", "reduction",
     "LookaheadScheduler",
     "all_range", "fixed", "fixed_row", "neighborhood", "one_to_one",
     "rows_upto", "slice_dim",
     "Box", "Region", "RegionMap", "split_box",
-    "Runtime",
+    "Runtime", "SupervisedResult",
     "DepKind", "Task", "TaskGraph", "TaskType",
     "Tracer",
 ]

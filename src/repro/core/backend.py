@@ -97,9 +97,11 @@ class InOrderQueue:
                 self._pending -= 1
             self.sink.push(item.tag, err, time.perf_counter() - t0)
 
-    def shutdown(self) -> None:
+    def shutdown(self, join_timeout: float = 5.0) -> int:
+        """Stop the worker; returns 1 if it failed to join (leaked)."""
         self._q.put(None)
-        self._thread.join(timeout=5)
+        self._thread.join(timeout=join_timeout)
+        return 1 if self._thread.is_alive() else 0
 
 
 class HostPool:
@@ -132,10 +134,15 @@ class HostPool:
                 err = e
             self.sink.push(item.tag, err, time.perf_counter() - t0)
 
-    def shutdown(self) -> None:
+    def shutdown(self, join_timeout: float = 5.0) -> int:
+        """Stop all workers; returns how many failed to join (leaked)."""
         self._q.put(None)
+        leaked = 0
         for t in self._threads:
-            t.join(timeout=5)
+            t.join(timeout=join_timeout)
+            if t.is_alive():
+                leaked += 1
+        return leaked
 
 
 class Backend:
@@ -171,8 +178,11 @@ class Backend:
         self._rr[device] = (self._rr[device] + 1) % len(qs)
         return qs[self._rr[device]]
 
-    def shutdown(self) -> None:
+    def shutdown(self, join_timeout: float = 5.0) -> int:
+        """Stop every lane; returns the total leaked-thread count."""
+        leaked = 0
         for qs in self.device_queues:
             for q in qs:
-                q.shutdown()
-        self.host_pool.shutdown()
+                leaked += q.shutdown(join_timeout)
+        leaked += self.host_pool.shutdown(join_timeout)
+        return leaked

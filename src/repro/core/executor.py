@@ -27,7 +27,10 @@ from .allocation import Allocation
 from .backend import Backend, InOrderQueue, WorkItem
 from .buffer import AccessMode
 from .communicator import Communicator, Payload, ReceiveArbiter
-from .instruction_graph import AccessorBinding, Instruction, InstructionType
+from .faults import (EpochTimeoutError, FaultPlan, InjectedCrash, NodeFailure,
+                     PeerAborted)
+from .instruction_graph import (AccessorBinding, EpochAbort, Instruction,
+                                InstructionType)
 from .region import Box, Region
 
 
@@ -153,7 +156,9 @@ class Executor:
 
     def __init__(self, node: int, num_devices: int, comm: Communicator,
                  *, queues_per_device: int = 2, host_threads: int = 4,
-                 check_bounds: bool = False, tracer=None):
+                 check_bounds: bool = False, tracer=None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 watchdog_timeout: Optional[float] = None):
         self.node = node
         self.comm = comm
         self.backend = Backend(num_devices, queues_per_device=queues_per_device,
@@ -207,12 +212,31 @@ class Executor:
             InstructionType.DEVICE_KERNEL: self._exec_kernel,
             InstructionType.HOST_TASK: self._exec_kernel,
         }
+        # -- fault model (DESIGN.md §10) ----------------------------------
+        self.fault_plan = fault_plan
+        self.watchdog_timeout = watchdog_timeout
+        self._crash_at = fault_plan.crash_point(node) if fault_plan else None
+        self._slow_s = fault_plan.slow_s(node) if fault_plan else 0.0
+        self._issued_count = 0
+        self.crashed = False
+        self.warnings: list[str] = []
+        self.leaked_threads = 0
+        self._abort = False             # force-exit flag (shutdown fallback)
+        self._abort_sent = False        # at most one EPOCH_ABORT broadcast
         self._stop = False
         self._drained = threading.Event()
         comm.add_listener(node, self.backend.sink.event)
         self._thread = threading.Thread(target=self._run, name=f"exec-N{node}",
                                         daemon=True)
         self._thread.start()
+        self._watch_stop = threading.Event()
+        self._watchdog: Optional[threading.Thread] = None
+        if watchdog_timeout is not None:
+            self._wd_done = -1
+            self._wd_mark = time.monotonic()
+            self._watchdog = threading.Thread(
+                target=self._watch, name=f"watchdog-N{node}", daemon=True)
+            self._watchdog.start()
 
     # -- scheduler-facing API ----------------------------------------------
     def submit(self, instrs: list[Instruction]) -> None:
@@ -225,23 +249,153 @@ class Executor:
         with self._epoch_cv:
             while cid not in self._completed_epochs:
                 if self.errors:
-                    raise RuntimeError(f"executor N{self.node} failed") from self.errors[0]
+                    e = self.errors[0]
+                    raise RuntimeError(
+                        f"executor N{self.node} failed: "
+                        f"{type(e).__name__}: {e}") from e
                 rem = deadline - time.monotonic()
                 if rem <= 0:
-                    raise TimeoutError(f"epoch C{cid} not reached on N{self.node}")
+                    raise EpochTimeoutError(
+                        f"epoch C{cid} not reached on N{self.node}; "
+                        + self.stall_report())
                 self._epoch_cv.wait(min(rem, 0.05))
 
-    def shutdown(self) -> None:
+    def stall_report(self) -> str:
+        """What this executor is stuck on — attached to timeout errors."""
+        stuck = next((i for i in self._retire_log if i.state != "done"), None)
+        dead = self.comm.stale_peers(self.node, self.watchdog_timeout or 1.0)
+        deadtxt = (f"; stale peer heartbeats: {[f'N{p}' for p in dead]}"
+                   if dead else "")
+        return (f"{len(self._remaining)} instructions unfinished, oldest "
+                f"{stuck!r}; arbiter: {self.arbiter.pending_report()}; "
+                f"transport: {self.comm.transport_summary()}{deadtxt}")
+
+    def shutdown(self, join_timeout: float = 10.0) -> int:
+        """Stop the worker and backend lanes, accounting every thread.
+
+        A failed/crashed executor skips the graceful drain (its blocked work
+        would never complete) and takes the abort path directly.  Any thread
+        still alive after its join deadline is counted in
+        ``leaked_threads`` and recorded as a warning instead of being
+        silently ignored.  Returns the leaked-thread count.
+        """
+        if self.errors or self.crashed:
+            self._abort = True
         self._stop = True
+        self._watch_stop.set()
         self.backend.sink.event.set()
-        self._thread.join(timeout=10)
-        self.backend.shutdown()
+        self._thread.join(timeout=2.0 if self._abort else join_timeout)
+        if self._thread.is_alive():
+            # graceful drain did not converge (e.g. poisoned dependencies):
+            # abort — the loop discards blocked work at its next wake
+            self._abort = True
+            self.backend.sink.event.set()
+            self._thread.join(timeout=2.0)
+        leaked = 0
+        if self._thread.is_alive():
+            leaked += 1
+            self.warnings.append(
+                f"executor N{self.node}: worker thread failed to join "
+                f"(stuck with {len(self._blocked)} blocked instructions)")
+        backend_leaked = self.backend.shutdown(
+            join_timeout=1.0 if self._abort else 5.0)
+        if backend_leaked:
+            leaked += backend_leaked
+            self.warnings.append(
+                f"executor N{self.node}: {backend_leaked} backend lane "
+                f"thread(s) failed to join (kernel still running?)")
+        if self._watchdog is not None:
+            self._watchdog.join(timeout=2.0)
+            if self._watchdog.is_alive():
+                leaked += 1
+                self.warnings.append(
+                    f"executor N{self.node}: watchdog thread failed to join")
+        self.leaked_threads = leaked
+        return leaked
+
+    # -- failure handling (DESIGN.md §10) -------------------------------------
+    def _fail(self, err: BaseException, *, broadcast: bool = True,
+              dead_peer: Optional[int] = None) -> None:
+        """Record a failure, wake epoch waiters NOW, and poison peers."""
+        self.errors.append(err)
+        with self._epoch_cv:
+            self._epoch_cv.notify_all()
+        if broadcast and not self._abort_sent and self.comm.num_nodes > 1:
+            self._abort_sent = True
+            stuck = next((i for i in self._retire_log if i.state != "done"),
+                         None)
+            self.comm.post_abort(EpochAbort(
+                origin=self.node, instruction=repr(stuck) if stuck else "?",
+                cause=f"{type(err).__name__}: {err}", dead_peer=dead_peer))
+
+    def _on_abort(self, ab: EpochAbort) -> None:
+        """A peer poisoned the epoch: fail fast and drop in-flight receives."""
+        if self.tracer is not None and hasattr(self.tracer, "instant"):
+            self.tracer.instant(f"N{self.node}.ctrl", "peer_abort",
+                                {"origin": ab.origin, "cause": ab.cause})
+        self.arbiter.poison(f"abort from N{ab.origin}")
+        if not self.errors:
+            self._fail(PeerAborted(self.node, ab.origin, ab.dead_peer,
+                                   ab.instruction, ab.cause),
+                       broadcast=False)
+
+    def _watch(self) -> None:
+        """Watchdog: fire when instructions are stuck past the deadline.
+
+        Progress is 'some instruction completed recently'; idle (nothing
+        registered, nothing pending) resets the clock.  On fire it names the
+        oldest unfinished instruction and the peers whose heartbeats went
+        stale, then broadcasts the abort so the whole grid fails within ~1
+        round trip instead of the epoch timeout.
+        """
+        period = max(0.01, min(self.watchdog_timeout / 4.0, 0.25))
+        while not self._watch_stop.wait(period):
+            if self._stop or self._abort or self.crashed or self.errors:
+                continue
+            now = time.monotonic()
+            if self._done_count != self._wd_done:
+                self._wd_done = self._done_count
+                self._wd_mark = now
+                continue
+            busy = bool(self._remaining) or self.arbiter.has_pending()
+            if not busy:
+                self._wd_mark = now
+                continue
+            if now - self._wd_mark < self.watchdog_timeout:
+                continue
+            stuck = next((i for i in self._retire_log if i.state != "done"),
+                         None)
+            dead = self.comm.stale_peers(self.node, self.watchdog_timeout, now)
+            err = NodeFailure(
+                self.node, repr(stuck) if stuck else "?", dead,
+                detail=(f"no completions for {now - self._wd_mark:.2f}s; "
+                        f"arbiter: {self.arbiter.pending_report()}; "
+                        f"transport: {self.comm.transport_summary()}"))
+            if self.tracer is not None and hasattr(self.tracer, "instant"):
+                self.tracer.instant(f"N{self.node}.ctrl", "watchdog_fire",
+                                    {"stuck": err.stuck})
+            self._fail(err, dead_peer=dead[0] if dead else None)
+            return
 
     # -- main loop -----------------------------------------------------------
     def _run(self) -> None:
         completions: list[Instruction] = []
+        comm, node = self.comm, self.node
         while True:
+            if self._abort:
+                # forced teardown: blocked/poisoned work is discarded
+                self._drained.set()
+                return
+            comm.beat(node)
             progressed = False
+            # 0. transport duty cycle: acks in, retransmits out, and any
+            # cross-node abort poison (cheap lock-free gates)
+            if comm.reliable and comm.has_transport_work(node):
+                for terr in comm.pump(node):
+                    self._fail(terr)
+            if comm.ctrl_box[node]:
+                for ab in comm.poll_ctrl(node):
+                    self._on_abort(ab)
             # 1. ingest newly scheduled instructions
             with self._inbox_lock:
                 fresh = list(self._inbox)
@@ -252,7 +406,7 @@ class Executor:
             # 2. drain backend completions (unblocks ready/eager candidates)
             for tag, err, lat in self.backend.sink.drain():
                 if err is not None:
-                    self.errors.append(err)
+                    self._fail(err)
                 self._mark_done(tag, lat)
                 progressed = True
             # 3. receive arbitration (woken by communicator listener); only
@@ -269,6 +423,9 @@ class Executor:
             # 4. issue everything that became ready or eager-eligible
             if self._drain_ready():
                 progressed = True
+            if self.crashed:
+                # fail-stop: no drain, no farewell — peers must detect it
+                return
             if self._stop and not self._ready and not self._blocked and not fresh:
                 with self._inbox_lock:
                     empty = not self._inbox
@@ -343,6 +500,18 @@ class Executor:
 
     # -- issue routing ---------------------------------------------------------
     def _issue(self, instr: Instruction, queue: Optional[InOrderQueue] = None) -> None:
+        if self.crashed:
+            return                       # fail-stop: issue nothing further
+        if self._crash_at is not None:
+            self._issued_count += 1
+            if self._issued_count >= self._crash_at:
+                # injected fail-stop: recorded locally (for the supervisor),
+                # never broadcast — a dead rank does not say goodbye
+                self.crashed = True
+                self._fail(InjectedCrash(
+                    f"N{self.node} fail-stopped at issued instruction "
+                    f"#{self._issued_count} ({instr!r})"), broadcast=False)
+                return
         instr.state = "issued"
         self._issue_latency.append(time.perf_counter() - instr._ready_t)
         if self.tracer is not None:
@@ -576,6 +745,8 @@ class Executor:
         darr[sl] = op.finalize(acc, buf.dtype)
 
     def _exec_kernel(self, instr: Instruction) -> None:
+        if self._slow_s:
+            time.sleep(self._slow_s)     # injected straggler (fault plan)
         views = []
         for b in instr.bindings:
             arr = self._arr(b.allocation)

@@ -37,7 +37,7 @@ from .collective import (allgather_schedule, reduce_scatter_schedule,
                          schedule_for, shard_bounds)
 from .command_graph import Command, CommandType
 from .instructions import (AccessorBinding, CollFragment,  # noqa: F401
-                           Instruction, InstructionType, Pilot,
+                           EpochAbort, Instruction, InstructionType, Pilot,
                            ReductionBinding)
 from .memory import MemoryManager
 from .region import Box, Region, split_box

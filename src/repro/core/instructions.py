@@ -116,6 +116,22 @@ class Pilot:
 
 
 @dataclass
+class EpochAbort:
+    """EPOCH_ABORT poison message: cross-node failure propagation (§10).
+
+    A failing rank (or a watchdog that detected a dead peer) broadcasts one
+    of these through the ``Communicator`` control plane; receivers abort the
+    current epoch within ~1 RTT instead of stalling to the epoch timeout.
+    The control plane is assumed reliable (it is not subject to the fault
+    plan) — on a real transport it maps to the out-of-band error channel.
+    """
+    origin: int                        # rank that detected/raised the failure
+    instruction: str                   # where the origin was when it failed
+    cause: str                         # human-readable fault cause
+    dead_peer: Optional[int] = None    # the rank believed crashed, if known
+
+
+@dataclass
 class Instruction:
     itype: InstructionType
     node: int

@@ -26,6 +26,7 @@ from .buffer import Accessor, VirtualBuffer
 from .command_graph import CommandGraphGenerator, CommandType
 from .communicator import Communicator
 from .executor import Executor
+from .faults import ExecutionAborted, FaultPlan, run_with_restarts
 from .instruction_graph import IdagGenerator, InstructionType
 from .lookahead import LookaheadScheduler
 from .region import Box
@@ -154,7 +155,11 @@ class Runtime:
                  device_memory_budget: Optional[int] = None,
                  memory_budgets: Optional[dict[int, int]] = None,
                  collectives: bool = True, reduction_fusion: bool = True,
-                 reduction_allreduce: bool = True):
+                 reduction_allreduce: bool = True,
+                 fault_plan: Optional[FaultPlan] = None,
+                 reliable: bool = True,
+                 watchdog_timeout: Optional[float] = None,
+                 retransmit_timeout: float = 0.05, max_retries: int = 12):
         self.num_nodes = num_nodes
         self.devices_per_node = devices_per_node
         self.lookahead = lookahead
@@ -179,12 +184,22 @@ class Runtime:
         self.tracer = Tracer() if trace else None
         self.tdag = TaskGraph(horizon_step=horizon_step,
                               fuse_reductions=self.reduction_fusion)
-        self.comm = Communicator(num_nodes)
+        # fault model + resilient transport (DESIGN.md §10): the communicator
+        # injects wire faults and runs the ack/retransmit protocol; executors
+        # inject crash/slow faults and run the watchdog
+        self.fault_plan = fault_plan
+        self.comm = Communicator(num_nodes, reliable=reliable,
+                                 fault_plan=fault_plan,
+                                 retransmit_timeout=retransmit_timeout,
+                                 max_retries=max_retries,
+                                 tracer=self.tracer)
         self.executors = [Executor(n, devices_per_node, self.comm,
                                    queues_per_device=queues_per_device,
                                    host_threads=host_threads,
                                    check_bounds=check_bounds,
-                                   tracer=self.tracer)
+                                   tracer=self.tracer,
+                                   fault_plan=fault_plan,
+                                   watchdog_timeout=watchdog_timeout)
                           for n in range(num_nodes)]
         self.schedulers = [_NodeScheduler(n, self) for n in range(num_nodes)]
         self._shut = False
@@ -242,13 +257,24 @@ class Runtime:
                     sched.inbox.put(task)
             self._sent += 1
         self.tdag.retire_to(self._sent)
+        failures: list[tuple[int, BaseException]] = []
         for n, ex in enumerate(self.executors):
             cid = futures[n].get(timeout=timeout)
-            if cid is not None:
+            if cid is None:
+                continue
+            try:
                 ex.wait_epoch(cid, timeout=timeout)
-        errs = [e for ex in self.executors for e in ex.errors]
-        if errs:
-            raise RuntimeError("executor failure") from errs[0]
+            except Exception as e:  # noqa: BLE001 — aggregated below
+                failures.append((n, ex.errors[0] if ex.errors else e))
+        # a node whose epoch landed before a late-arriving abort still holds
+        # an error — fold those in so the report names every failed rank
+        for n, ex in enumerate(self.executors):
+            if ex.errors and all(fn != n for fn, _ in failures):
+                failures.append((n, ex.errors[0]))
+        if failures:
+            raise ExecutionAborted(
+                "executor failure; " + self.comm.transport_summary(),
+                sorted(failures)) from failures[0][1]
 
     def gather(self, buf: VirtualBuffer, timeout: float = 120.0) -> np.ndarray:
         """Assemble the current buffer contents on the caller's side."""
@@ -276,17 +302,40 @@ class Runtime:
         for s in self.schedulers:
             w.extend(s.cdag.errors)
             w.extend(s.idag.warnings)
+        for ex in self.executors:
+            w.extend(ex.warnings)
         return w
 
     def comm_stats(self) -> dict:
         """Wire-level accounting: total messages/bytes plus the collective-
-        round share (packed messages; DESIGN.md §9)."""
+        round share (DESIGN.md §9) and the resilient-transport counters
+        (DESIGN.md §10).  Retransmit traffic is accounted separately
+        (``retries``/``retry_bytes``) so logical message/byte counts stay
+        fault-independent."""
         return dict(messages=self.comm.num_messages,
                     bytes=self.comm.bytes_sent,
                     coll_messages=self.comm.coll_messages,
                     coll_bytes=self.comm.coll_bytes,
                     red_messages=self.comm.red_messages,
-                    red_bytes=self.comm.red_bytes)
+                    red_bytes=self.comm.red_bytes,
+                    retries=self.comm.retries,
+                    retry_bytes=self.comm.retry_bytes,
+                    acks=self.comm.acks,
+                    aborts=self.comm.aborts,
+                    dups_suppressed=sum(ex.arbiter.dups_suppressed
+                                        for ex in self.executors),
+                    stale_rejected=sum(ex.arbiter.stale_rejected
+                                       for ex in self.executors),
+                    faults_injected=dict(self.comm.fault_counts))
+
+    def thread_report(self) -> dict:
+        """Worker-thread health after shutdown: leaked (unjoinable) thread
+        count per node plus the warning text explaining each leak."""
+        return dict(
+            leaked_threads={n: ex.leaked_threads
+                            for n, ex in enumerate(self.executors)},
+            total_leaked=sum(ex.leaked_threads for ex in self.executors),
+            warnings=[w for ex in self.executors for w in ex.warnings])
 
     def total_instructions(self) -> int:
         return sum(s.idag.emitted_count for s in self.schedulers)
@@ -314,6 +363,7 @@ class Runtime:
             rep["node"] = n
             rep["real_used"] = dict(ex.mem_used)
             rep["real_peak"] = dict(ex.mem_peak)
+            rep["leaked_threads"] = ex.leaked_threads
             out.append(rep)
         return out
 
@@ -321,10 +371,13 @@ class Runtime:
         if self._shut:
             return
         self._shut = True
-        try:
-            self.sync()
-        except Exception:
-            pass
+        # a failed/crashed grid cannot reach another epoch: skip the final
+        # sync (it would burn the full timeout) and go straight to teardown
+        if not any(ex.errors or ex.crashed for ex in self.executors):
+            try:
+                self.sync()
+            except Exception:
+                pass
         for s in self.schedulers:
             s.shutdown()
         for ex in self.executors:
@@ -335,3 +388,75 @@ class Runtime:
 
     def __exit__(self, *exc) -> None:
         self.shutdown()
+
+    # -- supervised execution (DESIGN.md §10.4) ------------------------------
+    @classmethod
+    def run_supervised(cls, build, step, *, steps: int, num_nodes: int,
+                       devices_per_node: int = 1, checkpoint_every: int = 1,
+                       max_restarts: int = 3, min_nodes: int = 1,
+                       fault_plan: Optional[FaultPlan] = None,
+                       manager=None, watchdog_timeout: Optional[float] = 2.0,
+                       sync_timeout: float = 60.0,
+                       **rt_kwargs) -> "SupervisedResult":
+        """Run a stepwise program under bounded-restart supervision.
+
+        ``build(rt, init)`` creates the program's buffers on runtime ``rt``
+        and returns ``{name: VirtualBuffer}``; ``init`` is ``None`` on a
+        fresh start, else the ``{name: ndarray}`` snapshot to resume from.
+        ``step(rt, bufs, i)`` submits step ``i``'s command groups.
+
+        Every ``checkpoint_every`` steps the buffers are gathered into an
+        in-memory snapshot (and handed to ``manager.save`` when a
+        checkpoint manager is supplied).  On a recoverable failure —
+        crashed rank, exhausted retransmits, watchdog abort — the grid is
+        torn down, any in-flight async checkpoint save is joined
+        (``manager.close``), one node is dropped (elastic shrink, floor
+        ``min_nodes``), one-shot crash faults are cleared
+        (:meth:`FaultPlan.survivors`), and the program is resubmitted from
+        the last snapshot.  After ``max_restarts`` failed recoveries the
+        last error propagates.
+        """
+        state: dict = {"step": 0, "snap": None, "world": num_nodes}
+
+        def attempt(restarts: int) -> dict[str, np.ndarray]:
+            world = max(min_nodes, num_nodes - restarts)
+            plan = (fault_plan.survivors()
+                    if (fault_plan is not None and restarts) else fault_plan)
+            rt = cls(world, devices_per_node, fault_plan=plan,
+                     watchdog_timeout=watchdog_timeout, **rt_kwargs)
+            state["world"] = world
+            try:
+                bufs = build(rt, state["snap"])
+                for i in range(state["step"], steps):
+                    step(rt, bufs, i)
+                    if (i + 1) % checkpoint_every == 0 or i + 1 == steps:
+                        snap = {k: rt.gather(b, timeout=sync_timeout)
+                                for k, b in sorted(bufs.items())}
+                        state["snap"], state["step"] = snap, i + 1
+                        if manager is not None:
+                            manager.save(i + 1, snap)
+                return state["snap"]
+            finally:
+                rt.shutdown()
+
+        def on_failure(err: BaseException, restarts: int) -> None:
+            # join any in-flight async checkpoint save before the next grid
+            # comes up — a half-written checkpoint must never race a restore
+            if manager is not None:
+                manager.close()
+
+        results, restarts = run_with_restarts(attempt, on_failure,
+                                              max_restarts=max_restarts)
+        if manager is not None:
+            manager.close()
+        return SupervisedResult(results=results, restarts=restarts,
+                                world=state["world"], steps=state["step"])
+
+
+@dataclass
+class SupervisedResult:
+    """Outcome of :meth:`Runtime.run_supervised`."""
+    results: dict[str, np.ndarray]
+    restarts: int
+    world: int          # surviving grid size that produced the result
+    steps: int          # steps completed (== requested steps on success)

@@ -34,6 +34,9 @@ class Tracer:
         # counter tracks: name -> [(t, value)] — used for the per-memory
         # byte high-water marks the budget acceptance checks read
         self.counters: dict[str, list[tuple[float, float]]] = defaultdict(list)
+        # point-in-time events (fault injections, retransmits, aborts):
+        # (lane, name, t, args) — rendered as Perfetto instant ("i") events
+        self.instants: list[tuple[str, str, float, dict]] = []
         self._open: dict[tuple[int, int], float] = {}   # (node, iid) -> t_issue
         self.epoch = time.perf_counter()
 
@@ -48,6 +51,19 @@ class Tracer:
         """Record one sample of a named counter (e.g. ``N0.M2.bytes``)."""
         with self._lock:
             self.counters[name].append((self.now(), value))
+
+    def instant(self, lane: str, name: str, args: dict | None = None) -> None:
+        """Record a point event (drop/retransmit/abort/watchdog fire)."""
+        with self._lock:
+            self.instants.append((lane, name, self.now(), args or {}))
+
+    def instant_counts(self) -> dict[str, int]:
+        """Event-name histogram — chaos tests assert injections were traced."""
+        out: dict[str, int] = defaultdict(int)
+        with self._lock:
+            for _, name, _, _ in self.instants:
+                out[name] += 1
+        return dict(out)
 
     def counter_peaks(self, suffix: str = ".bytes") -> dict[str, float]:
         """Max observed value per counter track ending in ``suffix``."""
@@ -140,6 +156,18 @@ class Tracer:
                                "name": s.name or s.kind, "cat": s.kind,
                                "ts": s.t0 * 1e6,
                                "dur": max((s.t1 - s.t0) * 1e6, 0.001)})
+        # instant events (fault injections, retransmits, aborts) render as
+        # thread-scoped markers on their wire/control lane
+        with self._lock:
+            instants = list(self.instants)
+        for lane, name, t, args in instants:
+            tid = tids.get(lane)
+            if tid is None:
+                tid = tids[lane] = len(tids) + 1
+                events.append({"ph": "M", "pid": 1, "tid": tid,
+                               "name": "thread_name", "args": {"name": lane}})
+            events.append({"ph": "i", "s": "t", "pid": 1, "tid": tid,
+                           "name": name, "ts": t * 1e6, "args": args})
         # counter tracks (per-memory bytes, …) render as area charts
         with self._lock:
             counters = {k: list(v) for k, v in self.counters.items()}

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+from ..core.faults import run_with_restarts
 from .train_loop import TrainLoop, TrainMetrics
 
 
@@ -31,28 +32,31 @@ class ElasticTrainer:
     def run(self, num_steps: int, *, world_size: int = 4,
             fail_at: Optional[int] = None,
             lose_nodes_on_failure: int = 1) -> tuple[dict, TrainMetrics, int]:
+        # one TrainMetrics for the whole supervised run: ``loop.run``
+        # mutates it in place, so progress survives across restarts
         metrics = TrainMetrics()
-        restarts = 0
-        injected = fail_at
-        while True:
-            loop = self.make_loop(world_size)
+        ctx = {"world": world_size, "fail_at": fail_at}
+
+        def attempt(restarts: int) -> dict:
+            loop = self.make_loop(ctx["world"])
             start, state = loop.restore_or_init()
             remaining = num_steps - start
             if remaining <= 0:
-                return state, metrics, world_size
-            try:
-                end, state, metrics = loop.run(
-                    remaining, start_step=start, state=state, metrics=metrics,
-                    fail_at=injected)
-                return state, metrics, world_size
-            except RuntimeError:
-                restarts += 1
-                metrics.restarts = restarts
-                if restarts > self.max_restarts:
-                    raise
-                # a failure costs us nodes: rebuild smaller and restore
-                world_size = max(1, world_size - lose_nodes_on_failure)
-                injected = None   # the fault was transient
+                return state
+            _, state, _ = loop.run(remaining, start_step=start, state=state,
+                                   metrics=metrics, fail_at=ctx["fail_at"])
+            return state
+
+        def on_failure(err: BaseException, restarts: int) -> None:
+            metrics.restarts = restarts
+            # a failure costs us nodes: rebuild smaller and restore
+            ctx["world"] = max(1, ctx["world"] - lose_nodes_on_failure)
+            ctx["fail_at"] = None   # the fault was transient
+
+        state, _ = run_with_restarts(attempt, on_failure,
+                                     max_restarts=self.max_restarts,
+                                     recoverable=(RuntimeError,))
+        return state, metrics, ctx["world"]
 
 
 def rebalance_weights(report: dict[str, float],

@@ -1,0 +1,539 @@
+"""Fault-injection chaos layer + resilient transport tests (DESIGN.md §10).
+
+Fast (unmarked) tests cover the deterministic FaultPlan, the ack/retransmit/
+backoff transport, duplicate suppression, stale-epoch tombstones, crash
+attribution, supervised elastic restart and shutdown leak accounting.
+
+``pytest -m chaos`` additionally runs the seeded soak matrix: the three
+paper applications under randomized drop/delay/duplicate/reorder/pilot-loss
+schedules across grids, asserting bit-identical results vs the fault-free
+oracle with retransmits accounted in ``comm_stats``.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Box, ExecutionAborted, FaultPlan, Runtime, all_range,
+                        neighborhood, one_to_one, read, read_write, reduction,
+                        write)
+from repro.core.allocation import Allocation, PINNED_HOST
+from repro.core.backend import WorkItem
+from repro.core.communicator import Communicator, Payload, ReceiveArbiter
+from repro.core.executor import Executor
+from repro.core.faults import (InjectedCrash, NodeFailure, TransportError,
+                               run_with_restarts)
+from repro.core.instruction_graph import Instruction, InstructionType
+from repro.core.region import Region
+
+
+# -- FaultPlan determinism ----------------------------------------------------
+def test_fault_plan_replay_determinism():
+    """Same seed => identical per-message decisions; different seed differs
+    somewhere.  Decisions hash (seed, tid, msg, attempt), never live state."""
+    keys = [((t, b), m, a) for t in range(8) for b in range(2)
+            for m in range(4) for a in (1, 2)]
+    p1 = FaultPlan(seed=42, drop=0.3, delay=0.3, duplicate=0.3, reorder=0.2)
+    p2 = FaultPlan(seed=42, drop=0.3, delay=0.3, duplicate=0.3, reorder=0.2)
+    p3 = FaultPlan(seed=43, drop=0.3, delay=0.3, duplicate=0.3, reorder=0.2)
+    f1 = [p1.payload_fate(t, m, a) for t, m, a in keys]
+    f2 = [p2.payload_fate(t, m, a) for t, m, a in keys]
+    f3 = [p3.payload_fate(t, m, a) for t, m, a in keys]
+    assert f1 == f2
+    assert f1 != f3
+    assert any(f.drop for f in f1) and any(f.duplicate for f in f1)
+    # attempts re-roll: a message is never dropped on EVERY attempt
+    for t, m, _ in keys:
+        assert not all(p1.payload_fate(t, m, a).drop for a in range(1, 30))
+
+
+def test_fault_plan_survivors_clears_crash_only():
+    p = FaultPlan(seed=1, drop=0.1, crash={1: 5}, slow={0: 0.01})
+    s = p.survivors()
+    assert s.crash == {} and s.drop == 0.1 and s.slow == {0: 0.01}
+    assert p.crash_point(1) == 5 and s.crash_point(1) is None
+
+
+# -- reliable transport units -------------------------------------------------
+def _recv_setup(comm, tid, n=4):
+    store = {}
+    box = Box((0,), (n,))
+    alloc = Allocation(mid=PINNED_HOST, bid=0, box=box)
+    store[alloc.aid] = np.full(n, -1.0)
+    arb = ReceiveArbiter(0, comm, store)
+    recv = Instruction(InstructionType.RECEIVE, node=0, transfer_id=tid,
+                       recv_region=Region.from_box(box), recv_alloc=alloc)
+    recv.state = "issued"
+    arb.begin(recv)
+    return store, alloc, arb, recv, box
+
+
+def test_retransmit_backoff_then_transport_error():
+    """A send that is never acked is retransmitted with exponential backoff
+    and reported as a TransportError after ``max_retries`` attempts."""
+    plan = FaultPlan(seed=0, drop=1.0)      # every attempt dropped
+    comm = Communicator(2, fault_plan=plan, retransmit_timeout=0.002,
+                        max_retries=3)
+    comm.isend(0, Payload(1, 0, (1, 0), Box((0,), (1,)), np.ones(1)))
+    assert comm.unacked(1) == 1
+    failures = []
+    deadline = time.monotonic() + 5.0
+    while not failures and time.monotonic() < deadline:
+        time.sleep(0.002)
+        failures = comm.pump(1)
+    assert len(failures) == 1
+    assert isinstance(failures[0], TransportError)
+    assert "unacked after" in str(failures[0]) and "tid=(1, 0)" in str(failures[0])
+    assert comm.unacked(1) == 0             # entry removed after giving up
+    assert comm.retries == 3                # one per allowed retry
+    assert comm.fault_counts["drop"] == 4   # initial + 3 retransmits
+    # logical accounting never includes recovery traffic
+    assert comm.num_messages == 1
+
+
+def test_drop_recovered_by_retransmit_bit_identical():
+    """A dropped payload is retransmitted until delivered; the landed bytes
+    match, and the retry is accounted separately from logical traffic."""
+    tid = (2, 0)
+    # pick a seed whose schedule drops attempt 1 and delivers attempt 2
+    seed = next(s for s in range(500)
+                if FaultPlan(seed=s, drop=0.5).payload_fate(tid, 0, 1).drop
+                and not FaultPlan(seed=s, drop=0.5).payload_fate(tid, 0, 2).drop)
+    comm = Communicator(2, fault_plan=FaultPlan(seed=seed, drop=0.5),
+                        retransmit_timeout=0.002)
+    store, alloc, arb, recv, box = _recv_setup(comm, tid)
+    data = np.arange(4.0)
+    comm.isend(0, Payload(1, 0, tid, box, data))
+    done = []
+    deadline = time.monotonic() + 5.0
+    while recv not in done and time.monotonic() < deadline:
+        time.sleep(0.001)
+        comm.pump(1)
+        arb.step(done)
+    assert recv in done
+    np.testing.assert_array_equal(store[alloc.aid], data)
+    assert comm.fault_counts["drop"] >= 1 and comm.retries >= 1
+    assert comm.num_messages == 1 and comm.retry_bytes >= data.nbytes
+    comm.pump(1)                            # ack drains the retransmit queue
+    assert comm.unacked(1) == 0
+
+
+def test_duplicate_delivery_suppressed_and_acked():
+    """An injected duplicate lands exactly once; every copy is acked so the
+    sender's retransmit entry clears either way."""
+    comm = Communicator(2, fault_plan=FaultPlan(seed=0, duplicate=1.0))
+    store, alloc, arb, recv, box = _recv_setup(comm, (3, 0))
+    comm.isend(0, Payload(1, 0, (3, 0), box, np.arange(4.0)))
+    assert len(comm.payload_box[0]) == 2    # duplicate injected on the wire
+    done = []
+    arb.step(done)
+    assert recv in done
+    np.testing.assert_array_equal(store[alloc.aid], np.arange(4.0))
+    assert arb.dups_suppressed == 1
+    assert comm.acks == 2                   # both copies acked
+    comm.pump(1)
+    assert comm.unacked(1) == 0
+
+
+def test_poisoned_tids_reject_late_payloads():
+    """After an epoch abort, retransmits for tombstoned transfers never land
+    (their allocations may be gone) — but are still acked."""
+    comm = Communicator(2)
+    store, alloc, arb, recv, box = _recv_setup(comm, (4, 0))
+    assert arb.poison("test abort") == 1
+    assert not arb.has_pending()
+    comm.isend(0, Payload(1, 0, (4, 0), box, np.arange(4.0)))
+    done = []
+    arb.step(done)
+    assert done == [] and arb.stale_rejected == 1
+    np.testing.assert_array_equal(store[alloc.aid], np.full(4, -1.0))
+    assert comm.acks == 1                   # the wire did deliver it
+    comm.pump(1)
+    assert comm.unacked(1) == 0
+
+
+def test_run_with_restarts_bounded():
+    calls = []
+
+    def attempt(restarts):
+        calls.append(restarts)
+        if len(calls) < 3:
+            raise RuntimeError(f"boom {len(calls)}")
+        return "ok"
+
+    seen = []
+    out, restarts = run_with_restarts(attempt, lambda e, r: seen.append(str(e)),
+                                      max_restarts=3)
+    assert out == "ok" and restarts == 2 and calls == [0, 1, 2]
+    assert seen == ["boom 1", "boom 2"]
+    with pytest.raises(RuntimeError, match="always"):
+        run_with_restarts(lambda r: (_ for _ in ()).throw(RuntimeError("always")),
+                          lambda e, r: None, max_restarts=1)
+
+
+# -- programs under test ------------------------------------------------------
+def nbody_oracle(P0, V0, steps, dt=0.01, M=1.0):
+    P, V = P0.copy(), V0.copy()
+    for _ in range(steps):
+        d = P[None, :, :] - P[:, None, :]
+        r2 = (d * d).sum(-1) + 1e-3
+        F = (d / r2[..., None] ** 1.5).sum(1)
+        V = V + M * F * dt
+        P = P + V * dt
+    return P, V
+
+
+def _nbody_parts(N=32, steps=3, dt=0.01, M=1.0):
+    rng = np.random.default_rng(7)
+    P0 = rng.normal(size=(N, 3))
+    V0 = rng.normal(size=(N, 3)) * 0.1
+
+    def build(rt, init):
+        snap = init if init is not None else {"P": P0, "V": V0}
+        return {"P": rt.buffer((N, 3), init=snap["P"], name="P"),
+                "V": rt.buffer((N, 3), init=snap["V"], name="V")}
+
+    def step(rt, bufs, i):
+        P, V = bufs["P"], bufs["V"]
+
+        def timestep(chunk, p_view, v_view):
+            Pa = p_view.get(Box((0, 0), (N, 3)))
+            d = Pa[None, :, :] - Pa[chunk.min[0]:chunk.max[0], None, :]
+            r2 = (d * d).sum(-1) + 1e-3
+            F = (d / r2[..., None] ** 1.5).sum(1)
+            v_view.set(chunk, v_view.get(chunk) + M * F * dt)
+
+        def update(chunk, v_view, p_view):
+            p_view.set(chunk, p_view.get(chunk) + v_view.get(chunk) * dt)
+
+        rt.submit(f"timestep{i}", (N, 3),
+                  [read(P, all_range()), read_write(V, one_to_one())], timestep)
+        rt.submit(f"update{i}", (N, 3),
+                  [read(V, one_to_one()), read_write(P, one_to_one())], update)
+
+    return build, step, P0, V0
+
+
+def run_nbody(nodes, devs, steps=3, **rt_kwargs):
+    build, step, P0, V0 = _nbody_parts(steps=steps)
+    with Runtime(num_nodes=nodes, devices_per_node=devs, **rt_kwargs) as rt:
+        bufs = build(rt, None)
+        for i in range(steps):
+            step(rt, bufs, i)
+        out = {k: rt.gather(b) for k, b in sorted(bufs.items())}
+        stats = rt.comm_stats()
+        assert rt.warnings == [], rt.warnings
+    return out, stats
+
+
+def run_wavesim(nodes, devs, H=16, W=12, steps=3, **rt_kwargs):
+    rng = np.random.default_rng(3)
+    u0 = np.zeros((H, W))
+    u1 = rng.normal(size=(H, W)) * 0.01
+    u1[0, :] = u1[-1, :] = u1[:, 0] = u1[:, -1] = 0.0
+    c = 0.25
+
+    def step_kernel(chunk, um_v, u_v, un_v):
+        lo, hi = chunk.min[0], chunk.max[0]
+        ext = Box((max(0, lo - 1), 0), (min(H, hi + 1), W))
+        u = u_v.get(ext)
+        um = um_v.get(chunk)
+        pad = lo - ext.min[0]
+        out = np.empty((hi - lo, W))
+        for r in range(hi - lo):
+            g = r + pad
+            gi = lo + r
+            if gi == 0 or gi == H - 1:
+                out[r] = 0.0
+                continue
+            row = u[g]
+            lap = (u[g - 1] + u[g + 1] + np.roll(row, 1) + np.roll(row, -1)
+                   - 4 * row)
+            out[r] = 2 * row - um[r] + c * lap
+            out[r, 0] = out[r, -1] = 0.0
+        un_v.set(chunk, out)
+
+    with Runtime(num_nodes=nodes, devices_per_node=devs, **rt_kwargs) as rt:
+        B = [rt.buffer((H, W), init=u0, name="um"),
+             rt.buffer((H, W), init=u1, name="u"),
+             rt.buffer((H, W), init=np.zeros((H, W)), name="un")]
+        for s in range(steps):
+            um, u, un = B[s % 3], B[(s + 1) % 3], B[(s + 2) % 3]
+            rt.submit(f"wave{s}", (H, W),
+                      [read(um, one_to_one()), read(u, neighborhood((1, 0))),
+                       write(un, one_to_one())], step_kernel)
+        out = {"u": rt.gather(B[(steps + 1) % 3])}
+        stats = rt.comm_stats()
+        assert rt.warnings == [], rt.warnings
+    return out, stats
+
+
+def run_allreduce(nodes, devs, n=97, **rt_kwargs):
+    rng = np.random.default_rng(23)
+    data = rng.normal(size=n) * 10.0 ** rng.integers(-12, 12, size=n)
+    vdata = rng.normal(size=(n, 3))
+    with Runtime(num_nodes=nodes, devices_per_node=devs, host_threads=2,
+                 **rt_kwargs) as rt:
+        X = rt.buffer((n,), init=data, name="X")
+        E = rt.buffer((1,), init=np.zeros(1), name="E")
+        Y = rt.buffer((n, 3), init=vdata, name="Y")
+        W = rt.buffer((3,), init=np.zeros(3), name="W")
+
+        def ke(chunk, xv, red):
+            red.contribute(xv.get(chunk))
+
+        def kw(chunk, yv, red):
+            red.contribute(yv.get(Box((chunk.min[0], 0), (chunk.max[0], 3))))
+
+        rt.submit("e", (n,), [read(X, one_to_one()), reduction(E, "sum")], ke)
+        rt.submit("w", (n, 3), [read(Y, one_to_one()), reduction(W, "sum")], kw)
+        out = {"E": rt.gather(E), "W": rt.gather(W)}
+        stats = rt.comm_stats()
+        assert rt.warnings == [], rt.warnings
+    return out, stats
+
+
+PROGRAMS = {"nbody": run_nbody, "wavesim": run_wavesim,
+            "allreduce": run_allreduce}
+_oracles: dict = {}
+
+
+def oracle(prog, nodes, devs):
+    key = (prog, nodes, devs)
+    if key not in _oracles:
+        _oracles[key] = PROGRAMS[prog](nodes, devs)[0]
+    return _oracles[key]
+
+
+# -- fault-free invariants ----------------------------------------------------
+def test_zero_fault_transport_invariants():
+    """On a clean wire every sequenced message is acked exactly once and no
+    recovery traffic exists."""
+    out, stats = run_nbody(2, 1)
+    ref = oracle("nbody", 2, 1)
+    for k in out:
+        np.testing.assert_array_equal(out[k], ref[k])
+    assert stats["retries"] == 0 and stats["retry_bytes"] == 0
+    assert stats["dups_suppressed"] == 0 and stats["stale_rejected"] == 0
+    assert stats["aborts"] == 0
+    assert all(v == 0 for v in stats["faults_injected"].values())
+    assert stats["messages"] > 0 and stats["acks"] == stats["messages"]
+
+
+def test_unreliable_opt_out_still_correct():
+    """``reliable=False`` retains the historical fire-and-forget wire."""
+    out, stats = run_nbody(2, 1, reliable=False)
+    ref = oracle("nbody", 2, 1)
+    for k in out:
+        np.testing.assert_array_equal(out[k], ref[k])
+    assert stats["acks"] == 0 and stats["retries"] == 0
+
+
+def test_wire_faults_require_reliable_transport():
+    with pytest.raises(ValueError, match="reliable"):
+        Communicator(2, reliable=False, fault_plan=FaultPlan(drop=0.1))
+
+
+def test_fault_smoke_bit_identical():
+    """One seeded chaos schedule in the default (tier-1) suite: results are
+    bit-identical to the oracle and retransmits are accounted."""
+    plan = FaultPlan(seed=5, drop=0.08, duplicate=0.08, delay=0.08,
+                     delay_s=0.004, pilot_drop=0.2)
+    out, stats = run_wavesim(2, 2, fault_plan=plan, retransmit_timeout=0.01)
+    ref = oracle("wavesim", 2, 2)
+    np.testing.assert_array_equal(out["u"], ref["u"])
+    injected = stats["faults_injected"]
+    assert sum(injected.values()) > 0, injected
+    assert stats["retries"] >= injected["drop"]
+    assert stats["acks"] >= stats["messages"]
+
+
+# -- crash attribution + watchdog ---------------------------------------------
+def test_crashed_rank_attributed_quickly():
+    """A silently fail-stopped rank is named by peers within ~2s: the
+    survivor's watchdog reports the stuck instruction and the dead peer, and
+    ``sync`` aggregates every failed rank into one diagnosable error."""
+    plan = FaultPlan(crash={1: 8})
+    rt = Runtime(num_nodes=2, devices_per_node=1, fault_plan=plan,
+                 watchdog_timeout=0.3)
+    try:
+        H, W = 12, 8
+        u = rt.buffer((H, W), init=np.ones((H, W)), name="u")
+        v = rt.buffer((H, W), init=np.zeros((H, W)), name="v")
+
+        def k(chunk, uv, vv):
+            lo, hi = chunk.min[0], chunk.max[0]
+            ext = Box((max(0, lo - 1), 0), (min(H, hi + 1), W))
+            vv.set(chunk, uv.get(ext)[lo - ext.min[0]:lo - ext.min[0] + hi - lo])
+
+        for s in range(4):
+            a, b = (u, v) if s % 2 == 0 else (v, u)
+            rt.submit(f"k{s}", (H, W),
+                      [read(a, neighborhood((1, 0))), write(b, one_to_one())], k)
+        t0 = time.monotonic()
+        with pytest.raises(ExecutionAborted) as ei:
+            rt.sync(timeout=30.0)
+        elapsed = time.monotonic() - t0
+    finally:
+        rt.shutdown()
+    assert elapsed < 2.0, f"attribution took {elapsed:.2f}s"
+    msg = str(ei.value)
+    assert "N1" in msg and "InjectedCrash" in msg
+    failures = dict(ei.value.failures)
+    assert isinstance(failures[1], InjectedCrash)
+    # the survivor either saw the watchdog fire (naming the dead peer) or
+    # was healthy enough to finish — if it failed, the error is attributed
+    if 0 in failures:
+        assert isinstance(failures[0], NodeFailure)
+        assert 1 in failures[0].dead_peers
+    assert rt.executors[1].crashed
+
+
+def test_watchdog_clean_run_never_fires():
+    out, stats = run_nbody(2, 1, watchdog_timeout=5.0)
+    ref = oracle("nbody", 2, 1)
+    for k in out:
+        np.testing.assert_array_equal(out[k], ref[k])
+    assert stats["aborts"] == 0
+
+
+def test_slow_rank_completes_correctly():
+    """A straggler rank (injected per-kernel sleep) delays but never corrupts."""
+    plan = FaultPlan(slow={1: 0.002})
+    out, _ = run_nbody(2, 1, fault_plan=plan)
+    ref = oracle("nbody", 2, 1)
+    for k in out:
+        np.testing.assert_array_equal(out[k], ref[k])
+
+
+# -- supervised elastic restart ----------------------------------------------
+def test_run_supervised_no_faults():
+    build, step, P0, V0 = _nbody_parts(steps=4)
+    res = Runtime.run_supervised(build, step, steps=4, num_nodes=2,
+                                 checkpoint_every=2, watchdog_timeout=None)
+    Pe, Ve = nbody_oracle(P0, V0, 4)
+    assert res.restarts == 0 and res.world == 2 and res.steps == 4
+    np.testing.assert_array_equal(res.results["P"], Pe)
+    np.testing.assert_array_equal(res.results["V"], Ve)
+
+
+def test_run_supervised_crash_restart_bit_identical():
+    """A rank crash mid-run triggers teardown, elastic shrink and resubmission
+    from the last snapshot; the final buffers are bit-identical to the
+    fault-free oracle and restarts stay bounded."""
+    build, step, P0, V0 = _nbody_parts(steps=4)
+    plan = FaultPlan(crash={1: 30})
+    res = Runtime.run_supervised(build, step, steps=4, num_nodes=2,
+                                 checkpoint_every=1, fault_plan=plan,
+                                 watchdog_timeout=0.3, sync_timeout=30.0)
+    Pe, Ve = nbody_oracle(P0, V0, 4)
+    assert res.restarts == 1, res
+    assert res.world == 1                   # shrank by the lost rank
+    np.testing.assert_array_equal(res.results["P"], Pe)
+    np.testing.assert_array_equal(res.results["V"], Ve)
+
+
+def test_run_supervised_exhausts_restarts():
+    def build(rt, init):
+        return {"B": rt.buffer((4,), init=np.zeros(4), name="B")}
+
+    def step(rt, bufs, i):
+        def bad(chunk, v):
+            raise RuntimeError("injected permanent failure")
+        rt.submit(f"s{i}", (4,), [read_write(bufs["B"], one_to_one())], bad)
+
+    with pytest.raises(ExecutionAborted, match="permanent failure"):
+        Runtime.run_supervised(build, step, steps=1, num_nodes=1,
+                               max_restarts=1, watchdog_timeout=None)
+
+
+# -- shutdown hygiene ---------------------------------------------------------
+def test_shutdown_reports_leaked_threads():
+    """A backend lane wedged in user code cannot be joined: shutdown counts
+    it, warns, and still tears the rest down instead of hanging."""
+    import threading
+    release = threading.Event()
+    comm = Communicator(1)
+    ex = Executor(0, 1, comm, host_threads=2)
+    ex.backend.host_pool.submit(WorkItem(fn=lambda tag: release.wait(30.0)))
+    time.sleep(0.05)                        # let a lane pick the item up
+    ex.errors.append(RuntimeError("injected failure"))
+    try:
+        leaked = ex.shutdown()
+        assert leaked >= 1
+        assert ex.leaked_threads == leaked
+        assert any("leak" in w or "join" in w for w in ex.warnings), ex.warnings
+    finally:
+        release.set()
+
+
+def test_clean_shutdown_thread_report():
+    with Runtime(2, 1) as rt:
+        B = rt.buffer((8,), init=np.zeros(8), name="B")
+        rt.submit("k", (8,), [read_write(B, one_to_one())],
+                  lambda c, v: v.set(c, v.get(c) + 1))
+        rt.sync()
+    rep = rt.thread_report()
+    assert rep["total_leaked"] == 0 and rep["warnings"] == []
+    assert all(r["leaked_threads"] == 0 for r in rt.memory_report())
+
+
+# -- chaos soak matrix (pytest -m chaos) --------------------------------------
+CHAOS_GRIDS = [(2, 2), (3, 1)]
+CHAOS_SEEDS_PER_CELL = 4
+
+
+def _chaos_cases():
+    cases = []
+    for pi, prog in enumerate(sorted(PROGRAMS)):
+        for gi, grid in enumerate(CHAOS_GRIDS):
+            base = (pi * len(CHAOS_GRIDS) + gi) * CHAOS_SEEDS_PER_CELL
+            for s in range(CHAOS_SEEDS_PER_CELL):
+                cases.append((prog, grid, base + s))
+    return cases       # 3 progs x 2 grids x 4 = 24 distinct seeds
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("prog,grid,seed", _chaos_cases())
+def test_chaos_determinism(prog, grid, seed):
+    """Under a seeded non-crash fault schedule the program's results are
+    bit-identical to the fault-free oracle, and the recovery traffic is
+    visible in ``comm_stats`` without polluting logical counters."""
+    nodes, devs = grid
+    plan = FaultPlan(seed=seed, drop=0.05, duplicate=0.05, delay=0.05,
+                     delay_s=0.004, reorder=0.05, reorder_s=0.001,
+                     pilot_drop=0.15)
+    out, stats = PROGRAMS[prog](nodes, devs, fault_plan=plan,
+                                retransmit_timeout=0.01)
+    ref = oracle(prog, nodes, devs)
+    for k in ref:
+        np.testing.assert_array_equal(out[k], ref[k], err_msg=f"{prog} {k}")
+    injected = stats["faults_injected"]
+    # every dropped attempt forces a retransmit; dups are suppressed on land
+    assert stats["retries"] >= injected["drop"]
+    assert stats["acks"] >= stats["messages"]
+    if injected["dup"]:
+        assert stats["dups_suppressed"] > 0
+    # logical accounting must match the fault-free run exactly
+    ref_stats = PROGRAMS[prog](nodes, devs)[1]
+    assert stats["messages"] == ref_stats["messages"]
+    assert stats["bytes"] == ref_stats["bytes"]
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", range(100, 104))
+def test_chaos_crash_plus_wire_faults_supervised(seed):
+    """Crash + wire faults together: supervised execution still converges to
+    the bit-identical result with bounded restarts."""
+    build, step, P0, V0 = _nbody_parts(steps=4)
+    plan = FaultPlan(seed=seed, drop=0.04, duplicate=0.04, delay=0.04,
+                     delay_s=0.003, crash={1: 20 + 7 * (seed % 4)})
+    res = Runtime.run_supervised(build, step, steps=4, num_nodes=2,
+                                 checkpoint_every=1, fault_plan=plan,
+                                 watchdog_timeout=0.4, sync_timeout=30.0,
+                                 retransmit_timeout=0.01)
+    Pe, Ve = nbody_oracle(P0, V0, 4)
+    assert res.restarts <= 3
+    np.testing.assert_array_equal(res.results["P"], Pe)
+    np.testing.assert_array_equal(res.results["V"], Ve)

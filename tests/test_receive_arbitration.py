@@ -242,6 +242,147 @@ def test_gather_and_push_traffic_do_not_cross():
     np.testing.assert_array_equal(store[galloc.aid], [[0.0], [2.0]])
 
 
+def _redeliver(comm, target, payload):
+    """Simulate a retransmit race: the sender re-delivers an already-landed
+    sequenced copy (same seq) just before the ack reached it."""
+    with comm._cv:
+        comm.payload_box[target].append(payload)
+        comm._cv.notify_all()
+
+
+def test_duplicate_push_payload_lands_exactly_once():
+    """A duplicated sequenced payload is acked twice but landed once —
+    re-landing would re-copy stale bytes over a region a later writer may
+    already own."""
+    union = Box((0,), (4,))
+    comm, store, alloc, arb = setup(union)
+    tid = (20, 0)
+    recv = Instruction(InstructionType.RECEIVE, node=0, transfer_id=tid,
+                       recv_region=Region.from_box(union), recv_alloc=alloc)
+    recv.state = "issued"
+    arb.begin(recv)
+    p = Payload(1, 0, tid, union, np.arange(4.0))
+    comm.isend(0, p)
+    _redeliver(comm, 0, p)
+    done = drain(arb)
+    assert recv in done
+    assert arb.dups_suppressed == 1
+    assert comm.acks == 2                    # every delivered copy is acked
+    np.testing.assert_array_equal(store[alloc.aid], np.arange(4.0))
+    # overwrite the landed region, then a THIRD copy straggles in: suppressed
+    store[alloc.aid][:] = 99.0
+    _redeliver(comm, 0, p)
+    drain(arb)
+    assert arb.dups_suppressed == 2
+    np.testing.assert_array_equal(store[alloc.aid], np.full(4, 99.0))
+
+
+def test_duplicate_coll_fragment_after_scratch_freed():
+    """A retransmitted collective fragment arrives AFTER the one-shot scratch
+    allocation was freed: duplicate suppression must reject it before any
+    landing logic touches the (gone) allocation."""
+    from repro.core.instruction_graph import CollFragment
+    comm = Communicator(2)
+    store = {}
+    scr = Allocation(mid=PINNED_HOST, bid=None, box=Box((0,), (4,)))
+    store[scr.aid] = np.full(4, -1.0)
+    arb = ReceiveArbiter(0, comm, store)
+    tid = (21, 0, 3, 1)
+    rc = Instruction(InstructionType.COLL_RECV, node=0, transfer_id=tid,
+                     coll_source=1, coll_allocs=(scr,),
+                     coll_expect=((0, 0, 4),),
+                     coll_land=(CollFragment(key=(0, 0, 4), alloc=scr,
+                                             srange=(0, 4)),))
+    rc.state = "issued"
+    arb.begin(rc)
+    p = Payload(source=1, msg_id=0, transfer_id=tid,
+                fragments=[((0, 0, 4), np.arange(4.0))])
+    comm.isend(0, p)
+    done = drain(arb)
+    assert rc in done
+    del store[scr.aid]                       # executor frees the scratch
+    _redeliver(comm, 0, p)
+    drain(arb)                               # must not KeyError into store
+    assert arb.dups_suppressed == 1
+    assert comm.acks == 2
+
+
+def test_pilot_arriving_after_payload_is_harmless():
+    """Eager wires can reorder pilot behind payload; the late pilot only
+    feeds stall attribution and never disturbs the landed transfer."""
+    union = Box((0,), (4,))
+    comm, store, alloc, arb = setup(union)
+    tid = (22, 0)
+    recv = Instruction(InstructionType.RECEIVE, node=0, transfer_id=tid,
+                       recv_region=Region.from_box(union), recv_alloc=alloc)
+    recv.state = "issued"
+    arb.begin(recv)
+    comm.isend(0, Payload(1, 0, tid, union, np.arange(4.0)))
+    done = drain(arb)
+    assert recv in done
+    comm.post_pilot(Pilot(source=1, target=0, transfer_id=tid, box=union,
+                          msg_id=0))
+    assert drain(arb) == []
+    np.testing.assert_array_equal(store[alloc.aid], np.arange(4.0))
+    # the completed transfer's announcement is garbage-collected with it, so
+    # late pilots leave no residual arbiter state behind
+    assert not arb.has_pending()
+    assert not arb.announced.get(tid)
+
+
+def test_stale_tid_traffic_from_aborted_epoch_rejected():
+    """After ``poison`` (an EPOCH_ABORT), late pilots and payloads for the
+    tombstoned transfer are counted and dropped — their allocations belong
+    to the dead epoch."""
+    union = Box((0,), (4,))
+    comm, store, alloc, arb = setup(union)
+    tid = (23, 0)
+    recv = Instruction(InstructionType.RECEIVE, node=0, transfer_id=tid,
+                       recv_region=Region.from_box(union), recv_alloc=alloc)
+    recv.state = "issued"
+    arb.begin(recv)
+    assert arb.poison("epoch aborted by peer") == 1
+    comm.post_pilot(Pilot(source=1, target=0, transfer_id=tid, box=union,
+                          msg_id=0))
+    comm.isend(0, Payload(1, 0, tid, union, np.arange(4.0)))
+    assert drain(arb) == []
+    assert arb.stale_rejected == 1
+    assert tid not in arb.announced          # stale pilots not recorded
+    assert not arb.has_pending()
+    np.testing.assert_array_equal(store[alloc.aid], np.full(4, -1.0))
+    assert comm.acks == 1                    # transport-level delivery stands
+
+
+def test_wrong_source_coll_fragment_never_lands():
+    """A packed round message from a rank that is NOT the schedule's source
+    for this COLL_RECV must not land or complete it (collective rounds are
+    source-addressed, unlike push traffic)."""
+    from repro.core.instruction_graph import CollFragment
+    comm = Communicator(3)
+    store = {}
+    scr = Allocation(mid=PINNED_HOST, bid=None, box=Box((0,), (4,)))
+    store[scr.aid] = np.full(4, -1.0)
+    arb = ReceiveArbiter(0, comm, store)
+    tid = (24, 0, 3, 1)
+    rc = Instruction(InstructionType.COLL_RECV, node=0, transfer_id=tid,
+                     coll_source=1, coll_allocs=(scr,),
+                     coll_expect=((0, 0, 4),),
+                     coll_land=(CollFragment(key=(0, 0, 4), alloc=scr,
+                                             srange=(0, 4)),))
+    rc.state = "issued"
+    arb.begin(rc)
+    comm.isend(0, Payload(source=2, msg_id=0, transfer_id=tid,
+                          fragments=[((0, 0, 4), np.full(4, 66.0))]))
+    assert drain(arb) == []
+    np.testing.assert_array_equal(store[scr.aid], np.full(4, -1.0))
+    # the true source arrives: lands and completes
+    comm.isend(0, Payload(source=1, msg_id=0, transfer_id=tid,
+                          fragments=[((0, 0, 4), np.arange(4.0))]))
+    done = drain(arb)
+    assert rc in done
+    np.testing.assert_array_equal(store[scr.aid], np.arange(4.0))
+
+
 def test_interleaved_transfers_do_not_cross():
     """Two concurrent transfer ids never land into each other's buffers."""
     union = Box((0,), (4,))

@@ -71,6 +71,29 @@ def test_checkpoint_manager_async(tmp_path):
     assert len(committed) == 2
 
 
+def test_checkpoint_manager_close_joins_inflight_save(tmp_path):
+    """Fault-triggered teardown: ``close`` joins the in-flight async save —
+    no orphaned writer thread racing the next restore — without raising, and
+    the manager stays usable for the restarted run."""
+    mgr = CheckpointManager(tmp_path, interval=1, keep=3, async_save=True)
+    tree = {"w": np.random.default_rng(1).normal(size=(256, 64))}
+    mgr.save(5, tree)
+    assert mgr.close() is None
+    assert mgr._thread is None              # writer joined, not abandoned
+    assert mgr.latest == 5                  # the save was committed, not torn
+    # a failing save: close() RETURNS the error instead of raising into the
+    # (already-failing) teardown path, and clears it
+    blocker = tmp_path / "step_000007"
+    blocker.write_text("not a directory")   # save will trip over this file
+    mgr.save(7, tree)
+    err = mgr.close()
+    assert err is not None
+    assert mgr.close() is None              # error consumed, manager reusable
+    mgr.save(9, tree)
+    mgr.wait()
+    assert mgr.latest == 9
+
+
 # -- IDAG-orchestrated training -----------------------------------------------------
 def test_train_loop_loss_decreases(tmp_path):
     loop = TrainLoop(CFG, global_batch=4, seq_len=32,
