@@ -1,0 +1,87 @@
+"""CI perf-regression gate (DESIGN.md §11.5).
+
+Compares a freshly generated ``BENCH_scheduler.json`` against the committed
+baseline and fails when any tracked latency key (``*_us``) regresses by more
+than the tolerance (default 25% — wide enough for shared-runner noise, tight
+enough to catch an accidental O(n) slip on the issue path).
+
+Only latency keys are gated: throughput keys (``*_per_s``) and structural
+counts (``peak_retained_*``, ``*_msgs``) have their own acceptance tests,
+and nested dicts (e.g. the ``baseline_pre_pr`` archive) are skipped.
+
+Usage:  python benchmarks/check_regression.py BASELINE.json FRESH.json
+        [--tolerance 0.25]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def gated_keys(baseline: dict, fresh: dict) -> list[str]:
+    """Tracked keys: numeric ``*_us`` values present in both snapshots."""
+    out = []
+    for key, base in baseline.items():
+        if not key.endswith("_us"):
+            continue
+        if not isinstance(base, (int, float)):
+            continue
+        if not isinstance(fresh.get(key), (int, float)):
+            continue
+        out.append(key)
+    return sorted(out)
+
+
+def compare(baseline: dict, fresh: dict,
+            tolerance: float) -> tuple[list[str], list[str]]:
+    """Returns (regressions, report_lines)."""
+    regressions: list[str] = []
+    lines: list[str] = []
+    keys = gated_keys(baseline, fresh)
+    if not keys:
+        lines.append("no comparable *_us keys — nothing gated")
+        return regressions, lines
+    for key in keys:
+        base, new = float(baseline[key]), float(fresh[key])
+        if base <= 0:
+            continue
+        ratio = new / base
+        status = "ok"
+        if ratio > 1.0 + tolerance:
+            status = "REGRESSION"
+            regressions.append(key)
+        elif ratio < 1.0 - tolerance:
+            status = "improved"
+        lines.append(f"  {key:<40} {base:12.1f} -> {new:12.1f}  "
+                     f"({ratio:6.2f}x)  {status}")
+    return regressions, lines
+
+
+def main(argv: list[str]) -> int:
+    tolerance = 0.25
+    if "--tolerance" in argv:
+        i = argv.index("--tolerance")
+        tolerance = float(argv[i + 1])
+        argv = argv[:i] + argv[i + 2:]
+    if len(argv) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    baseline = json.loads(Path(argv[0]).read_text())
+    fresh = json.loads(Path(argv[1]).read_text())
+    regressions, lines = compare(baseline, fresh, tolerance)
+    print(f"perf gate: {argv[0]} vs {argv[1]} "
+          f"(tolerance +{tolerance:.0%})")
+    for ln in lines:
+        print(ln)
+    if regressions:
+        print(f"FAIL: {len(regressions)} key(s) regressed "
+              f">{tolerance:.0%}: {', '.join(regressions)}")
+        return 1
+    print("PASS: no tracked latency key regressed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

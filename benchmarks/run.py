@@ -413,6 +413,97 @@ def bench_scheduler_throughput() -> None:
 
 
 # ---------------------------------------------------------------------------
+# observability (DESIGN.md §11): flight-recorder overhead on the executor
+# issue path, and critical-path analyzer wall time on a real trace
+
+
+def bench_observability() -> None:
+    """Instrumentation cost + analyzer throughput.
+
+    The §11 overhead budget: a bare executor (no tracer, no metrics) must
+    pay nothing for the observability hooks — ``obs_issue_plain_us`` is the
+    same configuration as ``executor_issue_us`` and is gated by the same CI
+    regression check.  The metrics/traced variants quantify what turning
+    instrumentation ON costs; the variants run interleaved so container
+    noise hits all three equally.
+    """
+    from repro.core import MetricsRegistry, Tracer, critical_path
+    from repro.core.command_graph import Command, CommandType
+    from repro.core.communicator import Communicator
+    from repro.core.executor import Executor
+    from repro.core.instruction_graph import Instruction, InstructionType
+    from repro.core.task_graph import DepKind
+
+    width, depth = 48, 25
+
+    def harness(tracer, metrics) -> tuple[float, int]:
+        comm = Communicator(1)
+        ex = Executor(0, 1, comm, host_threads=2, tracer=tracer,
+                      metrics=metrics)
+        try:
+            noop = lambda chunk: None  # noqa: E731
+            last: list = [None] * width
+            instrs = []
+            for d in range(depth):
+                for w in range(width):
+                    i = Instruction(InstructionType.HOST_TASK, node=0,
+                                    queue=("host",), kernel_fn=noop,
+                                    name=f"c{w}.{d}")
+                    if last[w] is not None:
+                        i.add_dependency(last[w], DepKind.TRUE)
+                    last[w] = i
+                    instrs.append(i)
+            ecmd = Command(CommandType.EPOCH, node=0)
+            epoch = Instruction(InstructionType.EPOCH, node=0, queue=("host",),
+                                name="bench-epoch", command=ecmd)
+            for tail in last:
+                epoch.add_dependency(tail, DepKind.SYNC)
+            instrs.append(epoch)
+            t0 = time.perf_counter()
+            ex.submit(instrs)
+            ex.wait_epoch(ecmd.cid, timeout=120)
+            return time.perf_counter() - t0, len(instrs)
+        finally:
+            ex.shutdown()
+
+    variants = {
+        "plain": lambda: harness(None, None),
+        "metrics": lambda: harness(None, MetricsRegistry()),
+        "traced": lambda: harness(Tracer(), MetricsRegistry()),
+    }
+    best: dict[str, tuple[float, int]] = {}
+    for _ in range(5):                   # interleaved best-of-5 per variant
+        for key, fn in variants.items():
+            r = fn()
+            if key not in best or r[0] < best[key][0]:
+                best[key] = r
+    plain_us = best["plain"][0] / best["plain"][1] * 1e6
+    for key in ("plain", "metrics", "traced"):
+        wall, n = best[key]
+        per_us = wall / n * 1e6
+        pct = 100.0 * (per_us - plain_us) / plain_us if key != "plain" else 0.0
+        emit(f"obs/issue_{key}", per_us,
+             f"instr={n};overhead_pct={pct:+.1f}")
+        SCHED_JSON[f"obs_issue_{key}_us"] = per_us
+        if key != "plain":
+            SCHED_JSON[f"obs_overhead_{key}_pct"] = pct
+
+    # -- critical-path analyzer wall time on an nbody-200 trace --------------
+    with Runtime(num_nodes=1, devices_per_node=2, trace=True) as rt:
+        _nbody_app(rt, N=256, steps=200, devices=2)
+        tracer = rt.tracer
+        n_rec = len(tracer.records)
+        t_walk = _time_loop(lambda: critical_path(tracer))
+        rep = critical_path(tracer)
+        maybe_export_trace(tracer)
+    emit("obs/critical_path_walk", t_walk * 1e6,
+         f"records={n_rec};chain={rep.chain_len};"
+         f"sched_frac={rep.scheduler_fraction:.4f}")
+    SCHED_JSON["obs_critpath_us"] = t_walk * 1e6
+    SCHED_JSON["obs_critpath_records"] = float(n_rec)
+
+
+# ---------------------------------------------------------------------------
 # memory layer (DESIGN.md §8): steady-state throughput + spill overhead
 # at device budgets of 100% / 50% / 25% of the measured working set
 
@@ -850,6 +941,7 @@ BENCHES = {
     "bench_memory": bench_memory,
     "bench_faults": bench_faults,
     "bench_scheduler_throughput": bench_scheduler_throughput,
+    "bench_observability": bench_observability,
     "bench_roofline": bench_roofline,
 }
 

@@ -13,6 +13,8 @@ from .faults import (EpochTimeoutError, ExecutionAborted, FaultError,
 from .instruction_graph import (EpochAbort, IdagGenerator, Instruction,
                                 InstructionType, Pilot)
 from .memory import MemoryManager, MemoryStats, MemState
+from .observability import (CriticalPathReport, Histogram, MetricsRegistry,
+                            classify_wait, critical_path)
 from .reduction import Reduction, ReductionOp, reduction
 from .lookahead import LookaheadScheduler
 from .range_mapper import (all_range, fixed, fixed_row, neighborhood,
@@ -32,6 +34,8 @@ __all__ = [
     "run_with_restarts",
     "EpochAbort", "IdagGenerator", "Instruction", "InstructionType", "Pilot",
     "MemoryManager", "MemoryStats", "MemState",
+    "CriticalPathReport", "Histogram", "MetricsRegistry",
+    "classify_wait", "critical_path",
     "Reduction", "ReductionOp", "reduction",
     "LookaheadScheduler",
     "all_range", "fixed", "fixed_row", "neighborhood", "one_to_one",

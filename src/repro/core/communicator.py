@@ -77,10 +77,14 @@ class Communicator:
     def __init__(self, num_nodes: int, *, reliable: bool = True,
                  fault_plan: Optional[FaultPlan] = None,
                  retransmit_timeout: float = 0.05, max_retries: int = 12,
-                 tracer=None):
+                 tracer=None, metrics=None):
         self.num_nodes = num_nodes
         self.reliable = reliable
         self.plan = fault_plan
+        # observability (DESIGN.md §11): transport stall events mirrored into
+        # the unified registry under ``comm.*`` (these are the events the
+        # executor's transport-wait attribution points at)
+        self.metrics = metrics
         if fault_plan is not None and fault_plan.has_wire_faults() and not reliable:
             raise ValueError("wire faults require the reliable transport "
                              "(reliable=True), else delivery is not guaranteed")
@@ -142,6 +146,8 @@ class Communicator:
                 and self.plan.pilot_dropped(pilot.transfer_id, pilot.msg_id)):
             with self._cv:
                 self.fault_counts["pilot_drop"] += 1
+            if self.metrics is not None:
+                self.metrics.counter("comm.pilot_drops")
             if self.tracer is not None:
                 self.tracer.instant(f"wire.N{pilot.target}", "pilot_drop",
                                     {"tid": str(pilot.transfer_id)})
@@ -188,6 +194,8 @@ class Communicator:
                 # the retransmit entry stays outstanding; a later attempt
                 # re-rolls its fate
                 self.fault_counts["drop"] += 1
+                if self.metrics is not None:
+                    self.metrics.counter("comm.drops")
                 if self.tracer is not None:
                     self.tracer.instant(
                         f"wire.N{target}", "drop",
@@ -244,6 +252,10 @@ class Communicator:
                 e.next_t = now + self.retransmit_timeout * (1 << (e.attempts - 1))
                 self.retries += 1
                 self.retry_bytes += e.payload.nbytes()
+                if self.metrics is not None:
+                    self.metrics.counter("comm.retransmits")
+                    self.metrics.counter("comm.retry_bytes",
+                                         e.payload.nbytes())
                 if self.tracer is not None:
                     self.tracer.instant(
                         f"wire.N{node}", "retransmit",
@@ -284,6 +296,8 @@ class Communicator:
                     self.ctrl_box[n].append(abort)
                     self._notify(n)
             self._cv.notify_all()
+        if self.metrics is not None:
+            self.metrics.counter("comm.aborts")
         if self.tracer is not None:
             self.tracer.instant(f"wire.N{abort.origin}", "epoch_abort",
                                 {"cause": abort.cause})

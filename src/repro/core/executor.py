@@ -31,6 +31,7 @@ from .faults import (EpochTimeoutError, FaultPlan, InjectedCrash, NodeFailure,
                      PeerAborted)
 from .instruction_graph import (AccessorBinding, EpochAbort, Instruction,
                                 InstructionType)
+from .observability import WAIT_CLASSES, WAIT_DEP, WAIT_OF, WAIT_QUEUE
 from .region import Box, Region
 
 
@@ -156,7 +157,7 @@ class Executor:
 
     def __init__(self, node: int, num_devices: int, comm: Communicator,
                  *, queues_per_device: int = 2, host_threads: int = 4,
-                 check_bounds: bool = False, tracer=None,
+                 check_bounds: bool = False, tracer=None, metrics=None,
                  fault_plan: Optional[FaultPlan] = None,
                  watchdog_timeout: Optional[float] = None):
         self.node = node
@@ -167,6 +168,26 @@ class Executor:
         self.arbiter = ReceiveArbiter(node, comm, self.store)
         self.check_bounds = check_bounds
         self.tracer = tracer
+        # observability (DESIGN.md §11): wait-state attribution + issue-path
+        # histograms.  ``_obs`` gates every added stamp/record so that a
+        # bare executor (tracer=None, metrics=None) pays nothing.
+        self.metrics = metrics
+        self._obs = tracer is not None or metrics is not None
+        # duck-typed tracer doubles get per-instruction issue() callbacks;
+        # the standard Tracer opts out via ``issue_events = False`` (one
+        # less lock round-trip on the issue hot path)
+        self._issue_tracer = tracer if (
+            tracer is not None and getattr(tracer, "issue_events", True)) \
+            else None
+        if metrics is not None:
+            p = f"executor.N{node}."
+            self._h_issue = metrics.histogram(p + "issue_us")
+            self._h_queue = metrics.histogram(p + "wait_queue_us")
+            self._h_wait = {c: metrics.histogram(p + f"wait_{c}_us")
+                            for c in WAIT_CLASSES if c != WAIT_QUEUE}
+        else:
+            self._h_issue = self._h_queue = None
+            self._h_wait = {}
         self.errors: list[BaseException] = []
         # real materialized bytes per memory id, accounted at ALLOC/FREE
         # execution time (the compile-time model lives in the scheduler's
@@ -449,9 +470,14 @@ class Executor:
         self._retire_log.append(instr)
         self._remaining[instr.iid] = unmet
         if unmet == 0:
-            instr._ready_t = time.perf_counter()
+            t = time.perf_counter()
+            if self._obs:
+                instr._reg_t = t
+            instr._ready_t = t
             self._ready.append(instr)
         else:
+            if self._obs:
+                instr._reg_t = time.perf_counter()
             self._blocked[instr.iid] = instr
             self._recheck.append(instr)     # deps may already sit on one queue
 
@@ -471,6 +497,13 @@ class Executor:
                 if eager_q is not None:
                     del self._blocked[instr.iid]
                     instr._ready_t = time.perf_counter()
+                    if self._obs:
+                        # eager issue serializes behind its still-pending
+                        # deps on one in-order queue: blame the last one
+                        for dep, _ in instr.dependencies:
+                            if dep.state != "done":
+                                instr._blame_iid = dep.iid
+                                instr._blame_it = dep.itype
                     self._issue(instr, queue=eager_q)    # eager issue
                     issued_any = True
         return issued_any
@@ -513,19 +546,30 @@ class Executor:
                     f"#{self._issued_count} ({instr!r})"), broadcast=False)
                 return
         instr.state = "issued"
-        self._issue_latency.append(time.perf_counter() - instr._ready_t)
-        if self.tracer is not None:
-            self.tracer.issue(self.node, instr)
+        t = time.perf_counter()
+        self._issue_latency.append(t - instr._ready_t)
+        if self._issue_tracer is not None:
+            # issue-time visibility (open span): lets live observers see
+            # eager issue before the instruction completes; the standard
+            # Tracer opts out (spans derive from completion records)
+            self._issue_tracer.issue(self.node, instr)
         it = instr.itype
         if it in (InstructionType.RECEIVE, InstructionType.SPLIT_RECEIVE,
                   InstructionType.AWAIT_RECEIVE, InstructionType.GATHER_RECEIVE,
                   InstructionType.COLL_RECV):
+            if self._obs:
+                instr._start_t = t      # arbiter-handled: no lane dequeue
             self.arbiter.begin(instr)       # completion via arbiter polling
             return
         if it in (InstructionType.HORIZON, InstructionType.EPOCH):
+            if self._obs:
+                instr._start_t = t
             self._mark_done(instr, 0.0)     # pure graph-sync: complete inline
             return
-        item = WorkItem(fn=self._dispatch[it], tag=instr)
+        # with observability on, the lane thread stamps the dequeue time so
+        # queue-wait (lane contention) separates from execution time
+        fn = self._run_timed if self._obs else self._dispatch[it]
+        item = WorkItem(fn=fn, tag=instr)
         if instr.queue[0] == "device":
             q = self.backend.pick_device_queue(instr.queue[1], preferred=queue)
             self._issued_on[instr.iid] = q
@@ -541,6 +585,12 @@ class Executor:
         else:
             self.backend.host_pool.submit(item)
 
+    def _run_timed(self, instr: Instruction) -> None:
+        """Backend-lane entry when observability is on: stamp dequeue time
+        (start of execution) so queue-wait separates from execution."""
+        instr._start_t = time.perf_counter()
+        self._dispatch[instr.itype](instr)
+
     def _mark_done(self, instr: Instruction, latency: float) -> None:
         if instr.state == "done":
             return
@@ -548,15 +598,17 @@ class Executor:
         self._done_count += 1
         self._issued_on.pop(instr.iid, None)
         self._remaining.pop(instr.iid, None)
-        if self.tracer is not None:
-            self.tracer.complete(self.node, instr)
         qname = self._qname_cache.get(instr.queue)
         if qname is None:
             qname = self._qname_cache[instr.queue] = \
                 ".".join(map(str, instr.queue))
         e = self._queue_latency_ewma.get(qname, latency)
         self._queue_latency_ewma[qname] = 0.9 * e + 0.1 * latency
+        obs = self._obs
+        if obs:
+            self._obs_done(instr, qname)
         remaining, blocked = self._remaining, self._blocked
+        it = instr.itype
         for dep in instr.dependents:
             rem = remaining.get(dep.iid)
             if rem is None:
@@ -567,17 +619,72 @@ class Executor:
                 if rem == 0:
                     del blocked[dep.iid]
                     dep._ready_t = time.perf_counter()
+                    if obs:
+                        # last-arriving predecessor: scalar blame stamps only
+                        # (an object reference would chain the whole history
+                        # past retirement)
+                        dep._blame_iid = instr.iid
+                        dep._blame_it = it
                     self._ready.append(dep)
                 else:
                     self._recheck.append(dep)   # one fewer scattered dep
-        if instr.itype == InstructionType.EPOCH and instr.command is not None:
+        if it == InstructionType.EPOCH and instr.command is not None:
             with self._epoch_cv:
                 self._completed_epochs.add(instr.command.cid)
                 self._epoch_cv.notify_all()
-        if instr.itype in (InstructionType.HORIZON, InstructionType.EPOCH):
+        if it in (InstructionType.HORIZON, InstructionType.EPOCH):
             self._retire_before(instr)
             self.horizons_done += 1
+            if obs:
+                self._sample_lag()
             self.horizon_event.set()    # unblock a throttled scheduler
+
+    def _obs_done(self, instr: Instruction, qname: str) -> None:
+        """Wait-state attribution at completion (DESIGN.md §11.2).
+
+        ``t_reg -> t_ready -> t_start -> t_done``: the issue latency
+        ``t_start - t_reg`` decomposes exactly into the classified pending
+        wait plus the queue wait, so the per-instruction histograms sum to
+        the measured latency by construction.
+        """
+        t_done = time.perf_counter()
+        t_reg = getattr(instr, "_reg_t", None)
+        if t_reg is None:
+            return                       # submitted before this executor
+        t_ready = getattr(instr, "_ready_t", t_reg)
+        t_start = getattr(instr, "_start_t", t_ready)
+        if t_start < t_ready:
+            t_start = t_ready           # lane stamped before the drain raced
+        cls = WAIT_OF.get(getattr(instr, "_blame_it", None), WAIT_DEP)
+        if self.metrics is not None:
+            pending = (t_ready - t_reg) * 1e6
+            queue_w = (t_start - t_ready) * 1e6
+            self._h_issue.observe(pending + queue_w)
+            self._h_wait[cls].observe(pending)
+            self._h_queue.observe(queue_w)
+        if self.tracer is not None:
+            lane = getattr(instr, "trace_lane", None) or f"N{self.node}.{qname}"
+            self.tracer.record(
+                self.node, instr, lane, t_reg=t_reg, t_ready=t_ready,
+                t_start=t_start, t_done=t_done, wait_cls=cls,
+                blame_iid=getattr(instr, "_blame_iid", None))
+
+    def _sample_lag(self) -> None:
+        """Scheduler-lag time series, sampled at each horizon/epoch: ready-
+        queue depth, in-flight count and retirement progress as counter
+        tracks (lookahead occupancy and horizon lag sample scheduler-side)."""
+        n = self.node
+        inflight = float(len(self._remaining))
+        ready = float(len(self._ready))
+        m = self.metrics
+        if m is not None:
+            m.gauge(f"executor.N{n}.inflight", inflight)
+            m.gauge(f"executor.N{n}.ready_depth", ready)
+            m.gauge(f"executor.N{n}.retired", float(self._retired_count))
+        tr = self.tracer
+        if tr is not None:
+            tr.counter(f"executor.N{n}.inflight", inflight)
+            tr.counter(f"executor.N{n}.ready_depth", ready)
 
     # -- horizon-based retirement (§3.5) --------------------------------------
     def _retire_before(self, sync_instr: Instruction) -> None:

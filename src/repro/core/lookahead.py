@@ -43,10 +43,16 @@ class LookaheadScheduler:
     """Command queue between CDAG generation and IDAG compilation."""
 
     def __init__(self, idag: IdagGenerator, *, enabled: bool = True,
-                 horizon_flush: int = 2, retire_compiled: bool = False):
+                 horizon_flush: int = 2, retire_compiled: bool = False,
+                 metrics=None, tracer=None):
         self.idag = idag
         self.enabled = enabled
         self.horizon_flush = horizon_flush
+        # observability (DESIGN.md §11): window occupancy sampled as a
+        # counter track whenever the held-back queue changes size
+        self.metrics = metrics
+        self.tracer = tracer
+        self._depth_metric = f"lookahead.N{idag.node}.queued"
         # ``retire_compiled`` (runtime mode): clear a command's dependency
         # lists once it is lowered, so retired CDAG prefixes are not kept
         # alive through inter-command edges (O(window) scheduler memory).
@@ -117,6 +123,7 @@ class LookaheadScheduler:
         self.queue.append(cmd)
         self.stats.commands_queued_peak = max(self.stats.commands_queued_peak,
                                               len(self.queue))
+        self._sample_depth()
         if allocating:
             self._have_allocating = True
             self._horizons_since_alloc = 0
@@ -164,4 +171,15 @@ class LookaheadScheduler:
         self._pending.clear()
         self._have_allocating = False
         self._horizons_since_alloc = 0
+        self._sample_depth()
         return out
+
+    def _sample_depth(self) -> None:
+        """Lookahead window occupancy (scheduler-lag time series)."""
+        if self.metrics is None and self.tracer is None:
+            return
+        depth = float(len(self.queue))
+        if self.metrics is not None:
+            self.metrics.gauge(self._depth_metric, depth)
+        if self.tracer is not None:
+            self.tracer.counter(self._depth_metric, depth)

@@ -104,9 +104,14 @@ class MemoryManager:
 
     def __init__(self, host, *, d2d: bool = True,
                  budgets: Optional[dict[int, int]] = None,
-                 hints: Optional[dict[tuple[int, int], Region]] = None):
+                 hints: Optional[dict[tuple[int, int], Region]] = None,
+                 metrics=None):
         self.host = host
         self.d2d = d2d
+        # observability (DESIGN.md §11): pressure events mirrored into the
+        # unified registry under ``memory.N<node>.*``
+        self.metrics = metrics
+        self._metric_prefix = f"memory.N{getattr(host, 'node', 0)}."
         self.budgets: dict[int, int] = dict(budgets or {})
         if USER_HOST in self.budgets:
             raise ValueError(
@@ -350,9 +355,17 @@ class MemoryManager:
         if itype is InstructionType.SPILL:
             self.stats.spills += 1
             self.stats.spill_bytes += box.volume() * buf.elem_bytes()
+            if self.metrics is not None:
+                self.metrics.counter(self._metric_prefix + "spills")
+                self.metrics.counter(self._metric_prefix + "spill_bytes",
+                                     box.volume() * buf.elem_bytes())
         elif itype is InstructionType.RELOAD:
             self.stats.reloads += 1
             self.stats.reload_bytes += box.volume() * buf.elem_bytes()
+            if self.metrics is not None:
+                self.metrics.counter(self._metric_prefix + "reloads")
+                self.metrics.counter(self._metric_prefix + "reload_bytes",
+                                     box.volume() * buf.elem_bytes())
         return cp
 
     # -- allocation management (§3.2) ---------------------------------------
@@ -462,6 +475,8 @@ class MemoryManager:
                 return
             self._spill(victim)
             self.stats.evictions += 1
+            if self.metrics is not None:
+                self.metrics.counter(self._metric_prefix + "evictions")
 
     def _is_dirty(self, a: Allocation) -> bool:
         """Whether evicting ``a`` would need a write-back: some region of it

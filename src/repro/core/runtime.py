@@ -29,6 +29,7 @@ from .executor import Executor
 from .faults import ExecutionAborted, FaultPlan, run_with_restarts
 from .instruction_graph import IdagGenerator, InstructionType
 from .lookahead import LookaheadScheduler
+from .observability import CriticalPathReport, MetricsRegistry, critical_path
 from .region import Box
 from .task_graph import Task, TaskGraph, TaskType
 from .tracing import Tracer
@@ -54,9 +55,12 @@ class _NodeScheduler:
             for d in range(rt.devices_per_node):
                 budgets.setdefault(device_memory(d), rt.device_memory_budget)
         self.idag = IdagGenerator(node, rt.devices_per_node, d2d=rt.d2d,
-                                  retire=True, budgets=budgets or None)
+                                  retire=True, budgets=budgets or None,
+                                  metrics=rt.metrics_registry)
         self.lookahead = LookaheadScheduler(self.idag, enabled=rt.lookahead,
-                                            retire_compiled=True)
+                                            retire_compiled=True,
+                                            metrics=rt.metrics_registry,
+                                            tracer=rt.tracer)
         self.inbox: "queue.SimpleQueue" = queue.SimpleQueue()
         # bootstrap instructions (initial epoch) emitted at construction;
         # count its sync instruction so the throttle lag is not off by one
@@ -101,10 +105,28 @@ class _NodeScheduler:
                 self._throttle()
             t2 = rt.tracer.now() if rt.tracer else 0.0
             if rt.tracer:
-                rt.tracer.span(f"sched-N{self.node}", "cdag", task.name, t0, t1)
-                rt.tracer.span(f"sched-N{self.node}", "idag", task.name, t1, t2)
+                meta = {"tid": task.tid}
+                rt.tracer.span(f"sched-N{self.node}", "cdag", task.name,
+                               t0, t1, meta)
+                rt.tracer.span(f"sched-N{self.node}", "idag", task.name,
+                               t1, t2, meta)
+            self._sample_lag()
             if isinstance(msg, _EpochRequest):
                 msg.futures[self.node].put(my_epoch_cid)
+
+    def _sample_lag(self) -> None:
+        """Scheduler-lag time series (DESIGN.md §11.4), sampled per task:
+        how many horizon windows the scheduler runs ahead of execution."""
+        rt = self.rt
+        if rt.metrics_registry is None and rt.tracer is None:
+            return
+        name = f"sched.N{self.node}.horizon_lag"
+        lag = float(self._horizons_sent
+                    - rt.executors[self.node].horizons_done)
+        if rt.metrics_registry is not None:
+            rt.metrics_registry.gauge(name, lag)
+        if rt.tracer is not None:
+            rt.tracer.counter(name, lag)
 
     def _throttle(self) -> None:
         """Bound scheduler run-ahead to ``max_horizon_lag`` horizon windows.
@@ -159,7 +181,8 @@ class Runtime:
                  fault_plan: Optional[FaultPlan] = None,
                  reliable: bool = True,
                  watchdog_timeout: Optional[float] = None,
-                 retransmit_timeout: float = 0.05, max_retries: int = 12):
+                 retransmit_timeout: float = 0.05, max_retries: int = 12,
+                 metrics: bool = True):
         self.num_nodes = num_nodes
         self.devices_per_node = devices_per_node
         self.lookahead = lookahead
@@ -182,6 +205,10 @@ class Runtime:
         self.memory_budgets = memory_budgets
         self.d2d = d2d
         self.tracer = Tracer() if trace else None
+        # unified metrics registry (DESIGN.md §11): one namespace for
+        # executor wait-state histograms, scheduler-lag gauges, memory
+        # pressure and transport counters — snapshot via ``metrics()``
+        self.metrics_registry = MetricsRegistry() if metrics else None
         self.tdag = TaskGraph(horizon_step=horizon_step,
                               fuse_reductions=self.reduction_fusion)
         # fault model + resilient transport (DESIGN.md §10): the communicator
@@ -192,12 +219,14 @@ class Runtime:
                                  fault_plan=fault_plan,
                                  retransmit_timeout=retransmit_timeout,
                                  max_retries=max_retries,
-                                 tracer=self.tracer)
+                                 tracer=self.tracer,
+                                 metrics=self.metrics_registry)
         self.executors = [Executor(n, devices_per_node, self.comm,
                                    queues_per_device=queues_per_device,
                                    host_threads=host_threads,
                                    check_bounds=check_bounds,
                                    tracer=self.tracer,
+                                   metrics=self.metrics_registry,
                                    fault_plan=fault_plan,
                                    watchdog_timeout=watchdog_timeout)
                           for n in range(num_nodes)]
@@ -220,7 +249,8 @@ class Runtime:
                                 ttype=ttype, split_dims=split_dims,
                                 granularity=granularity)
         if self.tracer:
-            self.tracer.span("main", "task", name, t0, self.tracer.now())
+            self.tracer.span("main", "task", name, t0, self.tracer.now(),
+                             {"tid": task.tid})
         # the TDAG may have auto-emitted a horizon right after this task
         self._broadcast()
         return task
@@ -328,6 +358,43 @@ class Runtime:
                                        for ex in self.executors),
                     faults_injected=dict(self.comm.fault_counts))
 
+    def metrics(self) -> dict:
+        """One unified observability snapshot (DESIGN.md §11).
+
+        Merges the metrics registry (counters / gauges / histograms with
+        p50/p95/p99) with the previously scattered stat dicts: wire-level
+        ``comm`` accounting, the per-node ``memory`` reports, per-node
+        ``lookahead`` and ``executor`` scheduler stats, and the traced
+        instant-event histogram when tracing is on.
+        """
+        from dataclasses import asdict
+        snap = (self.metrics_registry.snapshot()
+                if self.metrics_registry is not None
+                else dict(counters={}, gauges={}, histograms={}))
+        snap["comm"] = self.comm_stats()
+        snap["memory"] = self.memory_report()
+        snap["lookahead"] = {n: asdict(s.lookahead.stats)
+                             for n, s in enumerate(self.schedulers)}
+        snap["executor"] = {
+            n: dict(done=ex._done_count, retired=ex._retired_count,
+                    peak_registered=ex._peak_registered,
+                    horizons_done=ex.horizons_done,
+                    queue_latency_ewma=ex.straggler_report())
+            for n, ex in enumerate(self.executors)}
+        if self.tracer is not None:
+            snap["instants"] = self.tracer.instant_counts()
+        return snap
+
+    def critical_path_report(self) -> CriticalPathReport:
+        """Critical-path / wait-state attribution over the traced run.
+
+        Requires ``trace=True``; call after a ``sync()`` so the chain ends
+        at a quiesced epoch.
+        """
+        if self.tracer is None:
+            raise RuntimeError("critical_path_report() needs Runtime(trace=True)")
+        return critical_path(self.tracer)
+
     def thread_report(self) -> dict:
         """Worker-thread health after shutdown: leaked (unjoinable) thread
         count per node plus the warning text explaining each leak."""
@@ -382,6 +449,10 @@ class Runtime:
             s.shutdown()
         for ex in self.executors:
             ex.shutdown()
+        # final registry values become Perfetto counter samples, so the
+        # exported trace carries the unified metrics end state
+        if self.tracer is not None and self.metrics_registry is not None:
+            self.metrics_registry.export_counters(self.tracer)
 
     def __enter__(self) -> "Runtime":
         return self

@@ -14,6 +14,9 @@ import threading
 import time
 from collections import defaultdict
 from dataclasses import dataclass
+from typing import Optional
+
+from .observability import InstrRecord
 
 
 @dataclass
@@ -23,10 +26,19 @@ class Span:
     name: str
     t0: float
     t1: float
+    # propagated trace context ({"tid": ..}, {"iid": .., "cid": .., ..}) —
+    # exported as event args and used to derive Perfetto flow arrows
+    meta: Optional[dict] = None
 
 
 class Tracer:
     """Thread-safe append-only span log."""
+
+    # executors skip per-instruction issue() callbacks for this tracer:
+    # execution spans are derived from completion records, so issue-time
+    # open-span tracking would only add a lock round-trip per instruction.
+    # Duck-typed tracer doubles that want live issue events leave this True.
+    issue_events = False
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
@@ -38,14 +50,19 @@ class Tracer:
         # (lane, name, t, args) — rendered as Perfetto instant ("i") events
         self.instants: list[tuple[str, str, float, dict]] = []
         self._open: dict[tuple[int, int], float] = {}   # (node, iid) -> t_issue
+        # per-instruction execution records (timing breakdown + trace
+        # context); instruction spans are derived from these on demand, so
+        # the executor's completion path appends exactly one object
+        self.records: list[InstrRecord] = []
         self.epoch = time.perf_counter()
 
     def now(self) -> float:
         return time.perf_counter() - self.epoch
 
-    def span(self, lane: str, kind: str, name: str, t0: float, t1: float) -> None:
+    def span(self, lane: str, kind: str, name: str, t0: float, t1: float,
+             meta: Optional[dict] = None) -> None:
         with self._lock:
-            self.spans.append(Span(lane, kind, name, t0, t1))
+            self.spans.append(Span(lane, kind, name, t0, t1, meta))
 
     def counter(self, name: str, value: float) -> None:
         """Record one sample of a named counter (e.g. ``N0.M2.bytes``)."""
@@ -74,22 +91,56 @@ class Tracer:
 
     # executor integration -------------------------------------------------
     def issue(self, node: int, instr) -> None:
-        self._open[(node, instr.iid)] = self.now()
+        # ``_open`` is shared mutable state: hold the lock (concurrent
+        # executors of different nodes issue/complete simultaneously)
+        t = self.now()
+        with self._lock:
+            self._open[(node, instr.iid)] = t
 
     def complete(self, node: int, instr) -> None:
-        t0 = self._open.pop((node, instr.iid), self.now())
         # collective rounds carry a per-collective lane override so each
         # exchange renders as its own named Perfetto track (DESIGN.md §9)
         lane = getattr(instr, "trace_lane", None) \
             or f"N{node}." + ".".join(map(str, instr.queue))
-        self.span(lane, instr.itype.value, instr.name or repr(instr), t0, self.now())
+        t1 = self.now()
+        name = instr.name or repr(instr)
+        with self._lock:
+            t0 = self._open.pop((node, instr.iid), t1)
+            self.spans.append(Span(lane, instr.itype.value, name, t0, t1))
+
+    def record(self, node: int, instr, lane: str, *, t_reg: float,
+               t_ready: float, t_start: float, t_done: float,
+               wait_cls: str, blame_iid: Optional[int]) -> None:
+        """Append one instruction's full timing record (raw perf_counter
+        stamps; converted to tracer-epoch time here).  Replaces the
+        issue/complete pair on the executor's hot path: one lock, one
+        append, and the fig.-7 execution span is derived lazily."""
+        e = self.epoch
+        cmd = instr.command
+        task = cmd.task if cmd is not None else None
+        rec = InstrRecord(
+            node, instr.iid, instr.itype.value, lane,
+            instr.name or instr.itype.value,
+            t_reg - e, t_ready - e, t_start - e, t_done - e,
+            wait_cls, blame_iid,
+            task.tid if task is not None else None,
+            cmd.cid if cmd is not None else None)
+        with self._lock:
+            self.records.append(rec)
+            self._open.pop((node, instr.iid), None)
 
     # analysis ---------------------------------------------------------------
     def lanes(self) -> dict[str, list[Span]]:
         out: dict[str, list[Span]] = defaultdict(list)
         with self._lock:
-            for s in self.spans:
-                out[s.lane].append(s)
+            spans = list(self.spans)
+            records = list(self.records)
+        for s in spans:
+            out[s.lane].append(s)
+        for r in records:
+            out[r.lane].append(Span(
+                r.lane, r.kind, r.name, r.t_start, r.t_done,
+                {"iid": r.iid, "node": r.node, "tid": r.tid, "cid": r.cid}))
         for v in out.values():
             v.sort(key=lambda s: s.t0)
         return out
@@ -149,13 +200,80 @@ class Tracer:
         for lane, tid in tids.items():
             events.append({"ph": "M", "pid": 1, "tid": tid,
                            "name": "thread_name", "args": {"name": lane}})
+        # trace-context indexes for the flow arrows: task spans on "main",
+        # cdag/idag spans on "sched-N*" (the idag span, when present, is the
+        # causally closest source for instruction arrows)
+        task_src: dict[int, tuple[int, float]] = {}        # tid -> (ttid, ts)
+        sched_src: dict[tuple[int, int], tuple[int, float]] = {}
+        cdag_dst: list[tuple[int, int, int, float]] = []   # (node,tid,ttid,ts)
+        instr_dst: list[tuple[int, int, Optional[int], int, float]] = []
         for lane, spans in lanes.items():
             tid = tids[lane]
             for s in spans:
-                events.append({"ph": "X", "pid": 1, "tid": tid,
-                               "name": s.name or s.kind, "cat": s.kind,
-                               "ts": s.t0 * 1e6,
-                               "dur": max((s.t1 - s.t0) * 1e6, 0.001)})
+                ev = {"ph": "X", "pid": 1, "tid": tid,
+                      "name": s.name or s.kind, "cat": s.kind,
+                      "ts": s.t0 * 1e6,
+                      "dur": max((s.t1 - s.t0) * 1e6, 0.001)}
+                if s.meta:
+                    ev["args"] = {k: v for k, v in s.meta.items()
+                                  if v is not None}
+                events.append(ev)
+                m = s.meta
+                if not m:
+                    continue
+                if s.kind == "task" and m.get("tid") is not None:
+                    task_src[m["tid"]] = (tid, ev["ts"])
+                elif s.kind in ("cdag", "idag") and lane.startswith("sched-N"):
+                    node, ttid = int(lane[len("sched-N"):]), m.get("tid")
+                    if ttid is None:
+                        continue
+                    if s.kind == "cdag":
+                        cdag_dst.append((node, ttid, tid, ev["ts"]))
+                        sched_src.setdefault((node, ttid), (tid, ev["ts"]))
+                    else:
+                        sched_src[(node, ttid)] = (tid, ev["ts"])
+                elif "iid" in m:
+                    instr_dst.append((m.get("node", 0), m["iid"],
+                                      m.get("tid"), tid, ev["ts"]))
+        # flow arrows ("s"/"f"): task submission -> command generation ->
+        # instruction execution, navigable causally in ui.perfetto.dev
+        for node, ttid, tid, ts in cdag_dst:
+            src = task_src.get(ttid)
+            if src is None:
+                continue
+            fid = f"t{ttid}.N{node}"
+            events.append({"ph": "s", "pid": 1, "tid": src[0], "ts": src[1],
+                           "cat": "lower", "name": "lower", "id": fid})
+            events.append({"ph": "f", "bp": "e", "pid": 1, "tid": tid,
+                           "ts": ts, "cat": "lower", "name": "lower",
+                           "id": fid})
+        for node, iid, ttid, tid, ts in instr_dst:
+            src = sched_src.get((node, ttid)) if ttid is not None else None
+            if src is None:
+                continue
+            fid = f"i{node}.{iid}"
+            events.append({"ph": "s", "pid": 1, "tid": src[0], "ts": src[1],
+                           "cat": "lower", "name": "lower", "id": fid})
+            events.append({"ph": "f", "bp": "e", "pid": 1, "tid": tid,
+                           "ts": ts, "cat": "lower", "name": "lower",
+                           "id": fid})
+        # wait-state attribution: nested async spans under each instruction
+        # lane — the pending wait (classified) followed by the queue wait
+        with self._lock:
+            records = list(self.records)
+        for r in records:
+            tid = tids.get(r.lane)
+            if tid is None:
+                continue
+            wid = f"w{r.node}.{r.iid}"
+            for name, t0, t1 in ((f"wait:{r.wait_cls}", r.t_reg, r.t_ready),
+                                 ("wait:queue", r.t_ready, r.t_start)):
+                if t1 - t0 <= 0:
+                    continue
+                events.append({"ph": "b", "pid": 1, "tid": tid, "cat": "wait",
+                               "name": name, "id": wid, "ts": t0 * 1e6})
+                events.append({"ph": "e", "pid": 1, "tid": tid, "cat": "wait",
+                               "name": name, "id": wid, "ts": t1 * 1e6})
         # instant events (fault injections, retransmits, aborts) render as
         # thread-scoped markers on their wire/control lane
         with self._lock:

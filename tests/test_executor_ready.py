@@ -39,6 +39,13 @@ class RecordingTracer:
         with self._lock:
             self.events.append(("complete", instr.name))
 
+    def record(self, node, instr, lane, **stamps):
+        # completion + wait-attribution hook (DESIGN.md §11.2)
+        self.complete(node, instr)
+
+    def counter(self, name, value):
+        pass                        # scheduler-lag samples: not asserted here
+
     def wait_for(self, event, timeout=5.0):
         deadline = time.monotonic() + timeout
         while time.monotonic() < deadline:

@@ -1,0 +1,248 @@
+"""Flight-recorder tests (DESIGN.md §11): metrics registry, wait-state
+attribution, and the critical-path analyzer.
+
+The load-bearing invariant is the exact wait decomposition: for every
+traced instruction, the classified pending wait plus the queue wait must
+reconstruct the measured issue latency (``t_start - t_reg``) — the
+histograms are then sums of true durations, not estimates.  The
+critical-path walk must likewise never over-account: its layer + wait
+totals are interval-disjoint by construction and bounded by the
+end-to-end time.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (Histogram, MetricsRegistry, Runtime, Tracer,
+                        classify_wait, critical_path, one_to_one, read,
+                        read_write, reduction)
+from repro.core.instructions import InstructionType
+from repro.core.observability import (WAIT_BUDGET, WAIT_CLASSES, WAIT_DEP,
+                                      WAIT_QUEUE, WAIT_TRANSPORT)
+
+
+# -- histograms ---------------------------------------------------------------
+
+def test_histogram_basic_stats():
+    h = Histogram()
+    for v in (1.0, 2.0, 4.0, 8.0, 100.0):
+        h.observe(v)
+    s = h.snapshot()
+    assert s["count"] == 5
+    assert s["sum_us"] == pytest.approx(115.0)
+    assert s["max_us"] == 100.0
+    assert 0.0 < s["p50"] <= s["p95"] <= s["p99"] <= s["max_us"]
+
+
+def test_histogram_percentile_bucket_bounds():
+    h = Histogram()
+    for _ in range(100):
+        h.observe(10.0)               # bucket [8, 16)
+    assert 8.0 <= h.percentile(50) < 16.0
+    assert h.percentile(99) <= h.vmax == 10.0
+
+
+def test_histogram_empty_and_overflow():
+    h = Histogram()
+    assert h.percentile(50) == 0.0
+    h.observe(1e12)                   # beyond the last bucket: clamped
+    assert h.snapshot()["count"] == 1
+    assert h.percentile(99) <= h.vmax
+
+
+# -- registry -----------------------------------------------------------------
+
+def test_registry_counters_gauges_histograms():
+    m = MetricsRegistry()
+    m.counter("comm.drops")
+    m.counter("comm.drops", 2.0)
+    m.gauge("executor.N0.inflight", 5.0)
+    m.gauge("executor.N0.inflight", 3.0)   # last write wins
+    m.observe("executor.N0.issue_us", 12.0)
+    assert m.histogram("executor.N0.issue_us") is \
+        m.histogram("executor.N0.issue_us")
+    s = m.snapshot()
+    assert s["counters"]["comm.drops"] == 3.0
+    assert s["gauges"]["executor.N0.inflight"] == 3.0
+    assert s["histograms"]["executor.N0.issue_us"]["count"] == 1
+
+
+def test_registry_thread_safety():
+    m = MetricsRegistry()
+
+    def spin():
+        for _ in range(1000):
+            m.counter("c")
+            m.gauge("g", 1.0)
+            m.observe("h", 1.0)
+
+    ts = [threading.Thread(target=spin) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    s = m.snapshot()
+    assert s["counters"]["c"] == 4000.0
+
+
+def test_registry_export_counters_to_tracer():
+    m = MetricsRegistry()
+    m.counter("memory.N0.spills", 7.0)
+    m.gauge("sched.N0.horizon_lag", 2.0)
+    tr = Tracer()
+    m.export_counters(tr)
+    assert tr.counters["memory.N0.spills"][-1][1] == 7.0
+    assert tr.counters["sched.N0.horizon_lag"][-1][1] == 2.0
+
+
+# -- wait taxonomy ------------------------------------------------------------
+
+def test_classify_wait_taxonomy():
+    assert classify_wait(None) == WAIT_DEP
+    assert classify_wait(InstructionType.DEVICE_KERNEL) == WAIT_DEP
+    assert classify_wait(InstructionType.FREE) == WAIT_BUDGET
+    assert classify_wait(InstructionType.SPILL) == WAIT_BUDGET
+    assert classify_wait(InstructionType.RELOAD) == WAIT_BUDGET
+    assert classify_wait(InstructionType.SEND) == WAIT_TRANSPORT
+    assert classify_wait(InstructionType.COLL_RECV) == WAIT_TRANSPORT
+    assert WAIT_QUEUE in WAIT_CLASSES
+
+
+# -- live-run attribution -----------------------------------------------------
+
+def _run_traced(num_nodes=2, devices_per_node=2, steps=6, **kw):
+    rt = Runtime(num_nodes=num_nodes, devices_per_node=devices_per_node,
+                 trace=True, **kw)
+    N = 64
+    a = rt.buffer((N, N), init=np.ones((N, N)), name="A")
+    b = rt.buffer((N, N), init=np.zeros((N, N)), name="B")
+    E = rt.buffer((1,), init=np.zeros(1), name="E")
+
+    def fwd(chunk, av, bv):
+        bv.set(chunk, av.get(chunk) * 1.001)
+
+    def bwd(chunk, bv, av):
+        av.set(chunk, bv.get(chunk) * 0.999)
+
+    def energy(chunk, av, red):
+        red.contribute(av.get(chunk).sum())
+
+    for i in range(steps):
+        rt.submit(f"fwd{i}", (N, N),
+                  [read(a, one_to_one()), read_write(b, one_to_one())], fwd)
+        rt.submit(f"bwd{i}", (N, N),
+                  [read(b, one_to_one()), read_write(a, one_to_one())], bwd)
+    rt.submit("energy", (N, N),
+              [read(a, one_to_one()), reduction(E, "sum")], energy)
+    rt.sync()
+    return rt
+
+
+def test_records_wait_sum_is_exact():
+    rt = _run_traced()
+    try:
+        recs = rt.tracer.records
+        assert recs, "traced run produced no instruction records"
+        for r in recs:
+            assert r.t_reg <= r.t_ready + 1e-9
+            assert r.t_ready <= r.t_start + 1e-9
+            assert r.t_start <= r.t_done + 1e-9
+            lat = r.t_start - r.t_reg
+            parts = (r.t_ready - r.t_reg) + (r.t_start - r.t_ready)
+            # exact by construction: within 1% (and an absolute epsilon
+            # for ~0 latencies)
+            assert abs(parts - lat) <= 1e-9 + 0.01 * max(lat, 1e-12)
+            assert r.wait_cls in WAIT_CLASSES
+    finally:
+        rt.shutdown()
+
+
+def test_records_carry_trace_context():
+    rt = _run_traced()
+    try:
+        kernels = [r for r in rt.tracer.records if r.kind == "device_kernel"]
+        assert kernels
+        for r in kernels:
+            assert r.tid is not None and r.cid is not None
+        # iids are only unique per node: both nodes must be present
+        assert {r.node for r in rt.tracer.records} == {0, 1}
+    finally:
+        rt.shutdown()
+
+
+def test_critical_path_report_is_consistent():
+    rt = _run_traced()
+    try:
+        rep = critical_path(rt.tracer)
+        assert rep.total_us > 0
+        assert rep.chain_len >= 1
+        assert rep.n_instructions == len(rt.tracer.records)
+        assert 0.0 <= rep.scheduler_fraction <= 1.0
+        accounted = sum(rep.by_layer.values()) + sum(rep.by_wait.values())
+        # the frontier-clipped walk never over-accounts
+        assert accounted <= rep.total_us * (1 + 1e-6)
+        assert rep.unattributed_us == pytest.approx(
+            rep.total_us - accounted, rel=1e-6, abs=1e-3)
+        text = rep.render()
+        assert "critical path:" in text
+        assert "scheduler share of critical path" in text
+        d = rep.as_dict()
+        assert d["total_us"] == rep.total_us
+        assert rt.critical_path_report().total_us > 0
+    finally:
+        rt.shutdown()
+
+
+def test_critical_path_empty_tracer():
+    rep = critical_path(Tracer())
+    assert rep.total_us == 0.0 and rep.chain_len == 0
+
+
+def test_runtime_metrics_snapshot_unified():
+    rt = _run_traced()
+    try:
+        snap = rt.metrics()
+        for key in ("counters", "gauges", "histograms", "comm", "memory",
+                    "lookahead", "executor", "instants"):
+            assert key in snap, key
+        h = snap["histograms"]
+        # per-node issue-latency + wait-class histograms (naming scheme
+        # layer.node.name)
+        for n in (0, 1):
+            assert h[f"executor.N{n}.issue_us"]["count"] > 0
+            for cls in WAIT_CLASSES:
+                assert f"executor.N{n}.wait_{cls}_us" in h
+        g = snap["gauges"]
+        assert "executor.N0.inflight" in g
+        assert "lookahead.N0.queued" in g
+        assert "sched.N0.horizon_lag" in g
+        # issue histogram sums match the per-record ground truth
+        recs = rt.tracer.records
+        for n in (0, 1):
+            hist_sum = h[f"executor.N{n}.issue_us"]["sum_us"]
+            rec_sum = sum((r.t_start - r.t_reg) * 1e6
+                          for r in recs if r.node == n)
+            assert hist_sum == pytest.approx(rec_sum, rel=0.01)
+            assert h[f"executor.N{n}.issue_us"]["count"] == \
+                sum(1 for r in recs if r.node == n)
+    finally:
+        rt.shutdown()
+
+
+def test_runtime_metrics_disabled_still_works():
+    rt = Runtime(num_nodes=1, devices_per_node=1, metrics=False)
+    try:
+        B = rt.buffer((8,), init=np.zeros(8), name="b")
+        rt.submit("k", (8,), [read_write(B, one_to_one())],
+                  lambda c, v: v.set(c, v.get(c) + 1))
+        rt.sync()
+        assert rt.metrics_registry is None
+        snap = rt.metrics()
+        assert snap["counters"] == {} and snap["histograms"] == {}
+        assert "memory" in snap and "comm" in snap
+        # zero-instrumentation executors skip every stamp
+        assert rt.executors[0]._obs is False
+    finally:
+        rt.shutdown()

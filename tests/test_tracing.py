@@ -1,10 +1,13 @@
 """Tracer tests: overlap analysis invariants + Chrome/Perfetto export."""
 
 import json
+import threading
+from types import SimpleNamespace
 
 import numpy as np
 
 from repro.core import Runtime, Tracer, one_to_one, read, read_write, reduction
+from repro.core.instructions import InstructionType
 from repro.core.tracing import Span
 
 
@@ -67,3 +70,119 @@ def test_busy_intervals_merge():
     spans = [Span("l", "k", "a", 0.0, 1.0), Span("l", "k", "b", 0.5, 2.0),
              Span("l", "k", "c", 3.0, 4.0)]
     assert Tracer._busy_intervals(spans) == [(0.0, 2.0), (3.0, 4.0)]
+
+
+# -- round-trip export (DESIGN.md §11.4) --------------------------------------
+
+def _export_live_trace(tmp_path):
+    with Runtime(num_nodes=2, devices_per_node=2, trace=True) as rt:
+        X = rt.buffer((64,), init=np.arange(64.0), name="X")
+        E = rt.buffer((1,), init=np.zeros(1), name="E")
+
+        def bump(chunk, xv):
+            xv.set(chunk, xv.get(chunk) + 1)
+
+        def tally(chunk, xv, red):
+            red.contribute(xv.get(chunk).sum())
+
+        for i in range(4):
+            rt.submit(f"bump{i}", (64,), [read_write(X, one_to_one())], bump)
+        rt.submit("tally", (64,),
+                  [read(X, one_to_one()), reduction(E, "sum")], tally)
+        rt.sync()
+        out = tmp_path / "roundtrip.json"
+        rt.tracer.to_chrome_trace(out)
+        records = list(rt.tracer.records)
+    return json.loads(out.read_text())["traceEvents"], records
+
+
+def test_export_thread_metadata_covers_every_event(tmp_path):
+    events, _ = _export_live_trace(tmp_path)
+    named = {e["tid"] for e in events
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    used = {e["tid"] for e in events if "tid" in e}
+    assert used <= named, f"events on unnamed threads: {used - named}"
+
+
+def test_export_flow_links_are_well_formed(tmp_path):
+    events, _ = _export_live_trace(tmp_path)
+    starts = {(e["cat"], e["id"]): e["ts"] for e in events if e["ph"] == "s"}
+    finishes = [e for e in events if e["ph"] == "f"]
+    assert finishes, "no flow arrows exported"
+    for e in finishes:
+        key = (e["cat"], e["id"])
+        assert key in starts, f"flow finish without start: {key}"
+        assert starts[key] <= e["ts"] + 1e-6
+    # both layers of arrows: task -> cdag ("t<tid>.N<node>") and
+    # sched -> instruction ("i<node>.<iid>")
+    ids = {e["id"] for e in finishes}
+    assert any(i.startswith("t") for i in ids)
+    assert any(i.startswith("i") for i in ids)
+
+
+def test_export_instruction_flows_complete(tmp_path):
+    events, records = _export_live_trace(tmp_path)
+    flow_ids = {e["id"] for e in events if e["ph"] == "f"}
+    linkable = [r for r in records if r.tid is not None]
+    assert linkable
+    missing = [f"i{r.node}.{r.iid}" for r in linkable
+               if f"i{r.node}.{r.iid}" not in flow_ids]
+    assert not missing, f"records without flow arrows: {missing[:5]}"
+
+
+def test_export_wait_spans_balanced(tmp_path):
+    events, records = _export_live_trace(tmp_path)
+    waits = [e for e in events if e.get("cat") == "wait"]
+    assert waits, "no wait-state spans exported"
+    per_id: dict[str, int] = {}
+    for e in waits:
+        assert e["ph"] in ("b", "e")
+        assert e["name"].startswith("wait:")
+        per_id[e["id"]] = per_id.get(e["id"], 0) + (1 if e["ph"] == "b" else -1)
+    assert all(v == 0 for v in per_id.values()), "unbalanced b/e pairs"
+    # every wait id resolves to a traced instruction record
+    rec_ids = {f"w{r.node}.{r.iid}" for r in records}
+    assert set(per_id) <= rec_ids
+
+
+def test_export_counter_tracks_present(tmp_path):
+    events, _ = _export_live_trace(tmp_path)
+    counters = [e for e in events if e["ph"] == "C"]
+    assert counters
+    for e in counters:
+        assert "value" in e["args"]
+    names = {e["name"] for e in counters}
+    # scheduler-lag time series: executor in-flight depth is sampled at
+    # every horizon, so it is always present on a traced run
+    assert any(n.startswith("executor.N") and n.endswith(".inflight")
+               for n in names), names
+
+
+# -- issue/complete lock discipline -------------------------------------------
+
+def _fake_instr(iid):
+    return SimpleNamespace(iid=iid, name=f"i{iid}", queue=("host",),
+                           itype=InstructionType.HOST_TASK, command=None)
+
+
+def test_issue_complete_race_keeps_open_table_consistent():
+    """Regression: ``issue``/``complete`` mutate ``_open`` under the tracer
+    lock — concurrent executors must neither lose spans nor leak entries."""
+    tr = Tracer()
+    n_threads, per_thread = 8, 200
+
+    def hammer(node):
+        for k in range(per_thread):
+            instr = _fake_instr(k)
+            tr.issue(node, instr)
+            tr.complete(node, instr)
+
+    ts = [threading.Thread(target=hammer, args=(n,)) for n in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert tr._open == {}, "leaked open-span entries"
+    assert len(tr.spans) == n_threads * per_thread
+    for s in tr.spans:
+        assert s.t0 <= s.t1
