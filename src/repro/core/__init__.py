@@ -12,6 +12,7 @@ from .faults import (EpochTimeoutError, ExecutionAborted, FaultError,
                      TransportError, run_with_restarts)
 from .instruction_graph import (EpochAbort, IdagGenerator, Instruction,
                                 InstructionType, Pilot)
+from .memo import ServingRuntime, Tenant, WindowHandle, window_signature
 from .memory import MemoryManager, MemoryStats, MemState
 from .observability import (CriticalPathReport, Histogram, MetricsRegistry,
                             classify_wait, critical_path)
@@ -33,6 +34,7 @@ __all__ = [
     "InjectedCrash", "NodeFailure", "PeerAborted", "TransportError",
     "run_with_restarts",
     "EpochAbort", "IdagGenerator", "Instruction", "InstructionType", "Pilot",
+    "ServingRuntime", "Tenant", "WindowHandle", "window_signature",
     "MemoryManager", "MemoryStats", "MemState",
     "CriticalPathReport", "Histogram", "MetricsRegistry",
     "classify_wait", "critical_path",

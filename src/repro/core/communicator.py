@@ -608,6 +608,7 @@ class ReceiveArbiter:
             if not pgs:
                 del self.pending_gathers[tid]
                 self.announced.pop(tid, None)
+                self.received.pop(tid, None)
         for tid, plist in list(self.early_payloads.items()):
             prs = self.pending.get(tid, [])
             if not prs:
@@ -640,9 +641,16 @@ class ReceiveArbiter:
                     elif pr.instr.itype == InstructionType.SPLIT_RECEIVE:
                         completions.append(pr.instr)
                         # keep entry for awaits
-                # await-receive: complete when its subregion is covered
+                # await-receive: complete when its subregion is covered.  A
+                # parent in state "done" was fully received, which covers any
+                # await — this keeps late-registered awaits correct even
+                # after the coverage map below has been dropped.
+                cov = self.received.get(tid)
                 for aw in list(pr.awaits):
-                    if aw.state == "issued" and self.received[tid].contains(aw.recv_region):
+                    if aw.state == "issued" and (
+                            (cov is not None and cov.contains(aw.recv_region))
+                            or (pr.instr is not None
+                                and pr.instr.state == "done")):
                         completions.append(aw)
                         pr.awaits.remove(aw)
                 if (pr.remaining.is_empty() and not pr.awaits
@@ -653,3 +661,8 @@ class ReceiveArbiter:
                     prs.remove(pr)
             if not prs:
                 self.announced.pop(tid, None)
+                # drop the coverage map with the last receive: transfer ids
+                # are never reused, so nothing can consult it again, and a
+                # long-running serving process must not accumulate one
+                # Region per transfer forever
+                self.received.pop(tid, None)

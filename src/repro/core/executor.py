@@ -159,7 +159,8 @@ class Executor:
                  *, queues_per_device: int = 2, host_threads: int = 4,
                  check_bounds: bool = False, tracer=None, metrics=None,
                  fault_plan: Optional[FaultPlan] = None,
-                 watchdog_timeout: Optional[float] = None):
+                 watchdog_timeout: Optional[float] = None,
+                 max_inflight_per_tenant: Optional[int] = None):
         self.node = node
         self.comm = comm
         self.backend = Backend(num_devices, queues_per_device=queues_per_device,
@@ -179,6 +180,13 @@ class Executor:
         self._issue_tracer = tracer if (
             tracer is not None and getattr(tracer, "issue_events", True)) \
             else None
+        # sampled (1-in-N) record capture: the keep/drop decision is a pure
+        # function of the iid, so dropped records skip the tracer call
+        # entirely — drops are counted locally (this executor's completion
+        # path is single-threaded) and flushed at horizon boundaries
+        self._rec_sample = (max(1, getattr(tracer, "record_sample", 1))
+                            if tracer is not None else 1)
+        self._drops_pending = 0
         if metrics is not None:
             p = f"executor.N{node}."
             self._h_issue = metrics.histogram(p + "issue_us")
@@ -217,6 +225,25 @@ class Executor:
         # ready->submitted dispatch latency; bounded so the stat itself does
         # not grow with program length (retirement bounds everything else)
         self._issue_latency: deque[float] = deque(maxlen=65536)
+        # -- multi-tenant serving (core/memo.py, DESIGN.md §12) -----------
+        # Instructions tagged with a tenant name are issued from per-tenant
+        # ready queues in round-robin order (fair-share interleaving), with
+        # ``max_inflight_per_tenant`` bounding how many one tenant may have
+        # between admission and completion (admission control).  Untagged
+        # instructions (tenant None) keep the original single-queue fast
+        # path untouched.  Eager issue bypasses admission (it must follow
+        # its in-order queue), so the bound is approximate under eager
+        # cascades — acceptable: fairness is a scheduling policy, not a
+        # correctness invariant.
+        self.max_inflight_per_tenant = max_inflight_per_tenant
+        self._tenant_ready: dict[str, deque[Instruction]] = {}
+        self._tenant_rr: deque[str] = deque()      # round-robin rotation
+        self._tenant_in_rr: set[str] = set()
+        self._tenant_count = 0                     # total tenant-ready instrs
+        self._tenant_inflight: dict[str, int] = {}
+        self._tenant_deferred: dict[str, deque[Instruction]] = {}
+        self._deferred_count = 0
+        self.tenant_done: dict[str, int] = {}      # per-tenant completions
         self._queue_latency_ewma: dict[str, float] = {}
         self._qname_cache: dict[tuple, str] = {}
         self._dispatch = {
@@ -265,6 +292,15 @@ class Executor:
             self._inbox.extend(instrs)
         self.backend.sink.event.set()  # wake the loop
 
+    def forget_epoch(self, cid: int) -> None:
+        """Drop a completed epoch id once every waiter has seen it.
+
+        A serving process completes an unbounded stream of epochs; the
+        serving runtime calls this after its window handle resolves so the
+        completed-epoch set stays bounded."""
+        with self._epoch_cv:
+            self._completed_epochs.discard(cid)
+
     def wait_epoch(self, cid: int, timeout: float = 60.0) -> None:
         deadline = time.monotonic() + timeout
         with self._epoch_cv:
@@ -302,6 +338,11 @@ class Executor:
         """
         if self.errors or self.crashed:
             self._abort = True
+        if (self._drops_pending and self.tracer is not None
+                and hasattr(self.tracer, "note_sampled_out")):
+            # account sampled-out records dropped after the last sync
+            self.tracer.note_sampled_out(self._drops_pending)
+            self._drops_pending = 0
         self._stop = True
         self._watch_stop.set()
         self.backend.sink.event.set()
@@ -447,7 +488,9 @@ class Executor:
             if self.crashed:
                 # fail-stop: no drain, no farewell — peers must detect it
                 return
-            if self._stop and not self._ready and not self._blocked and not fresh:
+            if (self._stop and not self._ready and not self._tenant_count
+                    and not self._deferred_count and not self._blocked
+                    and not fresh):
                 with self._inbox_lock:
                     empty = not self._inbox
                 if empty:
@@ -474,21 +517,66 @@ class Executor:
             if self._obs:
                 instr._reg_t = t
             instr._ready_t = t
-            self._ready.append(instr)
+            if instr.tenant is None:
+                self._ready.append(instr)
+            else:
+                self._enqueue_tenant(instr)
         else:
             if self._obs:
                 instr._reg_t = time.perf_counter()
             self._blocked[instr.iid] = instr
             self._recheck.append(instr)     # deps may already sit on one queue
 
+    def _enqueue_tenant(self, instr: Instruction) -> None:
+        """Admit (or defer) one ready tenant-tagged instruction."""
+        t = instr.tenant
+        cap = self.max_inflight_per_tenant
+        if cap is not None and self._tenant_inflight.get(t, 0) >= cap:
+            self._tenant_deferred.setdefault(t, deque()).append(instr)
+            self._deferred_count += 1
+            return
+        self._tenant_inflight[t] = self._tenant_inflight.get(t, 0) + 1
+        instr._admitted = True
+        q = self._tenant_ready.get(t)
+        if q is None:
+            q = self._tenant_ready[t] = deque()
+        q.append(instr)
+        self._tenant_count += 1
+        if t not in self._tenant_in_rr:
+            self._tenant_in_rr.add(t)
+            self._tenant_rr.append(t)
+
+    def _drain_tenant_ready(self) -> bool:
+        """Issue tenant-ready instructions one per tenant per rotation."""
+        issued_any = False
+        rr = self._tenant_rr
+        while self._tenant_count and rr:
+            name = rr.popleft()
+            q = self._tenant_ready.get(name)
+            if not q:
+                self._tenant_in_rr.discard(name)
+                continue
+            instr = q.popleft()
+            self._tenant_count -= 1
+            if q:
+                rr.append(name)
+            else:
+                self._tenant_in_rr.discard(name)
+            self._issue(instr)
+            issued_any = True
+        return issued_any
+
     def _drain_ready(self) -> bool:
         """Issue all ready instructions and cascade eager-issue candidates."""
         issued_any = False
-        while self._ready or self._recheck:
+        while self._ready or self._tenant_count or self._recheck:
             while self._ready:
                 instr = self._ready.popleft()
                 self._issue(instr)                       # direct issue
                 issued_any = True
+            if self._tenant_count:
+                if self._drain_tenant_ready():
+                    issued_any = True
             if self._recheck:
                 instr = self._recheck.popleft()
                 if instr.iid not in self._blocked:
@@ -546,6 +634,12 @@ class Executor:
                     f"#{self._issued_count} ({instr!r})"), broadcast=False)
                 return
         instr.state = "issued"
+        if instr.tenant is not None and not getattr(instr, "_admitted", False):
+            # eager issue skipped admission: account it now so the
+            # per-tenant in-flight counter stays balanced at completion
+            tn = instr.tenant
+            self._tenant_inflight[tn] = self._tenant_inflight.get(tn, 0) + 1
+            instr._admitted = True
         t = time.perf_counter()
         self._issue_latency.append(t - instr._ready_t)
         if self._issue_tracer is not None:
@@ -625,9 +719,25 @@ class Executor:
                         # past retirement)
                         dep._blame_iid = instr.iid
                         dep._blame_it = it
-                    self._ready.append(dep)
+                    if dep.tenant is None:
+                        self._ready.append(dep)
+                    else:
+                        self._enqueue_tenant(dep)
                 else:
                     self._recheck.append(dep)   # one fewer scattered dep
+        tn = instr.tenant
+        if tn is not None:
+            self.tenant_done[tn] = self.tenant_done.get(tn, 0) + 1
+            if getattr(instr, "_admitted", False):
+                n = self._tenant_inflight.get(tn, 0) - 1
+                self._tenant_inflight[tn] = n if n > 0 else 0
+            dq = self._tenant_deferred.get(tn)
+            if dq:
+                cap = self.max_inflight_per_tenant
+                while dq and (cap is None
+                              or self._tenant_inflight.get(tn, 0) < cap):
+                    self._deferred_count -= 1
+                    self._enqueue_tenant(dq.popleft())
         if it == InstructionType.EPOCH and instr.command is not None:
             with self._epoch_cv:
                 self._completed_epochs.add(instr.command.cid)
@@ -663,6 +773,13 @@ class Executor:
             self._h_wait[cls].observe(pending)
             self._h_queue.observe(queue_w)
         if self.tracer is not None:
+            rs = self._rec_sample
+            if (rs > 1 and instr.iid % rs
+                    and self._issue_tracer is None):
+                # standard Tracer (no issue() events): nothing to close in
+                # its open-span table, so the dropped record needs no call
+                self._drops_pending += 1
+                return
             lane = getattr(instr, "trace_lane", None) or f"N{self.node}.{qname}"
             self.tracer.record(
                 self.node, instr, lane, t_reg=t_reg, t_ready=t_ready,
@@ -685,6 +802,9 @@ class Executor:
         if tr is not None:
             tr.counter(f"executor.N{n}.inflight", inflight)
             tr.counter(f"executor.N{n}.ready_depth", ready)
+            if self._drops_pending and hasattr(tr, "note_sampled_out"):
+                tr.note_sampled_out(self._drops_pending)
+                self._drops_pending = 0
 
     # -- horizon-based retirement (§3.5) --------------------------------------
     def _retire_before(self, sync_instr: Instruction) -> None:

@@ -49,7 +49,9 @@ class IdagGenerator:
 
     def __init__(self, node: int, num_devices: int, *, d2d: bool = True,
                  alloc_hints: Optional[dict] = None, retire: bool = False,
-                 budgets: Optional[dict[int, int]] = None, metrics=None):
+                 budgets: Optional[dict[int, int]] = None, metrics=None,
+                 namespace: Optional[str] = None,
+                 buffer_owner: Optional[dict[int, str]] = None):
         self.node = node
         self.num_devices = num_devices
         # ``retire=True`` (used by the runtime) trims ``instructions`` down to
@@ -77,7 +79,9 @@ class IdagGenerator:
         # the memory layer: allocation lifecycle, coherence, budgets,
         # spill/reload (DESIGN.md §8); widening hints double as reservations
         self.mem = MemoryManager(self, d2d=d2d, budgets=budgets,
-                                 hints=alloc_hints, metrics=metrics)
+                                 hints=alloc_hints, metrics=metrics,
+                                 namespace=namespace,
+                                 buffer_owner=buffer_owner)
         self._init_epoch = self._emit(Instruction(
             InstructionType.EPOCH, node=node, queue=("host",), name="init"))
         self._last_epoch = self._init_epoch

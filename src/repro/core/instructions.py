@@ -195,6 +195,9 @@ class Instruction:
     device: Optional[int] = None
     name: str = ""
     command: Optional[object] = None          # the lowered Command, if any
+    # serving-runtime tenant tag (core/memo.py): None for single-program
+    # runs — the executor's fast path keys on it staying None
+    tenant: Optional[str] = None
     iid: int = field(default_factory=lambda: next(_instr_ids))
     dependencies: list[tuple["Instruction", DepKind]] = field(default_factory=list)
     dependents: list["Instruction"] = field(default_factory=list)

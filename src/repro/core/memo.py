@@ -1,0 +1,696 @@
+"""Schedule memoization + multi-tenant serving runtime (DESIGN.md §12).
+
+The paper's thesis is that graph-based IRs move scheduling work off the
+latency-sensitive critical path; a long-lived service handling millions of
+near-identical requests takes that to its limit.  After the first few
+submissions of a task-graph *shape*, TDAG→CDAG→IDAG lowering is pure
+repeated work: this module caches the lowered instruction window, keyed by a
+canonical shape signature, and **replays** it on subsequent submissions with
+only the per-request parameters patched in — fresh instruction/epoch/
+transfer ids and the new kernel closures.  Amortized scheduling cost per
+request approaches the cost of one ``copy.copy`` per instruction.
+
+Multi-tenancy is the second axis: a :class:`ServingRuntime` hosts many
+concurrent client programs (*tenants*) over one communicator + executor
+grid.  Each tenant owns a buffer namespace (cross-tenant buffer access is
+rejected at lowering time by the MemoryManager ownership map), its own
+``memory_budgets``, its own TDAG/CDAG/IDAG pipeline and its own memo cache.
+Executors interleave ready instructions of different tenants round-robin
+and bound per-tenant in-flight work (``max_inflight_per_tenant``).
+
+Correctness is anchored by the bit-identical oracle tests in
+``tests/test_memo.py``: a replayed window must produce exactly the bytes a
+cold-lowered execution produces, on any node/device grid, reductions
+included.
+
+Replay protocol (id-renaming rules — DESIGN.md §12.3):
+
+* every clone gets a fresh ``iid``; in-window dependency edges are remapped
+  onto the clone counterparts, every out-of-window edge onto the tenant's
+  *boundary* (the executed epoch of the previous window) — this serializes
+  a tenant's windows, which is REQUIRED: clones share the template's
+  ``Allocation`` objects ("same base addresses"), so window k+1's scratch
+  ALLOC must not overtake window k's FREE;
+* ``transfer_id`` tuples lead with a task id by convention — patched as
+  ``(tid_map[t[0]],) + t[1:]`` with fresh global task ids, computed once
+  per replay and shared by all nodes so sender and receiver agree;
+* each SEND/COLL_SEND clone draws a fresh ``msg_id`` from its node's IDAG
+  counter and re-posts the matching pilot with patched transfer/msg ids;
+* the window epoch clone gets a fresh EPOCH ``Command`` (fresh cid) so
+  ``wait_epoch`` has a unique completion token per replay;
+* kernel/host closures are patched by task position, which is how
+  per-request data (and ``gather`` collection closures) enter a replay.
+
+A window is *replayable* only if its lowering reached an allocation steady
+state: no persistent (buffer-backed) ALLOC/FREE, no SPILL/RELOAD, and every
+scratch ALLOC balanced by an in-window FREE.  Capture waits for two
+consecutive cold lowerings of the same signature with identical structural
+digests (the lowering fixpoint), so warm-up windows that materialize
+allocations are never cached.
+"""
+
+from __future__ import annotations
+
+import copy
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from . import instructions as _instr_mod
+from . import task_graph as _task_mod
+from .allocation import device_memory
+from .buffer import Accessor, VirtualBuffer
+from .command_graph import Command, CommandGraphGenerator, CommandType
+from .communicator import Communicator
+from .executor import Executor
+from .instruction_graph import IdagGenerator
+from .instructions import Instruction, InstructionType, Pilot
+from .lookahead import LookaheadScheduler
+from .observability import MetricsRegistry
+from .reduction import Reduction
+from .region import Box, Region, split_box
+from .task_graph import TaskGraph, TaskType
+from .tracing import Tracer
+
+
+# -- window signatures -------------------------------------------------------
+
+@dataclass(frozen=True)
+class _Call:
+    """One recorded ``submit`` — structure only, no graph work done yet."""
+    name: str
+    index_space: Box
+    accessors: tuple                 # Accessor | Reduction descriptors
+    kernel_fn: Optional[Callable]
+    ttype: TaskType
+    split_dims: tuple[int, ...]
+    granularity: tuple[int, ...]
+
+
+def _region_sig(region: Region) -> tuple:
+    return tuple((b.min, b.max) for b in region.boxes)
+
+
+def _accessor_sig(acc: Accessor, index_space: Box, chunks: list[Box],
+                  subchunks: list[Box]) -> tuple:
+    """Canonical accessor shape: buffer identity + the *evaluated* range
+    mapper over the full index space, every node chunk and every device
+    subchunk.  Evaluating (rather than hashing the mapper object) makes two
+    submissions equal exactly when lowering cannot tell them apart."""
+    buf = acc.buffer
+    return (buf.bid, buf.shape, str(buf.dtype), acc.mode.value,
+            _region_sig(acc.mapped_region(index_space)),
+            tuple(_region_sig(acc.mapped_region(c)) for c in chunks),
+            tuple(_region_sig(acc.mapped_region(c)) for c in subchunks))
+
+
+def _reduction_sig(red: Reduction) -> tuple:
+    buf = red.buffer
+    return (buf.bid, buf.shape, str(buf.dtype), red.op.name,
+            bool(red.op.combine_order_free), bool(red.include_current_value))
+
+
+def window_signature(calls: Sequence[_Call], *, num_nodes: int,
+                     devices_per_node: int, config: tuple,
+                     budgets: Optional[dict[int, int]],
+                     namespace: str) -> tuple:
+    """Canonical shape signature of one submission window.
+
+    Covers task structure, evaluated ranges/accessors, grid shape, reduction
+    operators, memory budgets and the tenant namespace — and deliberately
+    NOT the data (kernel closures), which is patched in at replay.  Any
+    difference that could change the lowered instruction stream must change
+    the signature; data that cannot, must not.
+    """
+    call_sigs = []
+    for c in calls:
+        chunks = split_box(c.index_space, num_nodes, c.split_dims,
+                           c.granularity)
+        subchunks = [s for ch in chunks
+                     for s in split_box(ch, devices_per_node, c.split_dims,
+                                        c.granularity)]
+        accs = tuple(_accessor_sig(a, c.index_space, chunks, subchunks)
+                     for a in c.accessors if isinstance(a, Accessor))
+        reds = tuple(_reduction_sig(r)
+                     for r in c.accessors if isinstance(r, Reduction))
+        call_sigs.append((c.ttype.value, c.name,
+                          (c.index_space.min, c.index_space.max),
+                          c.split_dims, c.granularity, accs, reds))
+    return (tuple(call_sigs), (num_nodes, devices_per_node) + config,
+            tuple(sorted((budgets or {}).items())), namespace)
+
+
+# -- cached windows ----------------------------------------------------------
+
+_SEND_TYPES = (InstructionType.SEND, InstructionType.COLL_SEND)
+_SYNC_TYPES = (InstructionType.HORIZON, InstructionType.EPOCH)
+
+
+def _window_digest(node_instrs: list[list[Instruction]]) -> tuple:
+    """Structural digest of one lowered window.
+
+    Id-free: two lowerings of the same shape at the allocation fixpoint
+    digest identically.  Allocation ids are canonicalized to first-
+    appearance order within the window — scratch allocations draw a fresh
+    global ``aid`` on every lowering, which must not defeat the fixpoint.
+    """
+    out = []
+    for instrs in node_instrs:
+        canon: dict[int, int] = {}
+        sig = []
+        for i in instrs:
+            a = i.allocation
+            aid = (None if a is None
+                   else (a.bid, canon.setdefault(a.aid, len(canon))))
+            # FREE names embed the raw aid — the canonical tuple already
+            # identifies the allocation, so keep the digest id-free
+            name = "" if i.itype == InstructionType.FREE else i.name
+            sig.append((i.itype.value, name, i.queue, i.dest, aid))
+        out.append(tuple(sig))
+    return tuple(out)
+
+
+def _replayable(node_instrs: list[list[Instruction]]) -> Optional[str]:
+    """Why this window may NOT be replayed (None = replayable).
+
+    Persistent (buffer-backed) ALLOC/FREE or SPILL/RELOAD mean the
+    allocation pattern has not reached steady state — replaying would
+    re-materialize or tear down long-lived backings.  Scratch ALLOCs must
+    be balanced by in-window FREEs so each replay's alloc/free pairs nest.
+    """
+    for instrs in node_instrs:
+        open_scratch: set[int] = set()
+        for i in instrs:
+            if i.itype in (InstructionType.SPILL, InstructionType.RELOAD):
+                return f"{i.itype.value} in window (budget pressure)"
+            if i.itype == InstructionType.ALLOC:
+                if i.allocation.bid is not None:
+                    return f"persistent alloc of B{i.allocation.bid}"
+                open_scratch.add(i.allocation.aid)
+            elif i.itype == InstructionType.FREE:
+                if i.allocation.bid is not None:
+                    return f"persistent free of B{i.allocation.bid}"
+                open_scratch.discard(i.allocation.aid)
+        if open_scratch:
+            return f"unbalanced scratch allocs {sorted(open_scratch)}"
+    return None
+
+
+@dataclass
+class _Template:
+    """One captured, relocatable instruction window (the memo cache value).
+
+    The template instructions are pristine: never submitted to an executor
+    (state stays ``pending``, dependency lists intact).  Replay clones
+    them, patching the parameter table; see the module docstring for the
+    id-renaming rules.
+    """
+    node_instrs: list[list[Instruction]]
+    node_pilots: list[list[Pilot]]             # per node, this window's pilots
+    epoch_idx: list[int]                        # per node: window-epoch index
+    tids: tuple[int, ...]                       # distinct template task ids
+    tid_to_call: dict[int, int]                 # template task id -> call pos
+    replays: int = 0
+
+
+@dataclass
+class _CacheEntry:
+    digest: Optional[tuple] = None
+    template: Optional[_Template] = None
+    unreplayable: Optional[str] = None          # sticky guard-failure reason
+
+
+class WindowHandle:
+    """Completion token of one submitted window (cold or replayed)."""
+
+    def __init__(self, tenant: "Tenant", cids: list[Optional[int]],
+                 cached: bool):
+        self.tenant = tenant
+        self.cached = cached                    # True = replayed from cache
+        self._cids = cids
+        self._done = False
+
+    def wait(self, timeout: float = 60.0) -> None:
+        if self._done:
+            return
+        for n, cid in enumerate(self._cids):
+            if cid is None:
+                continue
+            ex = self.tenant.srv.executors[n]
+            ex.wait_epoch(cid, timeout=timeout)
+            # a serving process sees an unbounded epoch stream: drop the
+            # completion token so executor epoch state stays bounded
+            ex.forget_epoch(cid)
+        self._done = True
+
+
+class Tenant:
+    """One client program: its own namespace, budgets, pipeline and cache.
+
+    ``submit`` only records call structure; ``run`` closes the window,
+    consults the memo cache, and either lowers cold (synchronously, on the
+    calling thread — the scheduling work we are amortizing away) or replays
+    the cached template.  All submission-side state is guarded by a
+    per-tenant lock; different tenants submit fully concurrently.
+    """
+
+    def __init__(self, srv: "ServingRuntime", name: str,
+                 memory_budgets: Optional[dict[int, int]] = None,
+                 max_queued_windows: int = 8):
+        self.srv = srv
+        self.name = name
+        self.memory_budgets = dict(memory_budgets or {})
+        self._lock = threading.RLock()
+        self.tdag = TaskGraph(horizon_step=srv.horizon_step,
+                              fuse_reductions=srv.reduction_fusion)
+        self.cdags = [CommandGraphGenerator(srv.num_nodes, retire_for=n,
+                                            collectives=srv.collectives,
+                                            allreduce=srv.reduction_allreduce)
+                      for n in range(srv.num_nodes)]
+        self.idags = [IdagGenerator(n, srv.devices_per_node, d2d=srv.d2d,
+                                    retire=True,
+                                    budgets=self.memory_budgets or None,
+                                    metrics=srv.metrics_registry,
+                                    namespace=name,
+                                    buffer_owner=srv._buffer_owner)
+                      for n in range(srv.num_nodes)]
+        self.lookaheads = [LookaheadScheduler(self.idags[n],
+                                              enabled=srv.lookahead,
+                                              retire_compiled=True,
+                                              metrics=srv.metrics_registry)
+                           for n in range(srv.num_nodes)]
+        self._sent = 0                      # lifetime task indices broadcast
+        self._calls: list[_Call] = []
+        self._memo: dict[tuple, _CacheEntry] = {}
+        # the executed epoch instruction every out-of-window replay edge
+        # remaps onto (starts at the bootstrap init epoch)
+        self.last_boundary: list[Instruction] = []
+        # submission-side backpressure: run() blocks on the window
+        # ``max_queued_windows`` back, bounding blocked-instruction state
+        # held inside the executors per tenant
+        self._inflight: deque[WindowHandle] = deque()
+        self.max_queued_windows = max_queued_windows
+        self.lowered_windows = 0
+        self.replayed_windows = 0
+        # bootstrap: the IDAG's construction-time init epoch must execute
+        for n in range(srv.num_nodes):
+            boot = list(self.idags[n].instructions)
+            for i in boot:
+                i.tenant = name
+            self.last_boundary.append(self.idags[n]._init_epoch)
+            srv.executors[n].submit(boot)
+
+    # -- client API --------------------------------------------------------
+    def buffer(self, shape: Sequence[int], dtype=np.float64, *,
+               name: str = "", init: Optional[np.ndarray] = None
+               ) -> VirtualBuffer:
+        buf = VirtualBuffer(shape=tuple(shape), dtype=np.dtype(dtype),
+                            name=f"{self.name}/{name}" if name else "",
+                            initial_value=init)
+        if not name:
+            buf.name = f"{self.name}/{buf.name}"
+        self.srv._buffer_owner[buf.bid] = self.name
+        return buf
+
+    def submit(self, name: str, index_space, accessors: Sequence,
+               kernel_fn: Callable | None = None, *,
+               ttype: TaskType = TaskType.KERNEL,
+               split_dims: Sequence[int] = (0,),
+               granularity: Sequence[int] = (1,)) -> None:
+        """Record one command group for the current window (no lowering)."""
+        if not isinstance(index_space, Box):
+            index_space = Box.full(tuple(index_space))
+        with self._lock:
+            self._calls.append(_Call(name, index_space, tuple(accessors),
+                                     kernel_fn, ttype, tuple(split_dims),
+                                     tuple(granularity)))
+
+    def run(self, timeout: float = 60.0) -> WindowHandle:
+        """Close the current window and submit it (cached or cold)."""
+        with self._lock:
+            calls, self._calls = self._calls, []
+            while len(self._inflight) >= self.max_queued_windows:
+                self._inflight.popleft().wait(timeout=timeout)
+            handle = self._run_window(calls)
+            self._inflight.append(handle)
+            return handle
+
+    def gather(self, buf: VirtualBuffer, timeout: float = 60.0) -> np.ndarray:
+        """Assemble the buffer on the caller's side (itself memoizable:
+        replays patch in the fresh collection closure)."""
+        from .buffer import read as read_acc
+        from .range_mapper import one_to_one
+        out = np.empty(buf.shape, dtype=buf.dtype)
+        lock = threading.Lock()
+
+        def collect(chunk: Box, view) -> None:
+            data = view.get(chunk)
+            sl = tuple(slice(a, b) for a, b in zip(chunk.min, chunk.max))
+            with lock:
+                out[sl] = data
+
+        with self._lock:
+            self.submit(f"gather {buf.name}", buf.shape,
+                        [read_acc(buf, one_to_one())], collect,
+                        ttype=TaskType.HOST)
+            self.run(timeout=timeout).wait(timeout=timeout)
+            self.drain(timeout=timeout)
+        return out
+
+    def drain(self, timeout: float = 60.0) -> None:
+        """Wait for every submitted window of this tenant to complete."""
+        with self._lock:
+            while self._inflight:
+                self._inflight.popleft().wait(timeout=timeout)
+
+    # -- window machinery --------------------------------------------------
+    def _signature(self, calls: list[_Call]) -> tuple:
+        return window_signature(calls, num_nodes=self.srv.num_nodes,
+                                devices_per_node=self.srv.devices_per_node,
+                                config=self.srv._config_sig,
+                                budgets=self.memory_budgets,
+                                namespace=self.name)
+
+    def _run_window(self, calls: list[_Call]) -> WindowHandle:
+        srv = self.srv
+        m = srv.metrics_registry
+        entry: Optional[_CacheEntry] = None
+        if srv.memo:
+            sig = self._signature(calls)
+            entry = self._memo.get(sig)
+            if entry is None:
+                entry = self._memo[sig] = _CacheEntry()
+        if entry is not None and entry.template is not None:
+            t0 = time.perf_counter()
+            handle = self._replay(entry.template, calls)
+            if m is not None:
+                m.counter("memo.hits")
+                m.counter(f"serve.{self.name}.hits")
+                m.observe("memo.patch_us", (time.perf_counter() - t0) * 1e6)
+            self.replayed_windows += 1
+            entry.template.replays += 1
+            return handle
+        if m is not None and srv.memo:
+            m.counter("memo.misses")
+            m.counter(f"serve.{self.name}.misses")
+        node_instrs, node_pilots, cids, tid_to_call = self._lower(calls)
+        self.lowered_windows += 1
+        if entry is not None and entry.unreplayable is None:
+            digest = _window_digest(node_instrs)
+            if entry.digest is not None and digest == entry.digest:
+                # lowering fixpoint reached: two consecutive cold lowerings
+                # of this signature were structurally identical — capture
+                why = _replayable(node_instrs)
+                if why is None:
+                    entry.template = self._capture(node_instrs, node_pilots,
+                                                   tid_to_call)
+                    # the capturing lowering executes as a CLONE so the
+                    # template instructions stay pristine
+                    return self._replay(entry.template, calls, identity=True)
+                entry.unreplayable = why
+                if m is not None:
+                    m.counter("memo.unreplayable")
+            entry.digest = digest
+        # cold path: execute the lowered window directly
+        for n in range(srv.num_nodes):
+            self._submit_window(n, node_instrs[n], node_pilots[n])
+        return WindowHandle(self, cids, cached=False)
+
+    def _lower(self, calls: list[_Call]):
+        """Cold TDAG→CDAG→IDAG lowering of one window, synchronously on the
+        calling thread (the cost the memo cache amortizes away)."""
+        srv, tdag = self.srv, self.tdag
+        call_tasks = []
+        for c in calls:
+            call_tasks.append(tdag.submit(
+                c.name, c.index_space, c.accessors, c.kernel_fn,
+                ttype=c.ttype, split_dims=c.split_dims,
+                granularity=c.granularity))
+        epoch_task = tdag.emit_epoch("window")
+        tid_to_call = {t.tid: pos for pos, t in enumerate(call_tasks)}
+        N = srv.num_nodes
+        node_instrs: list[list[Instruction]] = [[] for _ in range(N)]
+        cids: list[Optional[int]] = [None] * N
+        newly = tdag.tasks[self._sent - tdag._base:]
+        for task in newly:
+            self._sent += 1
+            if task.ttype == TaskType.EPOCH and task.name == "init":
+                continue
+            for n in range(N):
+                for cmd in self.cdags[n].process(task):
+                    if cmd.node != n:
+                        continue
+                    if (cmd.ctype == CommandType.EPOCH
+                            and task is epoch_task):
+                        cids[n] = cmd.cid
+                    node_instrs[n].extend(self.lookaheads[n].push(cmd))
+        tdag.retire_to(self._sent)
+        # the window ends in an epoch, so the lookahead flushed completely:
+        # each IDAG's pilot list is exactly this window's pilots
+        node_pilots: list[list[Pilot]] = []
+        for n in range(N):
+            pilots = self.idags[n].pilots
+            node_pilots.append(list(pilots))
+            del pilots[:]
+        return node_instrs, node_pilots, cids, tid_to_call
+
+    def _submit_window(self, n: int, instrs: list[Instruction],
+                       pilots: list[Pilot]) -> None:
+        """Execute a cold-lowered window: rewire edges that point at never-
+        executed template instructions onto the executed boundary, tag the
+        tenant, post pilots, and advance the boundary."""
+        boundary = self.last_boundary[n]
+        epoch_instr = None
+        for i in instrs:
+            i.tenant = self.name
+            if any(getattr(d, "_memo_template", False)
+                   for d, _ in i.dependencies):
+                i.dependencies = [(d, k) for d, k in i.dependencies
+                                  if not getattr(d, "_memo_template", False)]
+                i.add_dependency(boundary, _task_mod.DepKind.SYNC)
+            if i.itype == InstructionType.EPOCH:
+                epoch_instr = i
+        for p in pilots:
+            self.srv.comm.post_pilot(p)
+        if epoch_instr is not None:
+            self.last_boundary[n] = epoch_instr
+        self.srv.executors[n].submit(instrs)
+
+    def _capture(self, node_instrs, node_pilots, tid_to_call) -> _Template:
+        tids: list[int] = []
+        seen: set[int] = set()
+        epoch_idx: list[int] = []
+        for instrs in node_instrs:
+            e = -1
+            for idx, i in enumerate(instrs):
+                i._memo_template = True
+                if i.itype == InstructionType.EPOCH:
+                    e = idx
+                t = i.transfer_id
+                if t is not None and t[0] not in seen:
+                    seen.add(t[0])
+                    tids.append(t[0])
+            epoch_idx.append(e)
+        for pilots in node_pilots:
+            for p in pilots:
+                if p.transfer_id[0] not in seen:
+                    seen.add(p.transfer_id[0])
+                    tids.append(p.transfer_id[0])
+        return _Template(node_instrs=node_instrs, node_pilots=node_pilots,
+                         epoch_idx=epoch_idx, tids=tuple(tids),
+                         tid_to_call=dict(tid_to_call))
+
+    def _replay(self, tpl: _Template, calls: list[_Call], *,
+                identity: bool = False) -> WindowHandle:
+        """Instantiate a cached window: clone + patch + submit.
+
+        ``identity=True`` is the capture submission itself: the very
+        lowering that produced the template still has to execute once, with
+        its original ids (its pilots and transfer ids are already the
+        template's) — so the parameter table maps every id to itself.
+        """
+        srv = self.srv
+        N = srv.num_nodes
+        # one tid map for the whole replay: sender and receiver nodes must
+        # agree on the patched transfer ids
+        if identity:
+            tid_map = {t: t for t in tpl.tids}
+        else:
+            tid_map = {t: next(_task_mod._task_ids) for t in tpl.tids}
+        cids: list[Optional[int]] = [None] * N
+        for n in range(N):
+            idag = self.idags[n]
+            clones: dict[int, Instruction] = {}
+            out: list[Instruction] = []
+            msg_map: dict[int, int] = {}
+            boundary = self.last_boundary[n]
+            for i in tpl.node_instrs[n]:
+                c = copy.copy(i)
+                c.iid = next(_instr_mod._instr_ids)
+                c.dependencies = []
+                c.dependents = []
+                c.state = "pending"
+                c.tenant = self.name
+                c._memo_template = False
+                if c.transfer_id is not None:
+                    t = c.transfer_id
+                    c.transfer_id = (tid_map[t[0]],) + t[1:]
+                if c.msg_id is not None:
+                    nm = c.msg_id if identity else next(idag._msg_ids)
+                    msg_map[i.msg_id] = nm
+                    c.msg_id = nm
+                if c.split_parent is not None:
+                    c.split_parent = clones[c.split_parent.iid]
+                if (not identity and c.itype == InstructionType.EPOCH
+                        and c.command is not None):
+                    c.command = Command(CommandType.EPOCH, node=n, task=None)
+                if (c.itype in (InstructionType.DEVICE_KERNEL,
+                                InstructionType.HOST_TASK)
+                        and c.command is not None
+                        and c.command.task is not None):
+                    pos = tpl.tid_to_call.get(c.command.task.tid)
+                    if pos is not None and pos < len(calls):
+                        c.kernel_fn = calls[pos].kernel_fn
+                needs_boundary = not i.dependencies
+                for d, k in i.dependencies:
+                    dc = clones.get(d.iid)
+                    if dc is not None:
+                        c.add_dependency(dc, k)
+                    else:
+                        needs_boundary = True
+                if needs_boundary:
+                    c.add_dependency(boundary, _task_mod.DepKind.SYNC)
+                clones[i.iid] = c
+                out.append(c)
+            e = tpl.epoch_idx[n]
+            if e >= 0:
+                epoch_clone = clones[tpl.node_instrs[n][e].iid]
+                cids[n] = (epoch_clone.command.cid
+                           if epoch_clone.command is not None else None)
+                self.last_boundary[n] = epoch_clone
+            for p in tpl.node_pilots[n]:
+                t = p.transfer_id
+                srv.comm.post_pilot(Pilot(
+                    source=p.source, target=p.target,
+                    transfer_id=(tid_map[t[0]],) + t[1:], box=p.box,
+                    msg_id=msg_map.get(p.msg_id, p.msg_id), gather=p.gather))
+            srv.executors[n].submit(out)
+        return WindowHandle(self, cids, cached=not identity)
+
+
+class ServingRuntime:
+    """Long-lived multi-tenant runtime with schedule memoization.
+
+    One communicator + per-node executor grid shared by every tenant; the
+    per-program scheduler layers (TDAG/CDAG/IDAG/lookahead) are per-tenant
+    and run synchronously on the submitting client thread — on a memo-cache
+    hit they are not run at all.
+    """
+
+    def __init__(self, num_nodes: int = 1, devices_per_node: int = 1, *,
+                 memo: bool = True, lookahead: bool = True, d2d: bool = True,
+                 collectives: bool = True, reduction_fusion: bool = True,
+                 reduction_allreduce: bool = True, horizon_step: int = 4,
+                 queues_per_device: int = 2, host_threads: int = 4,
+                 max_inflight_per_tenant: Optional[int] = None,
+                 metrics: bool = True, trace: bool = False,
+                 record_sample: int = 1, reliable: bool = True):
+        self.num_nodes = num_nodes
+        self.devices_per_node = devices_per_node
+        self.memo = memo
+        self.lookahead = lookahead
+        self.d2d = d2d
+        self.collectives = collectives
+        self.reduction_fusion = reduction_fusion and collectives
+        self.reduction_allreduce = reduction_allreduce and collectives
+        self.horizon_step = horizon_step
+        self.tracer = Tracer(record_sample=record_sample) if trace else None
+        self.metrics_registry = MetricsRegistry() if metrics else None
+        # grid-shape part of every window signature: anything here that
+        # changes lowering output MUST invalidate cached windows
+        self._config_sig = (d2d, self.collectives, self.reduction_fusion,
+                            self.reduction_allreduce, horizon_step, lookahead)
+        self._buffer_owner: dict[int, str] = {}
+        self.comm = Communicator(num_nodes, reliable=reliable,
+                                 tracer=self.tracer,
+                                 metrics=self.metrics_registry)
+        self.executors = [
+            Executor(n, devices_per_node, self.comm,
+                     queues_per_device=queues_per_device,
+                     host_threads=host_threads, tracer=self.tracer,
+                     metrics=self.metrics_registry,
+                     max_inflight_per_tenant=max_inflight_per_tenant)
+            for n in range(num_nodes)]
+        self.tenants: dict[str, Tenant] = {}
+        self._tenant_lock = threading.Lock()
+        self._shut = False
+
+    def tenant(self, name: str, *,
+               memory_budgets: Optional[dict[int, int]] = None,
+               device_memory_budget: Optional[int] = None,
+               max_queued_windows: int = 8) -> Tenant:
+        budgets = dict(memory_budgets or {})
+        if device_memory_budget is not None:
+            for d in range(self.devices_per_node):
+                budgets.setdefault(device_memory(d), device_memory_budget)
+        with self._tenant_lock:
+            if name in self.tenants:
+                raise ValueError(f"tenant '{name}' already exists")
+            t = self.tenants[name] = Tenant(
+                self, name, memory_budgets=budgets,
+                max_queued_windows=max_queued_windows)
+        return t
+
+    # -- observability -----------------------------------------------------
+    def memo_stats(self) -> dict:
+        """Cache effectiveness + per-tenant window counters."""
+        snap = (self.metrics_registry.snapshot()
+                if self.metrics_registry is not None else
+                dict(counters={}, histograms={}))
+        counters = snap.get("counters", {})
+        return dict(
+            hits=counters.get("memo.hits", 0),
+            misses=counters.get("memo.misses", 0),
+            unreplayable=counters.get("memo.unreplayable", 0),
+            patch_us=snap.get("histograms", {}).get("memo.patch_us"),
+            tenants={name: dict(lowered=t.lowered_windows,
+                                replayed=t.replayed_windows,
+                                tasks=t.tdag.task_count,
+                                instructions=sum(g.emitted_count
+                                                 for g in t.idags),
+                                done={n: self.executors[n].tenant_done
+                                          .get(name, 0)
+                                      for n in range(self.num_nodes)})
+                     for name, t in self.tenants.items()})
+
+    def metrics(self) -> dict:
+        snap = (self.metrics_registry.snapshot()
+                if self.metrics_registry is not None
+                else dict(counters={}, gauges={}, histograms={}))
+        snap["memo"] = self.memo_stats()
+        return snap
+
+    # -- lifecycle ---------------------------------------------------------
+    def shutdown(self) -> None:
+        if self._shut:
+            return
+        self._shut = True
+        for t in self.tenants.values():
+            try:
+                t.drain(timeout=30.0)
+            except Exception:       # noqa: BLE001 — teardown is best-effort
+                pass
+        for ex in self.executors:
+            ex.shutdown()
+        if self.tracer is not None and self.metrics_registry is not None:
+            self.metrics_registry.export_counters(self.tracer)
+
+    def __enter__(self) -> "ServingRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -105,13 +105,24 @@ class MemoryManager:
     def __init__(self, host, *, d2d: bool = True,
                  budgets: Optional[dict[int, int]] = None,
                  hints: Optional[dict[tuple[int, int], Region]] = None,
-                 metrics=None):
+                 metrics=None, namespace: Optional[str] = None,
+                 buffer_owner: Optional[dict[int, str]] = None):
         self.host = host
         self.d2d = d2d
+        # multi-tenant serving (DESIGN.md §12): managers of different
+        # tenants share one process but must never alias buffers.
+        # ``namespace`` scopes the metric prefix; ``buffer_owner`` is the
+        # serving runtime's shared bid -> tenant map consulted on
+        # registration so a program that smuggles another tenant's buffer
+        # handle is rejected at lowering time, not at data corruption time.
+        self.namespace = namespace
+        self.buffer_owner = buffer_owner
         # observability (DESIGN.md §11): pressure events mirrored into the
-        # unified registry under ``memory.N<node>.*``
+        # unified registry under ``memory.N<node>.*`` (namespace-scoped to
+        # ``memory.<ns>.N<node>.*`` for serving tenants)
         self.metrics = metrics
-        self._metric_prefix = f"memory.N{getattr(host, 'node', 0)}."
+        ns = f"{namespace}." if namespace else ""
+        self._metric_prefix = f"memory.{ns}N{getattr(host, 'node', 0)}."
         self.budgets: dict[int, int] = dict(budgets or {})
         if USER_HOST in self.budgets:
             raise ValueError(
@@ -191,6 +202,12 @@ class MemoryManager:
     def register_buffer(self, buf: VirtualBuffer) -> None:
         if buf.bid in self.buffers:
             return
+        if self.buffer_owner is not None and self.namespace is not None:
+            owner = self.buffer_owner.get(buf.bid)
+            if owner is not None and owner != self.namespace:
+                raise PermissionError(
+                    f"tenant '{self.namespace}' accessed buffer "
+                    f"'{buf.name}' (B{buf.bid}) owned by tenant '{owner}'")
         self.buffers[buf.bid] = buf
         if buf.initial_value is not None:
             # data present in user host memory M0, produced by init epoch

@@ -302,6 +302,11 @@ class TaskGraph:
             st.last_readers = []
         self._last_epoch = epoch
         self._last_horizon = None
+        # the epoch compacted every tracking structure — it is a pruning
+        # point at least as strong as a horizon, so the horizon cadence
+        # restarts here (otherwise a horizon can fire one task after the
+        # epoch, and horizon placement depends on cross-epoch phase)
+        self._cp_at_last_horizon = epoch.critical_path
         self._red_chain = []              # fusion scope ends at the epoch
         return epoch
 

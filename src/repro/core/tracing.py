@@ -40,8 +40,14 @@ class Tracer:
     # Duck-typed tracer doubles that want live issue events leave this True.
     issue_events = False
 
-    def __init__(self) -> None:
+    def __init__(self, *, record_sample: int = 1) -> None:
         self._lock = threading.Lock()
+        # 1-in-N InstrRecord capture: with ``record_sample=N > 1`` only every
+        # Nth completion is recorded, cutting traced issue overhead at the
+        # cost of honestly widened gaps in the critical-path report (the
+        # analyzer's ``unattributed_us`` absorbs the dropped records)
+        self.record_sample = max(1, int(record_sample))
+        self.records_sampled_out = 0
         self.spans: list[Span] = []
         # counter tracks: name -> [(t, value)] — used for the per-memory
         # byte high-water marks the budget acceptance checks read
@@ -115,6 +121,16 @@ class Tracer:
         stamps; converted to tracer-epoch time here).  Replaces the
         issue/complete pair on the executor's hot path: one lock, one
         append, and the fig.-7 execution span is derived lazily."""
+        rs = self.record_sample
+        if rs > 1 and instr.iid % rs:
+            # the keep/drop decision is a pure function of the iid so the
+            # executor's completion path can short-circuit dropped records
+            # without this call (it batches the drop count and flushes it
+            # via ``note_sampled_out`` at horizon boundaries)
+            with self._lock:
+                self.records_sampled_out += 1
+                self._open.pop((node, instr.iid), None)
+                return
         e = self.epoch
         cmd = instr.command
         task = cmd.task if cmd is not None else None
@@ -128,6 +144,12 @@ class Tracer:
         with self._lock:
             self.records.append(rec)
             self._open.pop((node, instr.iid), None)
+
+    def note_sampled_out(self, n: int) -> None:
+        """Credit ``n`` executor-side-dropped records (sampling fast path)."""
+        if n:
+            with self._lock:
+                self.records_sampled_out += n
 
     # analysis ---------------------------------------------------------------
     def lanes(self) -> dict[str, list[Span]]:

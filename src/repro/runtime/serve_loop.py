@@ -9,6 +9,7 @@ the queue between decode rounds (batch-level continuous batching).
 
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
 from dataclasses import dataclass, field
@@ -40,13 +41,16 @@ class ServeLoop:
         self.max_batch = max_batch
         self.max_len = max_len
         self.queue: "queue.Queue[Request]" = queue.Queue()
-        self._rid = 0
+        # submit() is called from many client threads: itertools.count is
+        # atomic under the GIL, unlike the read-modify-write `_rid += 1`
+        # which could hand two threads the same rid (and lose a request to
+        # anyone keying on it)
+        self._rids = itertools.count(1)
         self._decode = jax.jit(self.model.decode_step)
         self.stats = {"batches": 0, "decode_steps": 0, "requests": 0}
 
     def submit(self, prompt: np.ndarray, max_new: int = 16) -> Request:
-        self._rid += 1
-        req = Request(self._rid, np.asarray(prompt, np.int32), max_new)
+        req = Request(next(self._rids), np.asarray(prompt, np.int32), max_new)
         self.queue.put(req)
         return req
 

@@ -1,0 +1,371 @@
+"""Schedule-memoization + multi-tenant serving runtime tests (DESIGN.md §12).
+
+Covers: bit-identical cached-replay vs cold-lowered execution across
+node x device grids (reductions included), the zero-lowering guarantee on
+cache hits (TDAG/IDAG lifetime counters frozen), signature invalidation
+(every near-identical resubmission that must NOT reuse a cached window),
+cross-tenant buffer isolation (PermissionError at lowering time), fair
+interleaving + per-tenant admission control, and bounded runtime state
+under a multi-tenant soak (arbiter/executor maps must not grow with the
+window count).
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (Runtime, ServingRuntime, all_range, one_to_one,
+                        read, read_write, reduction, window_signature)
+from repro.core.memo import _Call
+from repro.core.region import Box
+from repro.core.task_graph import TaskType
+
+GRIDS = [(1, 1), (2, 2), (3, 1)]
+N = 12
+
+
+def step_kernel(chunk, v):
+    v.set(chunk, v.get(chunk) * 1.0001 + 1.0)
+
+
+def step_oracle(a):
+    return a * 1.0001 + 1.0
+
+
+def red_kernel(chunk, v, acc):
+    x = v.get(chunk)
+    s = float(x.sum())
+    v.set(chunk, x + 0.5)
+    acc.contribute(s)
+
+
+# -- bit-identical replay vs cold lowering ------------------------------------
+@pytest.mark.parametrize("nodes,devs", GRIDS)
+def test_replay_bit_identical(nodes, devs):
+    """Windows 1..K: the later ones replay the cached template and must
+    produce exactly the bytes the cold-lowered windows produce."""
+    a0 = np.arange(N * N, dtype=np.float64).reshape(N, N)
+    with ServingRuntime(nodes, devs) as srv:
+        t = srv.tenant("t0")
+        buf = t.buffer((N, N), init=a0, name="A")
+        want = a0.copy()
+        for w in range(8):
+            t.submit("step", (N, N), [read_write(buf, one_to_one())],
+                     step_kernel)
+            t.run()
+            want = step_oracle(want)
+            got = t.gather(buf)
+            assert got.dtype == want.dtype
+            assert np.array_equal(got, want), f"window {w}"
+        assert t.replayed_windows > 0          # later windows were replays
+        assert srv.memo_stats()["hits"] > 0
+
+
+@pytest.mark.parametrize("nodes,devs", GRIDS)
+def test_replay_bit_identical_reduction(nodes, devs):
+    """Reduction windows (scratch alloc/free + gather/fold traffic) replay
+    bit-identically: the fold order the template captured is replayed."""
+    a0 = np.arange(N, dtype=np.float64)
+    with ServingRuntime(nodes, devs) as srv:
+        t = srv.tenant("t0")
+        buf = t.buffer((N,), init=a0, name="A")
+        s = t.buffer((1,), init=np.zeros(1), name="S")
+        a = a0.copy()
+        for w in range(8):
+            t.submit("step", (N,), [read_write(buf, one_to_one()),
+                                    reduction(s, "sum")], red_kernel)
+            t.run()
+            got_s = t.gather(s)
+            assert got_s[0] == a.sum(), f"window {w}"
+            a = a + 0.5
+        assert np.array_equal(t.gather(buf), a)
+        assert t.replayed_windows > 0
+        assert srv.memo_stats()["unreplayable"] == 0
+
+
+def test_replay_matches_plain_runtime():
+    """Cross-check the serving runtime against the plain Runtime oracle on
+    the same program: identical bytes, including the replayed windows."""
+    a0 = np.linspace(-3, 3, N * N).reshape(N, N)
+    with Runtime(2, 2) as rt:
+        pb = rt.buffer((N, N), init=a0, name="P")
+        for _ in range(6):
+            rt.submit("step", (N, N), [read_write(pb, one_to_one())],
+                      step_kernel)
+        want = rt.gather(pb)
+    with ServingRuntime(2, 2) as srv:
+        t = srv.tenant("t0")
+        sb = t.buffer((N, N), init=a0, name="P")
+        for _ in range(6):
+            t.submit("step", (N, N), [read_write(sb, one_to_one())],
+                     step_kernel)
+            t.run()
+        got = t.gather(sb)
+    assert np.array_equal(got, want)
+
+
+# -- zero lowering on cache hits ----------------------------------------------
+def test_cache_hit_performs_zero_lowering():
+    """After capture, further submissions must not touch TDAG/CDAG/IDAG:
+    the lifetime task and instruction counters freeze while hits accrue."""
+    a0 = np.ones((N, N))
+    with ServingRuntime(2, 1) as srv:
+        t = srv.tenant("t0")
+        buf = t.buffer((N, N), init=a0, name="A")
+
+        def window():
+            t.submit("step", (N, N), [read_write(buf, one_to_one())],
+                     step_kernel)
+            t.run().wait()
+
+        for _ in range(4):                     # warm to the digest fixpoint
+            window()
+        t.drain()
+        assert t.replayed_windows > 0, "template was never captured"
+        tasks0 = t.tdag.task_count
+        instrs0 = sum(g.emitted_count for g in t.idags)
+        hits0 = srv.memo_stats()["hits"]
+        for _ in range(5):
+            window()
+        t.drain()
+        assert t.tdag.task_count == tasks0          # no TDAG work
+        assert sum(g.emitted_count for g in t.idags) == instrs0  # no IDAG work
+        assert srv.memo_stats()["hits"] == hits0 + 5
+        # and the replays still computed the right thing
+        assert np.array_equal(t.gather(buf)[0, 0],
+                              np.float64(_iterate(1.0, 9)))
+
+
+def _iterate(x, k):
+    for _ in range(k):
+        x = x * 1.0001 + 1.0
+    return x
+
+
+def test_memo_off_never_replays():
+    a0 = np.ones((N,))
+    with ServingRuntime(1, 1, memo=False) as srv:
+        t = srv.tenant("t0")
+        buf = t.buffer((N,), init=a0)
+        for _ in range(5):
+            t.submit("step", (N,), [read_write(buf, one_to_one())],
+                     step_kernel)
+            t.run()
+        t.drain()
+        assert t.replayed_windows == 0
+        assert t.lowered_windows == 5
+
+
+# -- invalidation: near-identical windows that MUST miss ----------------------
+def _warm(t, buf, k=4):
+    for _ in range(k):
+        t.submit("step", (N,), [read_write(buf, one_to_one())], step_kernel)
+        t.run()
+    t.drain()
+
+
+def test_miss_on_changed_range_mapper():
+    a0 = np.arange(N, dtype=np.float64)
+    with ServingRuntime(2, 1) as srv:
+        t = srv.tenant("t0")
+        buf = t.buffer((N,), init=a0, name="A")
+        out = t.buffer((N,), init=np.zeros(N), name="O")
+        _warm(t, buf)
+        assert t.replayed_windows > 0
+        misses0 = srv.memo_stats()["misses"]
+
+        def narrow(chunk, s, d):             # reads own chunk only
+            d.set(chunk, s.get(chunk) * 2.0)
+
+        def widened(chunk, s, d):            # reads ALL, writes own chunk
+            d.set(chunk, np.full(tuple(b - a for a, b in
+                                       zip(chunk.min, chunk.max)),
+                                 float(s.get(Box((0,), (N,))).sum())))
+
+        t.submit("proj", (N,), [read(buf, one_to_one()),
+                                read_write(out, one_to_one())], narrow)
+        t.run()
+        t.drain()
+        misses1 = srv.memo_stats()["misses"]
+        assert misses1 == misses0 + 1
+        # same buffers, same task name — only the read range mapper widens
+        t.submit("proj", (N,), [read(buf, all_range()),
+                                read_write(out, one_to_one())], widened)
+        t.run()
+        t.drain()
+        assert srv.memo_stats()["misses"] == misses1 + 1
+        want = np.full(N, _warm_oracle(a0, 4).sum())
+        assert np.array_equal(t.gather(out), want)
+
+
+def _warm_oracle(a, k):
+    for _ in range(k):
+        a = step_oracle(a)
+    return a
+
+
+def test_miss_on_changed_granularity():
+    """Same kernel, same ranges — different chunking hint must re-lower
+    (the per-node/per-device chunk evaluation differs)."""
+    a0 = np.arange(N, dtype=np.float64)
+    with ServingRuntime(2, 1) as srv:
+        t = srv.tenant("t0")
+        buf = t.buffer((N,), init=a0, name="A")
+        _warm(t, buf)
+        misses0 = srv.memo_stats()["misses"]
+        t.submit("step", (N,), [read_write(buf, one_to_one())],
+                 step_kernel, granularity=(3,))
+        t.run()
+        t.drain()
+        assert srv.memo_stats()["misses"] == misses0 + 1
+        assert np.array_equal(t.gather(buf), _warm_oracle(a0, 5))
+
+
+def test_miss_on_changed_reduction():
+    """sum -> max and include_current_value toggles each miss, and each
+    computes the right value."""
+    a0 = np.arange(N, dtype=np.float64)
+    with ServingRuntime(2, 1) as srv:
+        t = srv.tenant("t0")
+        buf = t.buffer((N,), init=a0, name="A")
+        s = t.buffer((1,), init=np.zeros(1), name="S")
+
+        def ksum(chunk, v, acc):
+            acc.contribute(float(v.get(chunk).sum()))
+
+        def kmax(chunk, v, acc):
+            acc.contribute(float(v.get(chunk).max()))
+
+        for _ in range(4):
+            t.submit("r", (N,), [read(buf, one_to_one()),
+                                 reduction(s, "sum")], ksum)
+            t.run()
+        t.drain()
+        misses0 = srv.memo_stats()["misses"]
+        t.submit("r", (N,), [read(buf, one_to_one()),
+                             reduction(s, "max")], kmax)
+        t.run()
+        assert t.gather(s)[0] == a0.max()
+        t.submit("r", (N,), [read(buf, one_to_one()),
+                             reduction(s, "sum",
+                                       include_current_value=True)], ksum)
+        t.run()
+        assert t.gather(s)[0] == a0.max() + a0.sum()
+        assert srv.memo_stats()["misses"] >= misses0 + 2
+
+
+def _mk_call(granularity=(1,)):
+    buf_like = type("B", (), {})
+    return _Call("k", Box((0,), (N,)), (), None, TaskType.KERNEL, (0,),
+                 granularity)
+
+
+def test_signature_covers_grid_budgets_namespace():
+    """The canonical signature must differ across grid shape, memory
+    budgets and tenant namespace (each is a separate cache universe)."""
+    base = dict(num_nodes=2, devices_per_node=2,
+                config=(True, True, True, True, 4, True),
+                budgets={3: 1 << 20}, namespace="a")
+    sig = window_signature([_mk_call()], **base)
+    assert sig == window_signature([_mk_call()], **base)   # deterministic
+    for change in (dict(num_nodes=3), dict(devices_per_node=1),
+                   dict(budgets={3: 1 << 21}), dict(budgets=None),
+                   dict(namespace="b"),
+                   dict(config=(True, True, True, True, 8, True))):
+        assert sig != window_signature([_mk_call()], **{**base, **change}), \
+            change
+    assert sig != window_signature([_mk_call(granularity=(2,))], **base)
+    assert sig != window_signature([_mk_call(), _mk_call()], **base)
+
+
+# -- multi-tenancy ------------------------------------------------------------
+def test_cross_tenant_buffer_rejected():
+    """A tenant lowering against another tenant's buffer handle must fail
+    at lowering time with PermissionError — not corrupt the other tenant."""
+    with ServingRuntime(1, 1) as srv:
+        ta = srv.tenant("a")
+        tb = srv.tenant("b")
+        stolen = ta.buffer((N,), init=np.zeros(N), name="secret")
+        tb.submit("smuggle", (N,), [read_write(stolen, one_to_one())],
+                  step_kernel)
+        with pytest.raises(PermissionError):
+            tb.run()
+
+
+def test_duplicate_tenant_name_rejected():
+    with ServingRuntime(1, 1) as srv:
+        srv.tenant("a")
+        with pytest.raises(ValueError):
+            srv.tenant("a")
+
+
+def test_concurrent_tenants_isolated_and_fair():
+    """Two tenants submitting concurrently from their own threads: each
+    gets its own correct result, and the executor records completions for
+    both (fair-share interleaving, not starvation)."""
+    wins = 10
+    with ServingRuntime(2, 1, max_inflight_per_tenant=8) as srv:
+        results = {}
+
+        def client(name, scale):
+            t = srv.tenant(name)
+            a0 = np.full(N, scale)
+            buf = t.buffer((N,), init=a0, name="A")
+            for _ in range(wins):
+                t.submit("step", (N,), [read_write(buf, one_to_one())],
+                         step_kernel)
+                t.run()
+            results[name] = (t.gather(buf), _warm_oracle(a0, wins))
+
+        threads = [threading.Thread(target=client, args=(f"t{i}", 1.0 + i))
+                   for i in range(2)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        for name, (got, want) in results.items():
+            assert np.array_equal(got, want), name
+        for ex in srv.executors:
+            assert set(ex.tenant_done) == {"t0", "t1"}
+            for n, cnt in ex.tenant_done.items():
+                assert cnt > 0, n
+            # admission bookkeeping drained: nothing deferred or in flight
+            assert ex._deferred_count == 0
+            assert all(v == 0 for v in ex._tenant_inflight.values())
+
+
+def test_soak_bounded_state():
+    """Many windows across two tenants: per-transfer arbiter state and
+    executor epoch tokens must not accumulate (the serving process runs
+    an unbounded window stream)."""
+    wins = 25
+    with ServingRuntime(2, 1) as srv:
+        tenants = []
+        for i in range(2):
+            t = srv.tenant(f"t{i}")
+            buf = t.buffer((N,), init=np.full(N, float(i + 1)), name="A")
+            tenants.append((t, buf))
+        for w in range(wins):
+            for t, buf in tenants:
+                t.submit("step", (N,), [read_write(buf, one_to_one())],
+                         step_kernel)
+                t.run()
+        for i, (t, buf) in enumerate(tenants):
+            t.drain()
+            assert np.array_equal(t.gather(buf),
+                                  _warm_oracle(np.full(N, float(i + 1)),
+                                               wins))
+        for ex in srv.executors:
+            # completed-transfer coverage regions were popped
+            assert len(ex.arbiter.received) == 0
+            # WindowHandle.wait forgets its epoch token; only gather/drain
+            # epochs the tenants never waited on may remain, bounded by the
+            # inflight cap — not by the total window count
+            assert len(ex._completed_epochs) <= 2 * 8 + 2
+            assert not ex._blocked
+        for t, _ in tenants:
+            # replays dominate: per-tenant lowering happened O(1) times,
+            # not O(windows)
+            assert t.replayed_windows >= wins - 4
+            assert t.lowered_windows <= 8

@@ -186,3 +186,74 @@ def test_issue_complete_race_keeps_open_table_consistent():
     assert len(tr.spans) == n_threads * per_thread
     for s in tr.spans:
         assert s.t0 <= s.t1
+
+
+# -- sampled (1-in-N) record capture ------------------------------------------
+
+def test_record_sampling_keeps_one_in_n():
+    """``record_sample=N`` keeps every Nth completion record, counts the
+    dropped ones, and leaves no leaked open-span entries behind."""
+    tr = Tracer(record_sample=4)
+    total = 40
+    for k in range(total):
+        instr = _fake_instr(k)
+        tr.issue(0, instr)
+        tr.record(0, instr, "N0.host", t_reg=0.0, t_ready=0.0,
+                  t_start=0.0, t_done=1e-6, wait_cls="none", blame_iid=None)
+    assert len(tr.records) == total // 4
+    assert tr.records_sampled_out == total - total // 4
+    assert tr._open == {}, "sampled-out records must still close open spans"
+
+
+def test_record_sampling_default_records_everything():
+    tr = Tracer()
+    for k in range(10):
+        tr.record(0, _fake_instr(k), "N0.host", t_reg=0.0, t_ready=0.0,
+                  t_start=0.0, t_done=1e-6, wait_cls="none", blame_iid=None)
+    assert len(tr.records) == 10
+    assert tr.records_sampled_out == 0
+
+
+def test_record_sampling_thread_safe_counts():
+    """Concurrent completion records: kept + dropped must account for every
+    call exactly once (the modulo counter is lock-protected)."""
+    tr = Tracer(record_sample=16)
+    n_threads, per_thread = 8, 128
+
+    def hammer(node):
+        for k in range(per_thread):
+            tr.record(node, _fake_instr(k), f"N{node}.host", t_reg=0.0,
+                      t_ready=0.0, t_start=0.0, t_done=1e-6,
+                      wait_cls="none", blame_iid=None)
+
+    ts = [threading.Thread(target=hammer, args=(n,)) for n in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    total = n_threads * per_thread
+    assert len(tr.records) + tr.records_sampled_out == total
+    assert len(tr.records) == total // 16
+
+
+def test_sampled_trace_still_analyzable():
+    """A sampled trace must stay structurally valid: lanes() and the
+    critical-path analyzer run on partial records without error."""
+    from repro.core.observability import critical_path
+    tr = Tracer(record_sample=3)
+    rt = Runtime(1, 2)
+    rt.tracer = tr
+    for ex in rt.executors:
+        ex.tracer = tr
+    buf = rt.buffer((16,), init=np.zeros(16))
+    for _ in range(6):
+        rt.submit("inc", (16,), [read_write(buf, one_to_one())],
+                  lambda c, v: v.set(c, v.get(c) + 1))
+    out = rt.gather(buf)
+    rt.shutdown()
+    assert np.array_equal(out, np.full(16, 6.0))
+    assert tr.records_sampled_out > 0
+    lanes = tr.lanes()
+    assert lanes                    # derived spans still render
+    rep = critical_path(tr)
+    assert rep.total_us >= 0.0
