@@ -5,9 +5,16 @@ baseline and fails when any tracked latency key (``*_us``) regresses by more
 than the tolerance (default 25% — wide enough for shared-runner noise, tight
 enough to catch an accidental O(n) slip on the issue path).
 
-Only latency keys are gated: throughput keys (``*_per_s``) and structural
-counts (``peak_retained_*``, ``*_msgs``) have their own acceptance tests,
-and nested dicts (e.g. the ``baseline_pre_pr`` archive) are skipped.
+Two key classes are gated, by suffix:
+
+  * ``*_us`` — latencies, lower is better: regression iff
+    ``fresh > base * (1 + tol)``
+  * ``*_occupancy`` / ``*_inflight_windows`` — pipelining depth, higher is
+    better: regression iff ``fresh < base * (1 - tol)``
+
+Other throughput keys (``*_per_s``) and structural counts
+(``peak_retained_*``, ``*_msgs``) have their own acceptance tests, and
+nested dicts (e.g. the ``baseline_pre_pr`` archive) are skipped.
 
 Usage:  python benchmarks/check_regression.py BASELINE.json FRESH.json
         [--tolerance 0.25]
@@ -20,11 +27,17 @@ import sys
 from pathlib import Path
 
 
+# suffixes where a LOWER fresh value is the regression (utilization /
+# pipelining-depth metrics, DESIGN.md §13)
+HIGHER_IS_BETTER = ("_occupancy", "_inflight_windows")
+
+
 def gated_keys(baseline: dict, fresh: dict) -> list[str]:
-    """Tracked keys: numeric ``*_us`` values present in both snapshots."""
+    """Tracked keys: numeric ``*_us`` / higher-is-better values present in
+    both snapshots."""
     out = []
     for key, base in baseline.items():
-        if not key.endswith("_us"):
+        if not (key.endswith("_us") or key.endswith(HIGHER_IS_BETTER)):
             continue
         if not isinstance(base, (int, float)):
             continue
@@ -48,14 +61,22 @@ def compare(baseline: dict, fresh: dict,
         if base <= 0:
             continue
         ratio = new / base
+        higher_better = key.endswith(HIGHER_IS_BETTER)
         status = "ok"
-        if ratio > 1.0 + tolerance:
+        if higher_better:
+            if ratio < 1.0 - tolerance:
+                status = "REGRESSION"
+                regressions.append(key)
+            elif ratio > 1.0 + tolerance:
+                status = "improved"
+        elif ratio > 1.0 + tolerance:
             status = "REGRESSION"
             regressions.append(key)
         elif ratio < 1.0 - tolerance:
             status = "improved"
         lines.append(f"  {key:<40} {base:12.1f} -> {new:12.1f}  "
-                     f"({ratio:6.2f}x)  {status}")
+                     f"({ratio:6.2f}x)  {status}"
+                     + ("  [higher=better]" if higher_better else ""))
     return regressions, lines
 
 

@@ -226,6 +226,16 @@ def _observability_run(n_bodies: int, steps: int) -> float:
         print(f"  wait decomposition exact for all {len(recs)} "
               f"instructions; histograms match records on both nodes")
 
+        # per-lane busy/idle occupancy from the same records (DESIGN.md §13)
+        util = q.utilization_report()
+        print(f"  lane utilization over {util['span_us'] / 1e3:.2f} ms span "
+              f"(mean occupancy {util['occupancy']:.1%}, device occupancy "
+              f"{util['device_occupancy']:.1%}):")
+        for lane, row in util["lanes"].items():
+            print(f"    {lane:<16} busy {row['busy_us'] / 1e3:8.3f} ms "
+                  f"({row['busy_frac']:6.1%})  "
+                  f"{row['instructions']} instructions")
+
         return rep.scheduler_fraction
 
 

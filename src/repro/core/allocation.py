@@ -63,6 +63,10 @@ class Allocation:
     alloc_instr: Optional[object] = None
     # M0 allocations seeded from user data carry it for lazy materialization
     initial_data: Optional[object] = None
+    # renaming (DESIGN.md §13): when this physical is retired to the free
+    # pool, the readers/producers of its last buffer version are snapshotted
+    # here; the next writer of the recycled physical anti-depends on them
+    hazards: list = field(default_factory=list)
 
     def nbytes(self) -> int:
         import numpy as np

@@ -160,8 +160,13 @@ class Executor:
                  check_bounds: bool = False, tracer=None, metrics=None,
                  fault_plan: Optional[FaultPlan] = None,
                  watchdog_timeout: Optional[float] = None,
-                 max_inflight_per_tenant: Optional[int] = None):
+                 max_inflight_per_tenant: Optional[int] = None,
+                 issue_width: Optional[int] = None):
         self.node = node
+        # issue-width knob (DESIGN.md §13): cap untagged direct/eager issues
+        # per drain pass so one burst cannot monopolize the loop before the
+        # next completion/ingest poll; None = unbounded (historical)
+        self.issue_width = issue_width
         self.comm = comm
         self.backend = Backend(num_devices, queues_per_device=queues_per_device,
                                host_threads=host_threads)
@@ -244,6 +249,11 @@ class Executor:
         self._tenant_deferred: dict[str, deque[Instruction]] = {}
         self._deferred_count = 0
         self.tenant_done: dict[str, int] = {}      # per-tenant completions
+        # in-flight window tracking (DESIGN.md §13): windows with at least
+        # one completed instruction whose closing epoch has not completed;
+        # the peak set size is the pipelining depth ``bench_serve`` reports
+        self._tenant_windows: dict[str, set[int]] = {}
+        self.tenant_window_peak: dict[str, int] = {}
         self._queue_latency_ewma: dict[str, float] = {}
         self._qname_cache: dict[tuple, str] = {}
         self._dispatch = {
@@ -567,13 +577,29 @@ class Executor:
         return issued_any
 
     def _drain_ready(self) -> bool:
-        """Issue all ready instructions and cascade eager-issue candidates."""
+        """Issue all ready instructions and cascade eager-issue candidates.
+
+        With ``issue_width`` set, at most that many untagged direct/eager
+        issues happen per pass; the main loop re-enters immediately (the
+        pass reports progress) after polling completions and the inbox.
+        Tenant-tagged issue is already self-limited by the round-robin
+        rotation and admission control, so it is not charged against the
+        width."""
         issued_any = False
+        left = self.issue_width if self.issue_width is not None else -1
         while self._ready or self._tenant_count or self._recheck:
+            if left == 0:
+                break
             while self._ready:
                 instr = self._ready.popleft()
                 self._issue(instr)                       # direct issue
                 issued_any = True
+                if left > 0:
+                    left -= 1
+                    if left == 0:
+                        break
+            if left == 0:
+                break
             if self._tenant_count:
                 if self._drain_tenant_ready():
                     issued_any = True
@@ -594,6 +620,8 @@ class Executor:
                                 instr._blame_it = dep.itype
                     self._issue(instr, queue=eager_q)    # eager issue
                     issued_any = True
+                    if left > 0:
+                        left -= 1
         return issued_any
 
     def _eager_queue(self, instr: Instruction) -> Optional[InOrderQueue]:
@@ -728,6 +756,15 @@ class Executor:
         tn = instr.tenant
         if tn is not None:
             self.tenant_done[tn] = self.tenant_done.get(tn, 0) + 1
+            w = instr.window
+            if w is not None:
+                ws = self._tenant_windows.setdefault(tn, set())
+                if it == InstructionType.EPOCH:
+                    ws.discard(w)
+                else:
+                    ws.add(w)
+                    if len(ws) > self.tenant_window_peak.get(tn, 0):
+                        self.tenant_window_peak[tn] = len(ws)
             if getattr(instr, "_admitted", False):
                 n = self._tenant_inflight.get(tn, 0) - 1
                 self._tenant_inflight[tn] = n if n > 0 else 0

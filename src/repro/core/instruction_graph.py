@@ -32,7 +32,7 @@ from typing import Optional
 
 from .allocation import (PINNED_HOST, USER_HOST, device_memory,  # noqa: F401
                          is_device_memory, queue_for_mem)
-from .buffer import VirtualBuffer
+from .buffer import AccessMode, VirtualBuffer
 from .collective import (allgather_schedule, reduce_scatter_schedule,
                          schedule_for, shard_bounds)
 from .command_graph import Command, CommandType
@@ -51,7 +51,8 @@ class IdagGenerator:
                  alloc_hints: Optional[dict] = None, retire: bool = False,
                  budgets: Optional[dict[int, int]] = None, metrics=None,
                  namespace: Optional[str] = None,
-                 buffer_owner: Optional[dict[int, str]] = None):
+                 buffer_owner: Optional[dict[int, str]] = None,
+                 renaming: bool = False):
         self.node = node
         self.num_devices = num_devices
         # ``retire=True`` (used by the runtime) trims ``instructions`` down to
@@ -81,7 +82,8 @@ class IdagGenerator:
         self.mem = MemoryManager(self, d2d=d2d, budgets=budgets,
                                  hints=alloc_hints, metrics=metrics,
                                  namespace=namespace,
-                                 buffer_owner=buffer_owner)
+                                 buffer_owner=buffer_owner,
+                                 renaming=renaming)
         self._init_epoch = self._emit(Instruction(
             InstructionType.EPOCH, node=node, queue=("host",), name="init"))
         self._last_epoch = self._init_epoch
@@ -269,6 +271,16 @@ class IdagGenerator:
                 reg = acc.mapped_region(ch)
                 if reg.is_empty():
                     continue
+                # renaming (DESIGN.md §13): a pure overwrite — discard-write
+                # accessor, and no accessor of the same buffer reads in this
+                # task — rebinds the version to a fresh physical so the
+                # write carries no WAR/WAW edges against prior readers
+                if (acc.mode == AccessMode.WRITE
+                        and not any(a2 is not acc
+                                    and a2.buffer.bid == buf.bid
+                                    and a2.mode.is_consumer
+                                    for a2 in task.accessors)):
+                    self.mem.rename_for_write(buf, mid, reg)
                 alloc = self.mem.live(buf.bid, mid, reg.bounding_box())
                 if acc.mode.is_consumer:
                     deps.extend(self.mem.make_coherent(buf, mid, reg))
@@ -308,6 +320,10 @@ class IdagGenerator:
                             instr.add_dependency(reader, DepKind.ANTI)
                     for sub, w in ms.producers.query(b.region):
                         instr.add_dependency(w, DepKind.OUTPUT)
+                    # first writer of a recycled physical: order behind the
+                    # retired version's outstanding users (DESIGN.md §13)
+                    for h in self.mem.take_hazards(b.allocation):
+                        instr.add_dependency(h, DepKind.ANTI)
             if self._last_horizon is not None:
                 instr.add_dependency(self._last_horizon, DepKind.SYNC)
             elif not instr.dependencies and self._last_epoch is not None:

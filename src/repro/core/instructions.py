@@ -198,6 +198,9 @@ class Instruction:
     # serving-runtime tenant tag (core/memo.py): None for single-program
     # runs — the executor's fast path keys on it staying None
     tenant: Optional[str] = None
+    # serving window sequence number (per tenant): lets the executor track
+    # how many replayed windows are concurrently in flight (DESIGN.md §13)
+    window: Optional[int] = None
     iid: int = field(default_factory=lambda: next(_instr_ids))
     dependencies: list[tuple["Instruction", DepKind]] = field(default_factory=list)
     dependents: list["Instruction"] = field(default_factory=list)

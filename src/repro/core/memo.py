@@ -52,14 +52,16 @@ allocations are never cached.
 from __future__ import annotations
 
 import copy
+import dataclasses
 import threading
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from . import allocation as _alloc_mod
 from . import instructions as _instr_mod
 from . import task_graph as _task_mod
 from .allocation import device_memory
@@ -68,12 +70,13 @@ from .command_graph import Command, CommandGraphGenerator, CommandType
 from .communicator import Communicator
 from .executor import Executor
 from .instruction_graph import IdagGenerator
-from .instructions import Instruction, InstructionType, Pilot
+from .instructions import (AccessorBinding, Instruction, InstructionType,
+                           Pilot, ReductionBinding)
 from .lookahead import LookaheadScheduler
 from .observability import MetricsRegistry
 from .reduction import Reduction
 from .region import Box, Region, split_box
-from .task_graph import TaskGraph, TaskType
+from .task_graph import DepKind, TaskGraph, TaskType
 from .tracing import Tracer
 
 
@@ -153,23 +156,36 @@ _SYNC_TYPES = (InstructionType.HORIZON, InstructionType.EPOCH)
 def _window_digest(node_instrs: list[list[Instruction]]) -> tuple:
     """Structural digest of one lowered window.
 
-    Id-free: two lowerings of the same shape at the allocation fixpoint
-    digest identically.  Allocation ids are canonicalized to first-
-    appearance order within the window — scratch allocations draw a fresh
-    global ``aid`` on every lowering, which must not defeat the fixpoint.
+    Scratch allocation ids are canonicalized to first-appearance order
+    within the window — scratch draws a fresh global ``aid`` on every
+    lowering, which must not defeat the fixpoint.  PERSISTENT (buffer-
+    backed) allocations keep their raw ``aid``: a replay freezes the
+    window's version→physical bindings, so capture must only fire once
+    those bindings repeat exactly.  Under write renaming (DESIGN.md §13)
+    a buffer's physical ping-pongs through the free pool every window —
+    structurally identical, semantically alternating — and the raw-aid
+    digest keeps such windows from ever reaching a (false) fixpoint.
     """
     out = []
     for instrs in node_instrs:
         canon: dict[int, int] = {}
+
+        def _key(a):
+            if a is None:
+                return None
+            if a.bid is not None:
+                return ("p", a.bid, a.aid)
+            return ("s", canon.setdefault(a.aid, len(canon)))
+
         sig = []
         for i in instrs:
-            a = i.allocation
-            aid = (None if a is None
-                   else (a.bid, canon.setdefault(a.aid, len(canon))))
-            # FREE names embed the raw aid — the canonical tuple already
-            # identifies the allocation, so keep the digest id-free
+            reads, writes = _alloc_touches(i)
+            # FREE names embed the raw aid — the allocation keys already
+            # identify the allocation, so keep the digest name id-free
             name = "" if i.itype == InstructionType.FREE else i.name
-            sig.append((i.itype.value, name, i.queue, i.dest, aid))
+            sig.append((i.itype.value, name, i.queue, i.dest,
+                        tuple(_key(a) for a in reads),
+                        tuple(_key(a) for a in writes)))
         out.append(tuple(sig))
     return tuple(out)
 
@@ -200,6 +216,58 @@ def _replayable(node_instrs: list[list[Instruction]]) -> Optional[str]:
     return None
 
 
+def _alloc_touches(i: Instruction) -> tuple[list, list]:
+    """(read, written) allocations of one instruction, by executor semantics.
+
+    Feeds the cross-window hazard wiring of pipelined replay (DESIGN.md
+    §13.4): persistent allocations shared by concurrently in-flight windows
+    need explicit RAW/WAR/WAW edges between windows, since replay bypasses
+    the MemoryManager's producer/reader maps entirely.
+    """
+    T = InstructionType
+    it = i.itype
+    reads: list = []
+    writes: list = []
+    if it in (T.ALLOC, T.FREE):
+        writes.append(i.allocation)
+    elif it in (T.COPY, T.SPILL, T.RELOAD):
+        reads.append(i.src_alloc)
+        writes.append(i.dst_alloc)
+    elif it is T.SEND:
+        reads.append(i.recv_alloc)
+    elif it is T.COLL_SEND:
+        reads.extend(f.alloc for f in i.coll_frags)
+    elif it in (T.RECEIVE, T.SPLIT_RECEIVE, T.AWAIT_RECEIVE,
+                T.GATHER_RECEIVE):
+        writes.append(i.recv_alloc)
+    elif it is T.COLL_RECV:
+        writes.extend(i.coll_allocs)
+        writes.extend(f.alloc for f in i.coll_land)
+    elif it is T.FILL_IDENTITY:
+        writes.append(i.allocation)
+    elif it is T.LOCAL_REDUCE:
+        reads.extend(i.reduce_srcs)
+        if i.accumulate:
+            reads.append(i.dst_alloc)
+        writes.append(i.dst_alloc)
+    elif it is T.GLOBAL_REDUCE:
+        if i.src_alloc is not None:
+            reads.append(i.src_alloc)
+        reads.extend(i.reduce_srcs)
+        if i.include_current:
+            reads.append(i.dst_alloc)
+        writes.append(i.dst_alloc)
+    elif it in (T.DEVICE_KERNEL, T.HOST_TASK):
+        for b in i.bindings:
+            if b.accessor.mode.is_consumer:
+                reads.append(b.allocation)
+            if b.accessor.mode.is_producer:
+                writes.append(b.allocation)
+        for rb in i.red_bindings:
+            writes.append(rb.allocation)
+    return reads, writes
+
+
 @dataclass
 class _Template:
     """One captured, relocatable instruction window (the memo cache value).
@@ -208,12 +276,21 @@ class _Template:
     (state stays ``pending``, dependency lists intact).  Replay clones
     them, patching the parameter table; see the module docstring for the
     id-renaming rules.
+
+    Pipelined replay (DESIGN.md §13.4) double-buffers the template's
+    scratch allocations: replay ``u`` binds rename set ``u % depth`` —
+    set 0 is the identity (the template's own scratch), higher sets are
+    lazily cloned physicals with fresh ``aid``s — so consecutive replays
+    never collide on scratch backing and can execute concurrently.
     """
     node_instrs: list[list[Instruction]]
     node_pilots: list[list[Pilot]]             # per node, this window's pilots
     epoch_idx: list[int]                        # per node: window-epoch index
     tids: tuple[int, ...]                       # distinct template task ids
     tid_to_call: dict[int, int]                 # template task id -> call pos
+    scratch_allocs: dict[int, object] = field(default_factory=dict)
+    rename_sets: list[dict] = field(default_factory=list)
+    uses: int = 0                               # replay sequence (set rotation)
     replays: int = 0
 
 
@@ -276,7 +353,8 @@ class Tenant:
                                     budgets=self.memory_budgets or None,
                                     metrics=srv.metrics_registry,
                                     namespace=name,
-                                    buffer_owner=srv._buffer_owner)
+                                    buffer_owner=srv._buffer_owner,
+                                    renaming=srv.renaming)
                       for n in range(srv.num_nodes)]
         self.lookaheads = [LookaheadScheduler(self.idags[n],
                                               enabled=srv.lookahead,
@@ -285,10 +363,33 @@ class Tenant:
                            for n in range(srv.num_nodes)]
         self._sent = 0                      # lifetime task indices broadcast
         self._calls: list[_Call] = []
-        self._memo: dict[tuple, _CacheEntry] = {}
+        # memo cache in LRU order (satellite of DESIGN.md §13): bounded by
+        # ``srv.memo_cache_max`` entries, least-recently-hit evicted first
+        self._memo: OrderedDict[tuple, _CacheEntry] = OrderedDict()
         # the executed epoch instruction every out-of-window replay edge
         # remaps onto (starts at the bootstrap init epoch)
         self.last_boundary: list[Instruction] = []
+        # pipelined replay state (DESIGN.md §13.4).  ``depth`` windows of
+        # this tenant may be in flight at once; window ``m`` boundary-syncs
+        # on epoch(m - depth) — the ring of the last ``depth`` window
+        # epochs per node — instead of epoch(m - 1).
+        self.depth = max(1, srv.max_inflight_windows)
+        self._window_seq = 0
+        self._ring: list[deque[Instruction]] = []
+        # fence: after a cold (non-replay) window, the next ``depth``
+        # replays serialize behind their immediate predecessor — cold
+        # windows execute the template's own allocations outside the
+        # hazard-table protocol, so the ring boundary alone cannot cover
+        # them
+        self._fence_left: list[int] = [0] * srv.num_nodes
+        # per-node cross-window hazard table: persistent allocation id ->
+        # last writer clone + reader clones of the last ``depth`` windows
+        self._aid_last: list[dict[int, dict]] = [
+            {} for _ in range(srv.num_nodes)]
+        # pinned gather collection buffers: bid -> (ndarray, closure), so
+        # repeated gathers replay the SAME closure instead of re-anchoring
+        # a fresh one per call (ROADMAP serving follow-up)
+        self._gather_pins: dict[int, tuple] = {}
         # submission-side backpressure: run() blocks on the window
         # ``max_queued_windows`` back, bounding blocked-instruction state
         # held inside the executors per tenant
@@ -302,6 +403,8 @@ class Tenant:
             for i in boot:
                 i.tenant = name
             self.last_boundary.append(self.idags[n]._init_epoch)
+            self._ring.append(deque([self.idags[n]._init_epoch],
+                                    maxlen=self.depth))
             srv.executors[n].submit(boot)
 
     # -- client API --------------------------------------------------------
@@ -340,26 +443,37 @@ class Tenant:
             return handle
 
     def gather(self, buf: VirtualBuffer, timeout: float = 60.0) -> np.ndarray:
-        """Assemble the buffer on the caller's side (itself memoizable:
-        replays patch in the fresh collection closure)."""
+        """Assemble the buffer on the caller's side (itself memoizable).
+
+        The collection target is a *pinned* per-buffer ndarray + closure,
+        created once and replayed on every subsequent gather — so repeat
+        gathers hit the memo cache with a byte-identical parameter table
+        instead of re-anchoring a fresh closure per call.  The caller gets
+        an independent copy of the pinned buffer.
+        """
         from .buffer import read as read_acc
         from .range_mapper import one_to_one
-        out = np.empty(buf.shape, dtype=buf.dtype)
-        lock = threading.Lock()
-
-        def collect(chunk: Box, view) -> None:
-            data = view.get(chunk)
-            sl = tuple(slice(a, b) for a, b in zip(chunk.min, chunk.max))
-            with lock:
-                out[sl] = data
-
         with self._lock:
+            pin = self._gather_pins.get(buf.bid)
+            if pin is None:
+                out = np.empty(buf.shape, dtype=buf.dtype)
+                lock = threading.Lock()
+
+                def collect(chunk: Box, view, _out=out, _lock=lock) -> None:
+                    data = view.get(chunk)
+                    sl = tuple(slice(a, b)
+                               for a, b in zip(chunk.min, chunk.max))
+                    with _lock:
+                        _out[sl] = data
+
+                pin = self._gather_pins[buf.bid] = (out, collect)
+            out, collect = pin
             self.submit(f"gather {buf.name}", buf.shape,
                         [read_acc(buf, one_to_one())], collect,
                         ttype=TaskType.HOST)
             self.run(timeout=timeout).wait(timeout=timeout)
             self.drain(timeout=timeout)
-        return out
+            return np.array(out, copy=True)
 
     def drain(self, timeout: float = 60.0) -> None:
         """Wait for every submitted window of this tenant to complete."""
@@ -384,6 +498,15 @@ class Tenant:
             entry = self._memo.get(sig)
             if entry is None:
                 entry = self._memo[sig] = _CacheEntry()
+                cap = srv.memo_cache_max
+                if cap is not None:
+                    while len(self._memo) > cap:
+                        self._memo.popitem(last=False)
+                        if m is not None:
+                            m.counter("memo.evictions")
+                            m.counter(f"serve.{self.name}.memo_evictions")
+            else:
+                self._memo.move_to_end(sig)
         if entry is not None and entry.template is not None:
             t0 = time.perf_counter()
             handle = self._replay(entry.template, calls)
@@ -416,8 +539,10 @@ class Tenant:
                     m.counter("memo.unreplayable")
             entry.digest = digest
         # cold path: execute the lowered window directly
+        wseq = self._window_seq
+        self._window_seq += 1
         for n in range(srv.num_nodes):
-            self._submit_window(n, node_instrs[n], node_pilots[n])
+            self._submit_window(n, node_instrs[n], node_pilots[n], wseq)
         return WindowHandle(self, cids, cached=False)
 
     def _lower(self, calls: list[_Call]):
@@ -459,42 +584,73 @@ class Tenant:
         return node_instrs, node_pilots, cids, tid_to_call
 
     def _submit_window(self, n: int, instrs: list[Instruction],
-                       pilots: list[Pilot]) -> None:
+                       pilots: list[Pilot], wseq: int) -> None:
         """Execute a cold-lowered window: rewire edges that point at never-
         executed template instructions onto the executed boundary, tag the
-        tenant, post pilots, and advance the boundary."""
-        boundary = self.last_boundary[n]
+        tenant, post pilots, and advance the boundary.
+
+        Under pipelined replay a cold window may run while up to ``depth``
+        replayed windows are still in flight; its allocations live outside
+        the hazard-table protocol, so it syncs on EVERY ring epoch and arms
+        the fence that makes the next ``depth`` replays serialize behind
+        their immediate predecessor (which transitively covers this window).
+        """
+        pipelined = self.depth > 1
+        syncs = (list(self._ring[n]) if pipelined
+                 else [self.last_boundary[n]])
+        if pipelined:
+            self._aid_last[n].clear()
+            self._fence_left[n] = self.depth
         epoch_instr = None
         for i in instrs:
             i.tenant = self.name
+            i.window = wseq
             if any(getattr(d, "_memo_template", False)
                    for d, _ in i.dependencies):
                 i.dependencies = [(d, k) for d, k in i.dependencies
                                   if not getattr(d, "_memo_template", False)]
-                i.add_dependency(boundary, _task_mod.DepKind.SYNC)
+                for b in syncs:
+                    i.add_dependency(b, _task_mod.DepKind.SYNC)
             if i.itype == InstructionType.EPOCH:
                 epoch_instr = i
         for p in pilots:
             self.srv.comm.post_pilot(p)
         if epoch_instr is not None:
             self.last_boundary[n] = epoch_instr
+            self._ring[n].append(epoch_instr)
         self.srv.executors[n].submit(instrs)
 
     def _capture(self, node_instrs, node_pilots, tid_to_call) -> _Template:
         tids: list[int] = []
         seen: set[int] = set()
         epoch_idx: list[int] = []
+        scratch: dict[int, object] = {}
         for instrs in node_instrs:
             e = -1
             for idx, i in enumerate(instrs):
                 i._memo_template = True
                 if i.itype == InstructionType.EPOCH:
                     e = idx
+                elif (i.itype == InstructionType.ALLOC
+                        and i.allocation.bid is None):
+                    scratch[i.allocation.aid] = i.allocation
                 t = i.transfer_id
                 if t is not None and t[0] not in seen:
                     seen.add(t[0])
                     tids.append(t[0])
             epoch_idx.append(e)
+        # stamp each instruction with the PERSISTENT allocations it touches
+        # (scratch is template-private per rename set, so excluded) — drives
+        # the cross-window hazard wiring of pipelined replay
+        for instrs in node_instrs:
+            for i in instrs:
+                reads, writes = _alloc_touches(i)
+                i._memo_reads = tuple(a.aid for a in reads
+                                      if a is not None
+                                      and a.aid not in scratch)
+                i._memo_writes = tuple(a.aid for a in writes
+                                       if a is not None
+                                       and a.aid not in scratch)
         for pilots in node_pilots:
             for p in pilots:
                 if p.transfer_id[0] not in seen:
@@ -502,7 +658,65 @@ class Tenant:
                     tids.append(p.transfer_id[0])
         return _Template(node_instrs=node_instrs, node_pilots=node_pilots,
                          epoch_idx=epoch_idx, tids=tuple(tids),
-                         tid_to_call=dict(tid_to_call))
+                         tid_to_call=dict(tid_to_call),
+                         scratch_allocs=scratch)
+
+    def _rename_map(self, tpl: _Template, sidx: int) -> dict:
+        """Rename set ``sidx`` of a template's scratch allocations.
+
+        Set 0 is the identity (the template's own scratch objects); higher
+        sets are lazily built clones with fresh ``aid``s, so two concurrent
+        replays bound to different sets never alias scratch backing in the
+        executor stores.  Sets are cached on the template and reused
+        round-robin (``uses % depth``) — safe because the ring boundary
+        guarantees the previous user of a set has fully completed.
+        """
+        while len(tpl.rename_sets) <= sidx:
+            k = len(tpl.rename_sets)
+            if k == 0:
+                tpl.rename_sets.append({})
+            else:
+                m: dict[int, object] = {}
+                for aid, a in tpl.scratch_allocs.items():
+                    na = copy.copy(a)
+                    na.aid = next(_alloc_mod._alloc_ids)
+                    na.alloc_instr = None
+                    na.hazards = []
+                    m[aid] = na
+                tpl.rename_sets.append(m)
+        return tpl.rename_sets[sidx]
+
+    @staticmethod
+    def _remap_clone(c: Instruction, amap: dict) -> None:
+        """Point one clone's allocation references at a rename set."""
+        for f in ("allocation", "src_alloc", "dst_alloc", "recv_alloc"):
+            a = getattr(c, f)
+            if a is not None and a.aid in amap:
+                setattr(c, f, amap[a.aid])
+        if c.reduce_srcs:
+            c.reduce_srcs = tuple(amap.get(a.aid, a) for a in c.reduce_srcs)
+        if c.coll_allocs:
+            c.coll_allocs = tuple(amap.get(a.aid, a) for a in c.coll_allocs)
+        if c.coll_frags:
+            c.coll_frags = tuple(
+                dataclasses.replace(f, alloc=amap[f.alloc.aid])
+                if f.alloc.aid in amap else f
+                for f in c.coll_frags)
+        if c.coll_land:
+            c.coll_land = tuple(
+                dataclasses.replace(f, alloc=amap[f.alloc.aid])
+                if f.alloc.aid in amap else f
+                for f in c.coll_land)
+        if c.bindings:
+            c.bindings = tuple(
+                AccessorBinding(b.accessor, amap[b.allocation.aid], b.region)
+                if b.allocation.aid in amap else b
+                for b in c.bindings)
+        if c.red_bindings:
+            c.red_bindings = tuple(
+                ReductionBinding(rb.reduction, amap[rb.allocation.aid])
+                if rb.allocation.aid in amap else rb
+                for rb in c.red_bindings)
 
     def _replay(self, tpl: _Template, calls: list[_Call], *,
                 identity: bool = False) -> WindowHandle:
@@ -512,22 +726,49 @@ class Tenant:
         lowering that produced the template still has to execute once, with
         its original ids (its pilots and transfer ids are already the
         template's) — so the parameter table maps every id to itself.
+
+        Pipelined replay (``depth > 1``, DESIGN.md §13.4): instead of
+        serializing behind the previous window's epoch, a replay boundary-
+        syncs on the OLDEST ring epoch (window ``m`` waits for window
+        ``m - depth``), binds rename set ``uses % depth`` for scratch, and
+        wires precise RAW/WAR/WAW edges against the last writer/readers of
+        each persistent allocation, so only truly conflicting instructions
+        of overlapping windows serialize.
         """
         srv = self.srv
         N = srv.num_nodes
+        pipelined = self.depth > 1
         # one tid map for the whole replay: sender and receiver nodes must
         # agree on the patched transfer ids
         if identity:
             tid_map = {t: t for t in tpl.tids}
         else:
             tid_map = {t: next(_task_mod._task_ids) for t in tpl.tids}
+        # identity replay must keep the template's own allocation objects
+        # (its ALLOCs carry them), so it always binds the identity set 0
+        sidx = 0 if (identity or not pipelined) else tpl.uses % self.depth
+        amap = self._rename_map(tpl, sidx) if pipelined else {}
+        tpl.uses += 1
+        wseq = self._window_seq
+        self._window_seq += 1
         cids: list[Optional[int]] = [None] * N
         for n in range(N):
             idag = self.idags[n]
             clones: dict[int, Instruction] = {}
             out: list[Instruction] = []
             msg_map: dict[int, int] = {}
-            boundary = self.last_boundary[n]
+            if not pipelined or identity or self._fence_left[n] > 0:
+                # fenced (or unpipelined): serialize behind the immediate
+                # predecessor window, which transitively covers everything
+                boundary = self.last_boundary[n]
+                if pipelined and not identity and self._fence_left[n] > 0:
+                    self._fence_left[n] -= 1
+            else:
+                boundary = self._ring[n][0]
+            aid_tab = self._aid_last[n]
+            written_this: set[int] = set()
+            new_readers: dict[int, list[Instruction]] = {}
+            new_writer: dict[int, Instruction] = {}
             for i in tpl.node_instrs[n]:
                 c = copy.copy(i)
                 c.iid = next(_instr_mod._instr_ids)
@@ -535,6 +776,7 @@ class Tenant:
                 c.dependents = []
                 c.state = "pending"
                 c.tenant = self.name
+                c.window = wseq
                 c._memo_template = False
                 if c.transfer_id is not None:
                     t = c.transfer_id
@@ -555,6 +797,8 @@ class Tenant:
                     pos = tpl.tid_to_call.get(c.command.task.tid)
                     if pos is not None and pos < len(calls):
                         c.kernel_fn = calls[pos].kernel_fn
+                if amap:
+                    self._remap_clone(c, amap)
                 needs_boundary = not i.dependencies
                 for d, k in i.dependencies:
                     dc = clones.get(d.iid)
@@ -564,6 +808,32 @@ class Tenant:
                         needs_boundary = True
                 if needs_boundary:
                     c.add_dependency(boundary, _task_mod.DepKind.SYNC)
+                if pipelined and not identity:
+                    # cross-window hazards on persistent allocations: RAW
+                    # on the previous writer, WAW + WAR when first writing.
+                    # Entries older than ``depth`` windows are covered by
+                    # the ring boundary and skipped.
+                    cut = wseq - self.depth
+                    for aid in getattr(i, "_memo_reads", ()):
+                        if aid not in written_this:
+                            ent = aid_tab.get(aid)
+                            if (ent and ent["w"] is not None
+                                    and ent["w"][0] > cut):
+                                c.add_dependency(ent["w"][1], DepKind.TRUE)
+                        new_readers.setdefault(aid, []).append(c)
+                    for aid in getattr(i, "_memo_writes", ()):
+                        if aid not in written_this:
+                            ent = aid_tab.get(aid)
+                            if ent:
+                                if (ent["w"] is not None
+                                        and ent["w"][0] > cut):
+                                    c.add_dependency(ent["w"][1],
+                                                     DepKind.OUTPUT)
+                                for rs, r in ent["r"]:
+                                    if rs > cut:
+                                        c.add_dependency(r, DepKind.ANTI)
+                            written_this.add(aid)
+                        new_writer[aid] = c
                 clones[i.iid] = c
                 out.append(c)
             e = tpl.epoch_idx[n]
@@ -572,6 +842,19 @@ class Tenant:
                 cids[n] = (epoch_clone.command.cid
                            if epoch_clone.command is not None else None)
                 self.last_boundary[n] = epoch_clone
+                self._ring[n].append(epoch_clone)
+            if pipelined and not identity:
+                cutoff = wseq - self.depth
+                for aid in set(new_readers) | set(new_writer):
+                    ent = aid_tab.setdefault(aid, {"w": None, "r": []})
+                    if aid in new_writer:
+                        ent["w"] = (wseq, new_writer[aid])
+                        ent["r"] = [(wseq, r)
+                                    for r in new_readers.get(aid, [])]
+                    else:
+                        ent["r"] = [x for x in ent["r"] if x[0] > cutoff]
+                        ent["r"] += [(wseq, r)
+                                     for r in new_readers.get(aid, [])]
             for p in tpl.node_pilots[n]:
                 t = p.transfer_id
                 srv.comm.post_pilot(Pilot(
@@ -597,6 +880,9 @@ class ServingRuntime:
                  reduction_allreduce: bool = True, horizon_step: int = 4,
                  queues_per_device: int = 2, host_threads: int = 4,
                  max_inflight_per_tenant: Optional[int] = None,
+                 max_inflight_windows: int = 1,
+                 memo_cache_max: Optional[int] = None,
+                 renaming: bool = False,
                  metrics: bool = True, trace: bool = False,
                  record_sample: int = 1, reliable: bool = True):
         self.num_nodes = num_nodes
@@ -608,12 +894,19 @@ class ServingRuntime:
         self.reduction_fusion = reduction_fusion and collectives
         self.reduction_allreduce = reduction_allreduce and collectives
         self.horizon_step = horizon_step
+        # DESIGN.md §13: how many replayed windows of one tenant may be in
+        # flight concurrently (1 = serialized, the pre-renaming behavior)
+        self.max_inflight_windows = max(1, max_inflight_windows)
+        # memo-template LRU cap per tenant (None = unbounded)
+        self.memo_cache_max = memo_cache_max
+        self.renaming = renaming
         self.tracer = Tracer(record_sample=record_sample) if trace else None
         self.metrics_registry = MetricsRegistry() if metrics else None
         # grid-shape part of every window signature: anything here that
         # changes lowering output MUST invalidate cached windows
         self._config_sig = (d2d, self.collectives, self.reduction_fusion,
-                            self.reduction_allreduce, horizon_step, lookahead)
+                            self.reduction_allreduce, horizon_step, lookahead,
+                            renaming)
         self._buffer_owner: dict[int, str] = {}
         self.comm = Communicator(num_nodes, reliable=reliable,
                                  tracer=self.tracer,
@@ -656,6 +949,7 @@ class ServingRuntime:
             hits=counters.get("memo.hits", 0),
             misses=counters.get("memo.misses", 0),
             unreplayable=counters.get("memo.unreplayable", 0),
+            evictions=counters.get("memo.evictions", 0),
             patch_us=snap.get("histograms", {}).get("memo.patch_us"),
             tenants={name: dict(lowered=t.lowered_windows,
                                 replayed=t.replayed_windows,
@@ -664,7 +958,11 @@ class ServingRuntime:
                                                  for g in t.idags),
                                 done={n: self.executors[n].tenant_done
                                           .get(name, 0)
-                                      for n in range(self.num_nodes)})
+                                      for n in range(self.num_nodes)},
+                                window_peak={n: self.executors[n]
+                                                 .tenant_window_peak
+                                                 .get(name, 0)
+                                             for n in range(self.num_nodes)})
                      for name, t in self.tenants.items()})
 
     def metrics(self) -> dict:

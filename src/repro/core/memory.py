@@ -81,6 +81,10 @@ class MemoryStats:
     elided_bytes: int = 0
     # reloads issued ahead of first use by the lookahead flush (§4.3)
     prefetched_reloads: int = 0
+    # allocation renaming (DESIGN.md §13)
+    renames: int = 0              # writes redirected to a fresh physical
+    pool_hits: int = 0            # renames served from the recycled pool
+    pool_frees: int = 0           # pooled physicals drained under pressure
 
     def as_dict(self) -> dict:
         return dict(evictions=self.evictions, spills=self.spills,
@@ -89,7 +93,9 @@ class MemoryStats:
                     over_budget=self.over_budget,
                     writeback_elisions=self.writeback_elisions,
                     elided_bytes=self.elided_bytes,
-                    prefetched_reloads=self.prefetched_reloads)
+                    prefetched_reloads=self.prefetched_reloads,
+                    renames=self.renames, pool_hits=self.pool_hits,
+                    pool_frees=self.pool_frees)
 
 
 class MemoryManager:
@@ -106,9 +112,21 @@ class MemoryManager:
                  budgets: Optional[dict[int, int]] = None,
                  hints: Optional[dict[tuple[int, int], Region]] = None,
                  metrics=None, namespace: Optional[str] = None,
-                 buffer_owner: Optional[dict[int, str]] = None):
+                 buffer_owner: Optional[dict[int, str]] = None,
+                 renaming: bool = False):
         self.host = host
         self.d2d = d2d
+        # allocation renaming (DESIGN.md §13): pure overwrites retire the
+        # current physical to a per-(memory, size-class) free pool and bind
+        # the buffer version to a fresh physical, turning WAR/WAW hazards
+        # into pool recycling.  Off by default: the renamed stream trades
+        # peak memory (two physicals per hot buffer) for pipeline depth.
+        self.renaming = renaming
+        # free pool: (mid, box.min, box.max, dtype) -> recycled physicals.
+        # Exact-box matching keeps the executor's lazy offset slicing valid
+        # with zero copies; ``_pool_allocs`` is the drain/shutdown index.
+        self._free_pool: dict[tuple, list[Allocation]] = {}
+        self._pool_allocs: list[Allocation] = []
         # multi-tenant serving (DESIGN.md §12): managers of different
         # tenants share one process but must never alias buffers.
         # ``namespace`` scopes the metric prefix; ``buffer_owner`` is the
@@ -464,12 +482,155 @@ class MemoryManager:
         self._release(alloc, fr)
         return fr
 
+    # -- allocation renaming (DESIGN.md §13) --------------------------------
+    @staticmethod
+    def _pool_key(a: Allocation) -> tuple:
+        return (a.mid, a.box.min, a.box.max, str(a.dtype))
+
+    def rename_for_write(self, buf: VirtualBuffer, mid: int,
+                         write_region: Region) -> Optional[Allocation]:
+        """Redirect a pure overwrite of ``write_region`` to a fresh physical.
+
+        The current physical backing the buffer version in ``mid`` retires
+        to the free pool carrying its outstanding users as *hazard records*;
+        the version map rebinds to a recycled (exact size-class match) or
+        freshly allocated physical.  The writer then depends only on the new
+        physical's hazards — for a fresh physical, on nothing at all — so
+        WAR/WAW edges against the previous timestep's readers disappear from
+        the emitted IDAG.  Returns the new physical, or ``None`` when
+        renaming does not apply (not a device/pinned memory, no current
+        physical, or dropping the physical would lose the sole coherent
+        replica of a region the write does not cover).
+        """
+        if not self.renaming or mid == USER_HOST:
+            return None
+        key = (buf.bid, mid)
+        bbox = write_region.bounding_box()
+        cur = None
+        for a in self.allocations.get(key, []):
+            if a.live and a.box.contains(bbox):
+                cur = a
+                break
+        if cur is None or cur.alloc_instr is None:
+            return None
+        breg = Region.from_box(cur.box)
+        # hazard snapshot: everyone still using the old version through this
+        # physical; the pool entry carries them until its next writer.  A
+        # physical nobody uses (fresh ensure, no reads/writes yet) is NOT
+        # renamed — the write carries no hazard edges to begin with, and a
+        # pooled physical with an empty hazard list would let its drain-FREE
+        # execute unordered against its own ALLOC.
+        ms = self.state(buf.bid, mid)
+        hz: list[Instruction] = []
+        for r, reader in ms.readers:
+            if r.overlaps(breg):
+                hz.append(reader)
+        for sub, producer in ms.producers.query(breg):
+            if producer not in hz:
+                hz.append(producer)
+        if not hz:
+            return None
+        uncovered = breg.difference(write_region)
+        coh = self.coherence[buf.bid]
+        drops: list[tuple[Region, frozenset]] = []
+        if not uncovered.is_empty():
+            for sub, mids in coh.query(uncovered):
+                if not mids or mid not in mids:
+                    continue
+                if mids == frozenset([mid]):
+                    return None      # sole replica lives here: cannot drop
+                drops.append((sub, mids))
+        # recycle BEFORE retiring ``cur`` so we never hand it back to itself
+        pkey = self._pool_key(cur)
+        pool = self._free_pool.get(pkey)
+        nxt = pool.pop() if pool else None
+        for sub, mids in drops:
+            coh.update(sub, mids - {mid})
+        cur.hazards = hz
+        cur.live = False
+        cur.bid = None
+        self.allocations[key] = \
+            [a for a in self.allocations.get(key, []) if a is not cur]
+        self._free_pool.setdefault(pkey, []).append(cur)
+        self._pool_allocs.append(cur)
+        if nxt is not None:
+            self._pool_allocs.remove(nxt)
+            nxt.bid = buf.bid
+            nxt.live = True
+            self._touch(nxt)
+            self.stats.pool_hits += 1
+        else:
+            nxt = Allocation(mid=mid, bid=buf.bid, box=cur.box,
+                             dtype=cur.dtype)
+            self._evict_until(mid, nxt.nbytes(), protect=frozenset())
+            self._emit_alloc(
+                nxt, f"alloc {buf.name} M{mid} {cur.box} (rename)")
+        # the old version's bookkeeping moves off the map: readers of the
+        # retired physical live on only as its hazard records, and the
+        # producer map re-anchors on the last sync point
+        gen = self.host
+        anchor = gen._last_horizon or gen._last_epoch or self.init_anchor
+        ms.readers = [(r, t) for r, t in ms.readers if not r.overlaps(breg)]
+        ms.producers.update(breg, anchor)
+        self.allocations.setdefault(key, []).append(nxt)
+        self.stats.renames += 1
+        if self.metrics is not None:
+            self.metrics.counter(self._metric_prefix + "renames")
+        return nxt
+
+    def take_hazards(self, alloc: Allocation) -> list[Instruction]:
+        """Consume the hazard records of a recycled physical (the caller
+        wires them as ANTI deps of the first new writer)."""
+        hz = alloc.hazards
+        if hz:
+            alloc.hazards = []
+        return hz
+
+    def _drain_pool(self, mid: int) -> bool:
+        """Free ONE pooled physical in ``mid`` to relieve budget pressure.
+
+        Preference order cooperates with the lookahead: physicals whose box
+        no reservation in this memory overlaps go first; reserved-size
+        entries are drained only as a last resort (they would likely be
+        re-allocated by the window's next rename)."""
+        candidates = [a for a in self._pool_allocs if a.mid == mid]
+        if not candidates:
+            return False
+
+        def wanted(a: Allocation) -> bool:
+            areg = Region.from_box(a.box)
+            for (bid, m), r in self.reserved.items():
+                if m == mid and r is not None and not r.is_empty() \
+                        and r.overlaps(areg):
+                    return True
+            return False
+
+        victim = next((a for a in candidates if not wanted(a)),
+                      candidates[0])
+        fr = self._free_instruction(victim)
+        if victim.alloc_instr is not None:
+            fr.add_dependency(victim.alloc_instr, DepKind.TRUE)
+        for h in victim.hazards:
+            fr.add_dependency(h, DepKind.ANTI)
+        victim.hazards = []
+        self._release(victim, fr)
+        self._pool_allocs.remove(victim)
+        lst = self._free_pool.get(self._pool_key(victim))
+        if lst and victim in lst:
+            lst.remove(victim)
+        self.stats.pool_frees += 1
+        return True
+
     # -- eviction / spilling ------------------------------------------------
     def _evict_until(self, mid: int, need: int, protect: frozenset | set) -> None:
         budget = self.budgets.get(mid)
         if budget is None:
             return
         while self.used.get(mid, 0) + need > budget:
+            # recycled-but-idle physicals are the cheapest bytes to reclaim:
+            # no spill copy, no coherence loss — drain the pool first
+            if self._drain_pool(mid):
+                continue
             victim = self._pick_victim(mid, protect)
             if victim is None:
                 self.stats.over_budget += 1
@@ -657,6 +818,12 @@ class MemoryManager:
             ms.producers.coalesce()
             ms.readers = []
         self._free_anchor.clear()
+        # pooled physicals' hazards collapse onto the sync too — NOT to
+        # empty: an instruction compiled after this sync that has other
+        # dependencies gets no sync edge of its own, so a recycled
+        # physical's first writer must still order behind the sync here
+        for a in self._pool_allocs:
+            a.hazards = [sync_instr]
 
     # -- shutdown -------------------------------------------------------------
     def free_all(self) -> list[Instruction]:
@@ -667,6 +834,17 @@ class MemoryManager:
                 if not a.live or mid == USER_HOST:
                     continue
                 out.append(self._emit_free(a, self.state(bid, mid)))
+        for a in self._pool_allocs:
+            fr = self._free_instruction(a)
+            if a.alloc_instr is not None:
+                fr.add_dependency(a.alloc_instr, DepKind.TRUE)
+            for h in a.hazards:
+                fr.add_dependency(h, DepKind.ANTI)
+            a.hazards = []
+            self._release(a, fr)
+            out.append(fr)
+        self._pool_allocs.clear()
+        self._free_pool.clear()
         return out
 
     # -- introspection --------------------------------------------------------

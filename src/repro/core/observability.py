@@ -210,6 +210,71 @@ class InstrRecord:
     cid: Optional[int]
 
 
+# -- lane utilization ---------------------------------------------------------
+
+
+def lane_utilization(records) -> dict:
+    """Per-lane busy/idle occupancy from completed :class:`InstrRecord`s.
+
+    Busy time is the union of ``[t_start, t_done]`` execution intervals per
+    ``(node, lane)`` (overlaps merged, so concurrent sub-intervals are not
+    double-counted); the observation window is the global first-start to
+    last-done span.  Returns ``{"N<node>.<lane>": {busy_us, idle_us,
+    busy_frac, raw_busy_us, instructions}, ..., "span_us": ...,
+    "occupancy": ..., "device_occupancy": ...}``.
+
+    ``occupancy`` is the mean merged busy fraction over all lanes;
+    ``raw_busy_us`` is the unmerged per-lane sum of instruction durations.
+    A device lane runs one instruction per hardware queue, and the lane key
+    merges the queues — so when the issue window keeps several kernels in
+    flight, merged busy shrinks while raw busy is conserved.
+    ``device_occupancy`` = total raw device-lane busy / (span x device
+    lanes) is therefore the pipelining-depth headline: serialized issue
+    caps it at the single-queue fraction, overlap raises it (>1 means more
+    than one kernel in flight per device on average).
+    """
+    by_lane: dict[tuple[int, str], list[tuple[float, float]]] = \
+        defaultdict(list)
+    t0, t1 = float("inf"), float("-inf")
+    for r in records:
+        if r.t_done <= r.t_start:
+            continue
+        by_lane[(r.node, r.lane)].append((r.t_start, r.t_done))
+        t0 = min(t0, r.t_start)
+        t1 = max(t1, r.t_done)
+    if not by_lane:
+        return dict(span_us=0.0, occupancy=0.0, lanes={})
+    span = t1 - t0
+    lanes: dict[str, dict] = {}
+    fracs: list[float] = []
+    dev_raw, dev_lanes = 0.0, 0
+    for (node, lane), ivals in sorted(by_lane.items()):
+        ivals.sort()
+        raw = sum(b - a for a, b in ivals)
+        busy = 0.0
+        cur_a, cur_b = ivals[0]
+        for a, b in ivals[1:]:
+            if a > cur_b:
+                busy += cur_b - cur_a
+                cur_a, cur_b = a, b
+            else:
+                cur_b = max(cur_b, b)
+        busy += cur_b - cur_a
+        frac = busy / span if span > 0 else 0.0
+        fracs.append(frac)
+        if "device" in lane:
+            dev_raw += raw
+            dev_lanes += 1
+        lanes[f"N{node}.{lane}"] = dict(
+            busy_us=busy * 1e6, idle_us=max(0.0, span - busy) * 1e6,
+            busy_frac=frac, raw_busy_us=raw * 1e6, instructions=len(ivals))
+    dev_occ = (dev_raw / (span * dev_lanes)
+               if span > 0 and dev_lanes else 0.0)
+    return dict(span_us=span * 1e6,
+                occupancy=sum(fracs) / len(fracs),
+                device_occupancy=dev_occ, lanes=lanes)
+
+
 # -- critical-path analysis --------------------------------------------------
 
 # instruction kind -> pipeline layer, for the per-layer totals

@@ -29,7 +29,8 @@ from .executor import Executor
 from .faults import ExecutionAborted, FaultPlan, run_with_restarts
 from .instruction_graph import IdagGenerator, InstructionType
 from .lookahead import LookaheadScheduler
-from .observability import CriticalPathReport, MetricsRegistry, critical_path
+from .observability import (CriticalPathReport, MetricsRegistry,
+                            critical_path, lane_utilization)
 from .region import Box
 from .task_graph import Task, TaskGraph, TaskType
 from .tracing import Tracer
@@ -56,7 +57,8 @@ class _NodeScheduler:
                 budgets.setdefault(device_memory(d), rt.device_memory_budget)
         self.idag = IdagGenerator(node, rt.devices_per_node, d2d=rt.d2d,
                                   retire=True, budgets=budgets or None,
-                                  metrics=rt.metrics_registry)
+                                  metrics=rt.metrics_registry,
+                                  renaming=rt.renaming)
         self.lookahead = LookaheadScheduler(self.idag, enabled=rt.lookahead,
                                             retire_compiled=True,
                                             metrics=rt.metrics_registry,
@@ -136,7 +138,10 @@ class _NodeScheduler:
         horizons *execute*) never catches up — retained-instruction memory
         would grow linearly with program length on execution-bound runs.
         """
-        lag_limit = self.rt.max_horizon_lag
+        rt = self.rt
+        lag_limit = (rt.max_inflight_windows
+                     if rt.max_inflight_windows is not None
+                     else rt.max_horizon_lag)
         if not lag_limit:
             return
         ex = self.rt.executors[self.node]
@@ -182,11 +187,21 @@ class Runtime:
                  reliable: bool = True,
                  watchdog_timeout: Optional[float] = None,
                  retransmit_timeout: float = 0.05, max_retries: int = 12,
-                 metrics: bool = True):
+                 metrics: bool = True, renaming: bool = False,
+                 issue_width: Optional[int] = None,
+                 max_inflight_windows: Optional[int] = None):
         self.num_nodes = num_nodes
         self.devices_per_node = devices_per_node
         self.lookahead = lookahead
         self.max_horizon_lag = max_horizon_lag
+        # out-of-order issue (DESIGN.md §13): allocation renaming eliminates
+        # WAR/WAW hazards at lowering time; ``max_inflight_windows`` is the
+        # reorder-buffer-style bound on horizon windows between lowering and
+        # retirement (when given it replaces ``max_horizon_lag``); and
+        # ``issue_width`` caps instructions issued per executor drain pass
+        self.renaming = renaming
+        self.issue_width = issue_width
+        self.max_inflight_windows = max_inflight_windows
         # collective exchange layer (DESIGN.md §9): tree/recursive-doubling
         # collectives instead of N*(N-1) point-to-point pushes, and packed
         # fusion of adjacent reduction exchanges
@@ -228,7 +243,8 @@ class Runtime:
                                    tracer=self.tracer,
                                    metrics=self.metrics_registry,
                                    fault_plan=fault_plan,
-                                   watchdog_timeout=watchdog_timeout)
+                                   watchdog_timeout=watchdog_timeout,
+                                   issue_width=issue_width)
                           for n in range(num_nodes)]
         self.schedulers = [_NodeScheduler(n, self) for n in range(num_nodes)]
         self._shut = False
@@ -394,6 +410,22 @@ class Runtime:
         if self.tracer is None:
             raise RuntimeError("critical_path_report() needs Runtime(trace=True)")
         return critical_path(self.tracer)
+
+    def utilization_report(self) -> dict:
+        """Per-device-lane busy/idle occupancy over the traced run.
+
+        Computed from the flight recorder's :class:`InstrRecord` stamps
+        (union of execution intervals per backend lane over the global
+        observation window); the ``occupancy`` key is the mean busy
+        fraction over all lanes — the number the renaming/issue-window
+        knobs (DESIGN.md §13) are meant to push up.  Requires
+        ``Runtime(trace=True)``.
+        """
+        if self.tracer is None:
+            raise RuntimeError("utilization_report() needs Runtime(trace=True)")
+        with self.tracer._lock:
+            records = list(self.tracer.records)
+        return lane_utilization(records)
 
     def thread_report(self) -> dict:
         """Worker-thread health after shutdown: leaked (unjoinable) thread
