@@ -13,10 +13,13 @@
 Output: ``name,us_per_call,derived`` CSV rows on stdout.
 
 Run: PYTHONPATH=src python -m benchmarks.run [bench_name ...]
-     [--json] [--trace out.json]
+     [--json] [--trace out.json] [--dot prefix]
 
 ``--trace PATH`` exports the last traced run as a Chrome/Perfetto
 trace-event file (fig.-7-style timeline, viewable at ui.perfetto.dev).
+``--dot PREFIX`` writes Graphviz renders of a representative lowered
+program as ``PREFIX.{tdag,cdag,idag}.dot`` (sanitizer findings, if any,
+highlighted in the IDAG); with no bench names it exports and exits.
 """
 
 from __future__ import annotations
@@ -1150,6 +1153,112 @@ def bench_serve() -> None:
     SCHED_JSON["serve_inflight_windows"] = float(pipe[2][2])
 
 
+# ---------------------------------------------------------------------------
+# schedule sanitizer (DESIGN.md §14): concurrent-verification overhead
+
+
+def bench_verify() -> None:
+    """Cost of ``Runtime(verify="window")`` on the executor issue path.
+
+    Window verification runs on a dedicated worker thread concurrent with
+    the executor draining the same window, so the budget is <= 5% overhead
+    against ``verify="off"``, measured the same way ``executor_issue_us``
+    is (end-to-end wall over instructions issued, best-of-N minimum —
+    container noise is additive, the min is the signal).  Capture is the
+    only work the issue path pays for synchronously; the rest of the
+    sanitizer cost is the worker's concurrent GIL share plus a ~2 ms
+    finalize at sync.  Reps run interleaved (off, window) back to back so
+    machine drift hits both variants.  ``verify_window_us`` is the mean
+    per-window check wall time (gated by the CI perf baseline);
+    ``verify_overhead_pct`` is the end-to-end delta (informational — its
+    run-to-run noise exceeds the true ~3% overhead).
+    """
+    steps, n = 200, 2048
+
+    def run(verify: str) -> tuple[float, float, int, float]:
+        with Runtime(num_nodes=1, devices_per_node=2, horizon_step=8,
+                     verify=verify) as rt:
+            X = rt.buffer((n,), init=np.zeros(n), name="X")
+            Y = rt.buffer((n,), init=np.zeros(n), name="Y")
+
+            def bump(chunk, v):
+                v.set(chunk, v.get(chunk) + 1.0)
+
+            t0 = time.perf_counter()
+            for s in range(steps):
+                rt.submit(f"kx{s}", (n,), [read_write(X, one_to_one())], bump)
+                rt.submit(f"ky{s}", (n,), [read_write(Y, one_to_one())], bump)
+            rt.sync(timeout=300)
+            wall = time.perf_counter() - t0
+            n_instr = rt.total_instructions()
+            vus = 0.0
+            if verify == "window":
+                h = rt.metrics_registry.snapshot()["histograms"].get(
+                    "verify.window_us")
+                if h and h["count"]:
+                    vus = h["sum_us"] / h["count"]
+        return wall / n_instr * 1e6, n_instr, vus
+
+    pairs: list[tuple[tuple[float, int, float],
+                      tuple[float, int, float]]] = []
+    for _ in range(9):                   # 9 paired reps (single runs are noise)
+        pairs.append((run("off"), run("window")))
+    best_off = min((o for o, _ in pairs), key=lambda r: r[0])
+    best_win = min((w for _, w in pairs), key=lambda r: r[0])
+    off_us, win_us = best_off[0], best_win[0]
+    pct = 100.0 * (win_us - off_us) / off_us
+    emit("verify/issue_off", off_us, f"instr={best_off[1]}")
+    emit("verify/issue_window", win_us,
+         f"instr={best_win[1]};overhead_pct={pct:+.1f};budget=5.0")
+    vus = sorted(w[2] for _, w in pairs)[len(pairs) // 2]
+    emit("verify/window_check", vus, "median-rep mean per-window sanitizer wall")
+    SCHED_JSON["verify_window_us"] = vus
+    SCHED_JSON["verify_overhead_pct"] = pct
+
+
+def export_dots(prefix: Path) -> None:
+    """--dot PREFIX: write TDAG/CDAG/IDAG Graphviz exports of a
+    representative program (wave + reduction on a 2x2 grid) next to
+    ``PREFIX`` as ``PREFIX.{tdag,cdag,idag}.dot``; any sanitizer findings
+    on the lowered graph are highlighted in the IDAG render."""
+    from repro.core import (IdagGenerator, TaskGraph, VirtualBuffer,
+                            cdag_to_dot, generate_cdag, idag_to_dot,
+                            tdag_to_dot, verify_graph)
+    from repro.core.command_graph import CommandType
+    from repro.core.dot import write_dot
+
+    nodes, devs, nn = 2, 2, 64
+    tdag = TaskGraph(horizon_step=2)
+    u0 = VirtualBuffer((nn,), name="u0", initial_value=np.zeros(nn))
+    u1 = VirtualBuffer((nn,), name="u1", initial_value=np.zeros(nn))
+    E = VirtualBuffer((1,), name="E", initial_value=np.zeros(1))
+    cur, nxt = u0, u1
+    for s in range(3):
+        tdag.submit(f"step{s}", (nn,), [read(cur, all_range()),
+                                        write(nxt, one_to_one())])
+        tdag.submit(f"E{s}", (nn,), [read(nxt, one_to_one()),
+                                     reduction(E, "sum")])
+        cur, nxt = nxt, cur
+    gen = generate_cdag(tdag, nodes)
+    node_instrs, pilots = [], []
+    for rank in range(nodes):
+        idag = IdagGenerator(rank, devs)
+        for cmd in gen.commands[rank]:
+            if cmd.ctype == CommandType.EPOCH and cmd.task is None:
+                continue
+            idag.compile(cmd)
+        node_instrs.append(idag.instructions)
+        pilots.extend(idag.pilots)
+    rep = verify_graph(node_instrs, pilots=pilots)
+    cmds = [c for cs in gen.commands for c in cs]
+    for suffix, text in (
+            ("tdag", tdag_to_dot(tdag)),
+            ("cdag", cdag_to_dot(cmds)),
+            ("idag", idag_to_dot(node_instrs, issues=rep.issues))):
+        p = write_dot(f"{prefix}.{suffix}.dot", text)
+        print(f"# wrote {p}", file=sys.stderr)
+
+
 BENCHES = {
     "bench_strong_scaling": bench_strong_scaling,
     "bench_overlap": bench_overlap,
@@ -1162,6 +1271,7 @@ BENCHES = {
     "bench_scheduler_throughput": bench_scheduler_throughput,
     "bench_observability": bench_observability,
     "bench_serve": bench_serve,
+    "bench_verify": bench_verify,
     "bench_roofline": bench_roofline,
 }
 
@@ -1175,6 +1285,14 @@ def main() -> None:
             sys.exit("--trace requires an output path (e.g. --trace out.json)")
         TRACE_PATH = Path(argv[i + 1])
         argv = argv[:i] + argv[i + 2:]
+    if "--dot" in argv:
+        i = argv.index("--dot")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+            sys.exit("--dot requires an output prefix (e.g. --dot out/wave)")
+        export_dots(Path(argv[i + 1]))
+        argv = argv[:i] + argv[i + 2:]
+        if not [a for a in argv if a != "--json"]:
+            return                       # --dot alone: export only
     args = [a for a in argv if a != "--json"]
     write_json = "--json" in argv
     names = args or list(BENCHES)

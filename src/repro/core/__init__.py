@@ -24,6 +24,10 @@ from .region import Box, Region, RegionMap, split_box
 from .runtime import Runtime, SupervisedResult
 from .task_graph import DepKind, Task, TaskGraph, TaskType
 from .tracing import Tracer
+from .dot import cdag_to_dot, idag_to_dot, tdag_to_dot
+from .verify import (CampaignResult, Mutation, ScheduleVerifier,
+                     VerificationError, VerificationIssue, VerificationReport,
+                     mutate_one, run_mutation_campaign, verify_graph)
 
 __all__ = [
     "Allocation", "PINNED_HOST", "USER_HOST", "device_memory",
@@ -46,4 +50,8 @@ __all__ = [
     "Runtime", "SupervisedResult",
     "DepKind", "Task", "TaskGraph", "TaskType",
     "Tracer",
+    "cdag_to_dot", "idag_to_dot", "tdag_to_dot",
+    "CampaignResult", "Mutation", "ScheduleVerifier", "VerificationError",
+    "VerificationIssue", "VerificationReport", "mutate_one",
+    "run_mutation_campaign", "verify_graph",
 ]

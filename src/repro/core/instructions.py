@@ -201,11 +201,125 @@ class Instruction:
     # serving window sequence number (per tenant): lets the executor track
     # how many replayed windows are concurrently in flight (DESIGN.md §13)
     window: Optional[int] = None
+    # ALLOC only, stamped at emission: whether the allocation was buffer-
+    # backed (persistent) when the ALLOC was emitted.  Renaming mutates
+    # ``allocation.bid`` after emission, so the verifier's leak check
+    # (DESIGN.md §14) needs the emission-time value, not the current one.
+    persistent: Optional[bool] = None
     iid: int = field(default_factory=lambda: next(_instr_ids))
     dependencies: list[tuple["Instruction", DepKind]] = field(default_factory=list)
     dependents: list["Instruction"] = field(default_factory=list)
     # set by the executor:
     state: str = "pending"
+
+    @staticmethod
+    def _frag_region(f: CollFragment) -> Region:
+        """Allocation-space region one collective fragment addresses."""
+        if f.box is not None:
+            return Region.from_box(f.box)
+        if f.srange is not None:
+            lo, hi = f.srange
+            return Region.from_box(Box((lo,), (hi,)))
+        b = f.alloc.box
+        s = f.slot
+        return Region.from_box(Box((s,) + b.min[1:], (s + 1,) + b.max[1:]))
+
+    def accesses(self) -> list[tuple[Allocation, Region, str]]:
+        """Structured access metadata: ``(allocation, region, mode)`` triples.
+
+        ``mode`` is ``"r"`` (read), ``"w"`` (discard-write), ``"rw"``
+        (read-modify-write) or ``"red"`` (combining read-modify-write into a
+        reduction accumulator: racing ``"red"`` accesses to the same
+        allocation are permitted by construction — the one-writer exception,
+        DESIGN.md §14).  Regions are in the coordinate space the allocation
+        is addressed in: buffer space for buffer-backed allocations,
+        slot-staging space for reduction scratch.  ALLOC/FREE/HORIZON/EPOCH
+        perform no data access and return ``[]`` — allocation lifetime is
+        carried by ``self.allocation`` instead.
+
+        This is the single source of truth the schedule sanitizer
+        (core/verify.py) and the memo hazard wiring (core/memo.py) analyze;
+        an instruction type whose executor semantics touch memory not listed
+        here is invisible to both.
+        """
+        T = InstructionType
+        it = self.itype
+        out: list[tuple[Allocation, Region, str]] = []
+
+        def add(alloc: Optional[Allocation], region: Optional[Region],
+                mode: str) -> None:
+            if alloc is not None and region is not None:
+                out.append((alloc, region, mode))
+
+        def whole(a: Allocation) -> Region:
+            return Region.from_box(a.box)
+
+        def row(a: Allocation, s: int) -> Region:
+            b = a.box
+            return Region.from_box(
+                Box((s,) + b.min[1:], (s + 1,) + b.max[1:]))
+
+        if it in (T.COPY, T.SPILL, T.RELOAD):
+            reg = Region.from_box(self.copy_box)
+            add(self.src_alloc, reg, "r")
+            add(self.dst_alloc, reg, "w")
+        elif it is T.SEND:
+            # ``recv_alloc`` is the *source* allocation for a SEND (the
+            # field names the receiver-protocol role, not the direction)
+            add(self.recv_alloc, Region.from_box(self.send_box), "r")
+        elif it in (T.RECEIVE, T.SPLIT_RECEIVE):
+            add(self.recv_alloc, self.recv_region, "w")
+        elif it is T.AWAIT_RECEIVE:
+            # the split parent is the writer; the await only observes its
+            # sub-region (sibling awaits overlap would be false WW races)
+            add(self.recv_alloc, self.recv_region, "r")
+        elif it is T.GATHER_RECEIVE:
+            for src in self.gather_sources:
+                add(self.recv_alloc, row(self.recv_alloc, src), "w")
+        elif it is T.FILL_IDENTITY:
+            add(self.allocation, whole(self.allocation), "w")
+        elif it is T.LOCAL_REDUCE:
+            for a in self.reduce_srcs:
+                add(a, whole(a), "r")
+            d = self.dst_alloc
+            if self.slot_range is not None:
+                lo, hi = self.slot_range
+                add(d, Region.from_box(Box((lo,), (hi,))),
+                    "rw" if self.accumulate else "w")
+            elif self.dst_slot is not None:
+                add(d, row(d, self.dst_slot), "w")
+            else:
+                add(d, whole(d), "w")
+        elif it is T.GLOBAL_REDUCE:
+            if self.src_alloc is not None:
+                add(self.src_alloc, whole(self.src_alloc), "r")
+            for a in self.reduce_srcs:
+                add(a, whole(a), "r")
+            add(self.dst_alloc, whole(self.dst_alloc),
+                "rw" if self.include_current else "w")
+        elif it is T.COLL_SEND:
+            for f in self.coll_frags:
+                add(f.alloc, self._frag_region(f), "r")
+        elif it is T.COLL_RECV:
+            if self.coll_land:
+                for f in self.coll_land:
+                    add(f.alloc, self._frag_region(f), "w")
+            elif self.recv_alloc is not None:
+                add(self.recv_alloc, self.recv_region, "w")
+            else:
+                for key in self.coll_expect:
+                    mi, slot = key[0], key[1]
+                    a = self.coll_allocs[mi]
+                    add(a, row(a, slot), "w")
+        elif it in (T.DEVICE_KERNEL, T.HOST_TASK):
+            for b in self.bindings:
+                m = b.accessor.mode
+                mode = ("rw" if (m.is_consumer and m.is_producer)
+                        else "w" if m.is_producer else "r")
+                add(b.allocation, b.region, mode)
+            for rb in self.red_bindings:
+                add(rb.allocation, whole(rb.allocation), "red")
+        return out
 
     def add_dependency(self, dep: "Instruction", kind: DepKind) -> None:
         if dep is self:

@@ -77,6 +77,7 @@ from .observability import MetricsRegistry
 from .reduction import Reduction
 from .region import Box, Region, split_box
 from .task_graph import DepKind, TaskGraph, TaskType
+from .verify import ScheduleVerifier
 from .tracing import Tracer
 
 
@@ -223,49 +224,43 @@ def _alloc_touches(i: Instruction) -> tuple[list, list]:
     §13.4): persistent allocations shared by concurrently in-flight windows
     need explicit RAW/WAR/WAW edges between windows, since replay bypasses
     the MemoryManager's producer/reader maps entirely.
+
+    Derived from :meth:`Instruction.accesses` (the structured access
+    metadata the schedule sanitizer also analyzes), collapsed to
+    allocation granularity, with two deliberate hazard-level deviations:
+    ALLOC/FREE count as writers of their allocation (backing-store
+    lifetime IS a hazard between windows), and AWAIT_RECEIVE counts as a
+    writer of the landing allocation (the arbiter materializes payload
+    bytes under it, so a concurrent window's reader must order behind it,
+    not beside it).
     """
     T = InstructionType
     it = i.itype
+    if it in (T.ALLOC, T.FREE):
+        return [], [i.allocation]
     reads: list = []
     writes: list = []
-    if it in (T.ALLOC, T.FREE):
-        writes.append(i.allocation)
-    elif it in (T.COPY, T.SPILL, T.RELOAD):
-        reads.append(i.src_alloc)
-        writes.append(i.dst_alloc)
-    elif it is T.SEND:
-        reads.append(i.recv_alloc)
-    elif it is T.COLL_SEND:
-        reads.extend(f.alloc for f in i.coll_frags)
-    elif it in (T.RECEIVE, T.SPLIT_RECEIVE, T.AWAIT_RECEIVE,
-                T.GATHER_RECEIVE):
-        writes.append(i.recv_alloc)
-    elif it is T.COLL_RECV:
-        writes.extend(i.coll_allocs)
-        writes.extend(f.alloc for f in i.coll_land)
-    elif it is T.FILL_IDENTITY:
-        writes.append(i.allocation)
-    elif it is T.LOCAL_REDUCE:
-        reads.extend(i.reduce_srcs)
-        if i.accumulate:
-            reads.append(i.dst_alloc)
-        writes.append(i.dst_alloc)
-    elif it is T.GLOBAL_REDUCE:
-        if i.src_alloc is not None:
-            reads.append(i.src_alloc)
-        reads.extend(i.reduce_srcs)
-        if i.include_current:
-            reads.append(i.dst_alloc)
-        writes.append(i.dst_alloc)
-    elif it in (T.DEVICE_KERNEL, T.HOST_TASK):
-        for b in i.bindings:
-            if b.accessor.mode.is_consumer:
-                reads.append(b.allocation)
-            if b.accessor.mode.is_producer:
-                writes.append(b.allocation)
-        for rb in i.red_bindings:
-            writes.append(rb.allocation)
-    return reads, writes
+    for a, _region, mode in i.accesses():
+        if it is T.AWAIT_RECEIVE:
+            writes.append(a)
+        elif mode == "r":
+            reads.append(a)
+        elif mode == "w":
+            writes.append(a)
+        else:                       # "rw" / "red": read-modify-write
+            reads.append(a)
+            writes.append(a)
+
+    def _dedup(lst: list) -> list:
+        seen: set[int] = set()
+        out = []
+        for a in lst:
+            if id(a) not in seen:
+                seen.add(id(a))
+                out.append(a)
+        return out
+
+    return _dedup(reads), _dedup(writes)
 
 
 @dataclass
@@ -405,6 +400,8 @@ class Tenant:
             self.last_boundary.append(self.idags[n]._init_epoch)
             self._ring.append(deque([self.idags[n]._init_epoch],
                                     maxlen=self.depth))
+            if srv.verifier is not None:
+                srv.verifier.capture(n, boot)
             srv.executors[n].submit(boot)
 
     # -- client API --------------------------------------------------------
@@ -618,6 +615,13 @@ class Tenant:
         if epoch_instr is not None:
             self.last_boundary[n] = epoch_instr
             self._ring[n].append(epoch_instr)
+        if self.srv.verifier is not None:
+            self.srv.verifier.capture_pilots(pilots)
+            span = self.srv.verifier.capture(n, instrs)
+            self.srv.executors[n].submit(instrs)
+            if self.srv.verifier.mode == "window":
+                self.srv.verifier.verify_window(n, span)
+            return
         self.srv.executors[n].submit(instrs)
 
     def _capture(self, node_instrs, node_pilots, tid_to_call) -> _Template:
@@ -855,13 +859,23 @@ class Tenant:
                         ent["r"] = [x for x in ent["r"] if x[0] > cutoff]
                         ent["r"] += [(wseq, r)
                                      for r in new_readers.get(aid, [])]
+            new_pilots = []
             for p in tpl.node_pilots[n]:
                 t = p.transfer_id
-                srv.comm.post_pilot(Pilot(
+                new_pilots.append(Pilot(
                     source=p.source, target=p.target,
                     transfer_id=(tid_map[t[0]],) + t[1:], box=p.box,
                     msg_id=msg_map.get(p.msg_id, p.msg_id), gather=p.gather))
-            srv.executors[n].submit(out)
+            for p in new_pilots:
+                srv.comm.post_pilot(p)
+            if srv.verifier is not None:
+                srv.verifier.capture_pilots(new_pilots)
+                span = srv.verifier.capture(n, out)
+                srv.executors[n].submit(out)
+                if srv.verifier.mode == "window":
+                    srv.verifier.verify_window(n, span)
+            else:
+                srv.executors[n].submit(out)
         return WindowHandle(self, cids, cached=not identity)
 
 
@@ -884,7 +898,8 @@ class ServingRuntime:
                  memo_cache_max: Optional[int] = None,
                  renaming: bool = False,
                  metrics: bool = True, trace: bool = False,
-                 record_sample: int = 1, reliable: bool = True):
+                 record_sample: int = 1, reliable: bool = True,
+                 verify: str = "off"):
         self.num_nodes = num_nodes
         self.devices_per_node = devices_per_node
         self.memo = memo
@@ -908,6 +923,18 @@ class ServingRuntime:
                             self.reduction_allreduce, horizon_step, lookahead,
                             renaming)
         self._buffer_owner: dict[int, str] = {}
+        # schedule sanitizer (DESIGN.md §14) over every submitted window —
+        # including memo-replay clones and their cross-window re-anchored
+        # edges, the first structural check that path has ever had.  No
+        # budget model here: replay clones are not charged to a fresh
+        # compile-time model, and budgets are per-tenant.
+        if verify not in ("off", "final", "window"):
+            raise ValueError(
+                f"verify must be 'off', 'final' or 'window', got {verify!r}")
+        self.verifier: Optional[ScheduleVerifier] = None
+        if verify != "off":
+            self.verifier = ScheduleVerifier(num_nodes, mode=verify,
+                                             metrics=self.metrics_registry)
         self.comm = Communicator(num_nodes, reliable=reliable,
                                  tracer=self.tracer,
                                  metrics=self.metrics_registry)
@@ -971,6 +998,19 @@ class ServingRuntime:
                 else dict(counters={}, gauges={}, histograms={}))
         snap["memo"] = self.memo_stats()
         return snap
+
+    def verify_now(self):
+        """Finalize the schedule sanitizer over everything captured so far
+        and raise :class:`~repro.core.verify.VerificationError` on issues.
+
+        Call after the tenants of interest have drained, so every submitted
+        window (cold, cached-replay, bootstrap) has been captured.
+        """
+        if self.verifier is None:
+            raise RuntimeError("verify_now() needs ServingRuntime(verify=...)")
+        report = self.verifier.finalize()
+        self.verifier.check()
+        return report
 
     # -- lifecycle ---------------------------------------------------------
     def shutdown(self) -> None:

@@ -324,7 +324,8 @@ class MemoryManager:
         gen = self.host
         instr = gen._emit(Instruction(
             InstructionType.ALLOC, node=gen.node,
-            queue=queue_for_mem(alloc.mid), allocation=alloc, name=name))
+            queue=queue_for_mem(alloc.mid), allocation=alloc, name=name,
+            persistent=alloc.bid is not None))
         if gen._last_horizon is not None:
             instr.add_dependency(gen._last_horizon, DepKind.SYNC)
         elif gen._last_epoch is not None:
@@ -846,6 +847,23 @@ class MemoryManager:
         self._pool_allocs.clear()
         self._free_pool.clear()
         return out
+
+    def pool_provenance(self) -> list[dict]:
+        """Free-pool state for the schedule sanitizer (DESIGN.md §14).
+
+        One record per currently pooled (retired, recyclable) physical:
+        its identity, its size-class pool key, the ALLOC instruction that
+        materialized it, and the iids of the hazard records its next writer
+        must consume as ANTI deps.  The verifier cross-checks these against
+        the captured instruction stream — a pooled physical whose hazards
+        were dropped is exactly the PR 9 drain-FREE bug shape.
+        """
+        return [dict(aid=a.aid, mid=a.mid, key=self._pool_key(a),
+                     alloc_iid=(a.alloc_instr.iid
+                                if a.alloc_instr is not None else None),
+                     hazard_iids=[h.iid for h in a.hazards],
+                     nbytes=a.nbytes())
+                for a in self._pool_allocs]
 
     # -- introspection --------------------------------------------------------
     def snapshot(self) -> dict:

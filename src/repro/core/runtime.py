@@ -34,6 +34,7 @@ from .observability import (CriticalPathReport, MetricsRegistry,
 from .region import Box
 from .task_graph import Task, TaskGraph, TaskType
 from .tracing import Tracer
+from .verify import ScheduleVerifier
 
 
 @dataclass
@@ -70,6 +71,8 @@ class _NodeScheduler:
         self._horizons_sent = sum(
             1 for i in bootstrap
             if i.itype in (InstructionType.HORIZON, InstructionType.EPOCH))
+        if rt.verifier is not None:
+            rt.verifier.capture(node, bootstrap)
         rt.executors[node].submit(bootstrap)
         self._thread = threading.Thread(target=self._run,
                                         name=f"sched-N{node}", daemon=True)
@@ -99,7 +102,15 @@ class _NodeScheduler:
             # pilots are transmitted as soon as the sends are compiled (§3.4)
             self._post_new_pilots()
             if instrs:
+                # snapshot before submit: the executor rebinds dependency
+                # lists when it retires instructions
+                span = (rt.verifier.capture(self.node, instrs)
+                        if rt.verifier is not None else None)
                 rt.executors[self.node].submit(instrs)
+                if span is not None and rt.verifier.mode == "window":
+                    # async: enqueues the span for the verifier worker
+                    # thread, concurrent with the executor draining it
+                    rt.verifier.verify_window(self.node, span)
                 self._horizons_sent += sum(
                     1 for i in instrs
                     if i.itype in (InstructionType.HORIZON,
@@ -157,9 +168,12 @@ class _NodeScheduler:
 
     def _post_new_pilots(self) -> None:
         pilots = self.idag.pilots
-        while self._pilot_cursor < len(pilots):
-            self.rt.comm.post_pilot(pilots[self._pilot_cursor])
-            self._pilot_cursor += 1
+        new = pilots[self._pilot_cursor:]
+        for p in new:
+            self.rt.comm.post_pilot(p)
+        self._pilot_cursor += len(new)
+        if new and self.rt.verifier is not None:
+            self.rt.verifier.capture_pilots(new)
         # posted pilots are never re-read: trim so the list stays bounded
         # (only this scheduler thread touches idag.pilots)
         if self._pilot_cursor:
@@ -189,7 +203,8 @@ class Runtime:
                  retransmit_timeout: float = 0.05, max_retries: int = 12,
                  metrics: bool = True, renaming: bool = False,
                  issue_width: Optional[int] = None,
-                 max_inflight_windows: Optional[int] = None):
+                 max_inflight_windows: Optional[int] = None,
+                 verify: str = "off"):
         self.num_nodes = num_nodes
         self.devices_per_node = devices_per_node
         self.lookahead = lookahead
@@ -236,6 +251,22 @@ class Runtime:
                                  max_retries=max_retries,
                                  tracer=self.tracer,
                                  metrics=self.metrics_registry)
+        # schedule sanitizer (DESIGN.md §14): "final" verifies the captured
+        # instruction streams at every sync; "window" additionally checks
+        # each submitted window on the scheduler thread, concurrent with
+        # its execution
+        if verify not in ("off", "final", "window"):
+            raise ValueError(
+                f"verify must be 'off', 'final' or 'window', got {verify!r}")
+        self.verifier: Optional[ScheduleVerifier] = None
+        if verify != "off":
+            vbudgets: dict[int, int] = dict(memory_budgets or {})
+            if device_memory_budget is not None:
+                for d in range(devices_per_node):
+                    vbudgets.setdefault(device_memory(d), device_memory_budget)
+            self.verifier = ScheduleVerifier(num_nodes, mode=verify,
+                                             metrics=self.metrics_registry,
+                                             budgets=vbudgets or None)
         self.executors = [Executor(n, devices_per_node, self.comm,
                                    queues_per_device=queues_per_device,
                                    host_threads=host_threads,
@@ -321,6 +352,10 @@ class Runtime:
             raise ExecutionAborted(
                 "executor failure; " + self.comm.transport_summary(),
                 sorted(failures)) from failures[0][1]
+        if self.verifier is not None:
+            self.verifier.finalize(
+                peaks=[dict(s.idag.mem.peak) for s in self.schedulers])
+            self.verifier.check()
 
     def gather(self, buf: VirtualBuffer, timeout: float = 120.0) -> np.ndarray:
         """Assemble the current buffer contents on the caller's side."""

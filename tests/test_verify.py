@@ -1,0 +1,408 @@
+"""Schedule sanitizer (DESIGN.md §14).
+
+Unit: hand-built defect graphs produce exactly the right issue kind (race,
+use-after-free, double-free, leak, deadlock, orphan receive, missing pilot,
+budget mismatch).  True negatives: every corpus program (iterative
+overwrite, wave + reduction, n-body) lowered on 1x1 / 2x2 / 3x1 grids with
+renaming on/off — plus collective reductions, halo exchange, and
+half-working-set spill graphs — verifies clean, statically and end to end
+(``Runtime(verify=...)`` in both modes, chaos transport faults, budgeted
+spill, and serving-runtime memo replay at pipeline depth >= 2).  Mutation
+self-test: a seeded fuzzer plants one defect per graph over >= 200 mutants
+and the sanitizer must detect >= 95% AND name a mutated instruction in the
+report (attribution), with every mutation operator exercised.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (Box, FaultPlan, IdagGenerator, InstructionType,
+                        Runtime, TaskGraph, VerificationError, all_range,
+                        generate_cdag, neighborhood, one_to_one, read,
+                        read_write, reduction, run_mutation_campaign,
+                        verify_graph, write)
+from repro.core.allocation import Allocation, device_memory
+from repro.core.buffer import VirtualBuffer
+from repro.core.command_graph import CommandType
+from repro.core.instructions import Instruction
+from repro.core.memo import ServingRuntime
+from repro.core.task_graph import DepKind
+
+N = 32
+GRIDS = [(1, 1), (2, 2), (3, 1)]
+_IT = InstructionType
+
+
+# --------------------------------------------------------------------------
+# corpus: statically lowered programs (no execution)
+# --------------------------------------------------------------------------
+def _lower(tdag, nodes, devs, *, renaming=False, collectives=False,
+           budgets=None):
+    """Lower a TDAG for every rank; returns (node_instrs, pilots, budgets,
+    peaks) — the shape ``verify_graph`` / ``run_mutation_campaign`` expect."""
+    gen = generate_cdag(tdag, nodes, collectives=collectives)
+    node_instrs, pilots, peaks = [], [], []
+    for n in range(nodes):
+        idag = IdagGenerator(n, devs, renaming=renaming, budgets=budgets)
+        for cmd in gen.commands[n]:
+            if cmd.ctype == CommandType.EPOCH and cmd.task is None:
+                continue
+            idag.compile(cmd)
+        node_instrs.append(idag.instructions)
+        pilots.extend(idag.pilots)
+        peaks.append(dict(idag.mem.peak))
+    return node_instrs, pilots, dict(budgets) if budgets else None, peaks
+
+
+def _iterative_tdag(steps=6):
+    tdag = TaskGraph(horizon_step=2)
+    B = VirtualBuffer((N,), name="B", initial_value=np.zeros(N))
+    C = VirtualBuffer((N,), name="C")
+    for s in range(steps):
+        tdag.submit(f"r{s}", (N,), [read(B, one_to_one()),
+                                    write(C, one_to_one())])
+        tdag.submit(f"w{s}", (N,), [write(B, one_to_one())])
+    return tdag
+
+
+def _wave_tdag(steps=6):
+    tdag = TaskGraph(horizon_step=2)
+    u0 = VirtualBuffer((N,), name="u0", initial_value=np.zeros(N))
+    u1 = VirtualBuffer((N,), name="u1", initial_value=np.zeros(N))
+    E = VirtualBuffer((1,), name="E", initial_value=np.zeros(1))
+    cur, nxt = u0, u1
+    for s in range(steps):
+        tdag.submit(f"step{s}", (N,), [read(cur, all_range()),
+                                       write(nxt, one_to_one())])
+        tdag.submit(f"E{s}", (N,), [read(nxt, one_to_one()),
+                                    reduction(E, "sum")])
+        cur, nxt = nxt, cur
+    return tdag
+
+
+def _nbody_tdag(steps=4):
+    tdag = TaskGraph(horizon_step=2)
+    pos = VirtualBuffer((N,), name="pos", initial_value=np.zeros(N))
+    frc = VirtualBuffer((N,), name="frc")
+    for s in range(steps):
+        tdag.submit(f"force{s}", (N,), [read(pos, all_range()),
+                                        write(frc, one_to_one())])
+        tdag.submit(f"euler{s}", (N,), [read(frc, one_to_one()),
+                                        read_write(pos, one_to_one())])
+    return tdag
+
+
+def _halo_tdag(steps=5):
+    tdag = TaskGraph(horizon_step=2)
+    a = VirtualBuffer((N,), name="a", initial_value=np.zeros(N))
+    b = VirtualBuffer((N,), name="b")
+    cur, nxt = a, b
+    for s in range(steps):
+        tdag.submit(f"h{s}", (N,), [read(cur, neighborhood((2,))),
+                                    write(nxt, one_to_one())])
+        cur, nxt = nxt, cur
+    return tdag
+
+
+CORPUS = [("iter", _iterative_tdag), ("wave", _wave_tdag),
+          ("nbody", _nbody_tdag)]
+
+
+# --------------------------------------------------------------------------
+# unit: hand-built defect graphs hit exactly the right check
+# --------------------------------------------------------------------------
+def _scratch(mid=device_memory(0), lo=0, hi=8, bid=None):
+    return Allocation(mid, bid, Box((lo,), (hi,)))
+
+
+def _copy_graph(*, ordered):
+    """ALLOC src/dst, two COPYs writing the same dst box, FREEs.  With
+    ``ordered=False`` the copies race on the dst allocation."""
+    src, dst = _scratch(), _scratch()
+    a1 = Instruction(_IT.ALLOC, node=0, allocation=src, persistent=False)
+    a2 = Instruction(_IT.ALLOC, node=0, allocation=dst, persistent=False)
+    box = Box((0,), (8,))
+    c1 = Instruction(_IT.COPY, node=0, src_alloc=src, dst_alloc=dst,
+                     copy_box=box, name="c1")
+    c2 = Instruction(_IT.COPY, node=0, src_alloc=src, dst_alloc=dst,
+                     copy_box=box, name="c2")
+    for c in (c1, c2):
+        c.add_dependency(a1, DepKind.TRUE)
+        c.add_dependency(a2, DepKind.TRUE)
+    if ordered:
+        c2.add_dependency(c1, DepKind.OUTPUT)
+    f1 = Instruction(_IT.FREE, node=0, allocation=src)
+    f2 = Instruction(_IT.FREE, node=0, allocation=dst)
+    for f in (f1, f2):
+        f.add_dependency(c1, DepKind.ANTI)
+        f.add_dependency(c2, DepKind.ANTI)
+    return [a1, a2, c1, c2, f1, f2], (c1, c2)
+
+
+def test_unordered_writers_race():
+    instrs, (c1, c2) = _copy_graph(ordered=False)
+    rep = verify_graph([instrs])
+    kinds = {i.kind for i in rep.issues}
+    assert kinds == {"race"}, rep.issues
+    assert {c1.iid, c2.iid} <= set(rep.issues[0].instrs)
+    # the same graph with the WAW edge present is clean
+    instrs, _ = _copy_graph(ordered=True)
+    assert verify_graph([instrs]).ok
+
+
+def test_use_after_free_and_double_free():
+    instrs, _ = _copy_graph(ordered=True)
+    a1, a2, c1, c2, f1, f2 = instrs
+    late = Instruction(_IT.COPY, node=0, src_alloc=c1.src_alloc,
+                       dst_alloc=c1.dst_alloc, copy_box=Box((0,), (8,)))
+    late.add_dependency(f2, DepKind.SYNC)
+    dup = Instruction(_IT.FREE, node=0, allocation=f1.allocation)
+    dup.add_dependency(f1, DepKind.SYNC)
+    rep = verify_graph([instrs + [late, dup]])
+    kinds = sorted(i.kind for i in rep.issues)
+    details = " ".join(i.detail for i in rep.issues)
+    assert "use-after-free" in details and "double-free" in details, rep.issues
+    assert all(k == "lifetime" for k in kinds)
+
+
+def test_scratch_leak_and_free_of_unallocated():
+    instrs, _ = _copy_graph(ordered=True)
+    del instrs[-1]                              # dst FREE gone: leak
+    stray = Instruction(_IT.FREE, node=0, allocation=_scratch(lo=16, hi=24))
+    rep = verify_graph([instrs + [stray]])
+    details = " ".join(i.detail for i in rep.issues)
+    assert "never freed" in details and "never-allocated" in details, rep.issues
+
+
+def test_dependency_cycle_is_deadlock():
+    instrs, (c1, c2) = _copy_graph(ordered=True)
+    c1.add_dependency(c2, DepKind.SYNC)         # c2 already depends on c1
+    rep = verify_graph([instrs])
+    dead = [i for i in rep.issues if i.kind == "deadlock"]
+    assert dead and {c1.iid, c2.iid} <= set(dead[0].instrs), rep.issues
+
+
+def test_budget_replay_mismatch():
+    instrs, _ = _copy_graph(ordered=True)
+    nbytes = instrs[0].allocation.nbytes()
+    # the honest peak (both scratches live at once) passes ...
+    assert verify_graph([instrs], peaks=[{device_memory(0): 2 * nbytes}]).ok
+    # ... an inflated promise is a replay mismatch
+    rep = verify_graph([instrs], peaks=[{device_memory(0): 3 * nbytes}])
+    assert not rep.ok
+    assert rep.issues[0].kind == "budget"
+    assert "peak replay mismatch" in rep.issues[0].detail
+
+
+def test_orphan_receive_and_missing_pilot():
+    a = _scratch(bid=7)
+    al = Instruction(_IT.ALLOC, node=1, allocation=a, persistent=True)
+    from repro.core.region import Region
+    recv = Instruction(_IT.RECEIVE, node=1, transfer_id=(9, 7),
+                       recv_region=Region.from_box(Box((0,), (8,))),
+                       recv_alloc=a)
+    recv.add_dependency(al, DepKind.TRUE)
+    rep = verify_graph([[], [al, recv]])
+    assert any(i.kind == "comm" and "orphan receive" in i.detail
+               for i in rep.issues), rep.issues
+    # now give it a send, but never post the pilot
+    send = Instruction(_IT.SEND, node=0, dest=1, transfer_id=(9, 7),
+                       msg_id=0, send_box=Box((0,), (8,)), recv_alloc=a)
+    rep = verify_graph([[send], [al, recv]])
+    assert any(i.kind == "comm" and "pilot" in i.detail
+               for i in rep.issues), rep.issues
+
+
+def test_verification_error_names_instructions():
+    instrs, (c1, c2) = _copy_graph(ordered=False)
+    with pytest.raises(VerificationError) as exc:
+        verify_graph([instrs]).check()
+    msg = str(exc.value)
+    assert f"I{c1.iid}" in msg and f"I{c2.iid}" in msg
+    assert "missing happens-before edge" in msg
+
+
+# --------------------------------------------------------------------------
+# true negatives: the whole corpus verifies clean
+# --------------------------------------------------------------------------
+def test_corpus_static_clean():
+    for _name, builder in CORPUS:
+        for nodes, devs in GRIDS:
+            for ren in (False, True):
+                ni, pi, vb, pk = _lower(builder(), nodes, devs, renaming=ren)
+                rep = verify_graph(ni, pilots=pi, budgets=vb, peaks=pk)
+                assert rep.ok, (_name, nodes, devs, ren, rep.issues[:5])
+                assert rep.pairs_checked > 0
+
+
+def test_collective_corpus_static_clean():
+    for nodes, devs in [(2, 2), (3, 1)]:
+        for ren in (False, True):
+            ni, pi, vb, pk = _lower(_wave_tdag(), nodes, devs, renaming=ren,
+                                    collectives=True)
+            assert any(i.itype is _IT.COLL_SEND for s in ni for i in s)
+            rep = verify_graph(ni, pilots=pi, budgets=vb, peaks=pk)
+            assert rep.ok, (nodes, devs, ren, rep.issues[:5])
+
+
+def test_halo_corpus_static_clean():
+    for nodes, devs in [(2, 2), (3, 1)]:
+        ni, pi, vb, pk = _lower(_halo_tdag(), nodes, devs)
+        assert any(i.itype is _IT.SEND for s in ni for i in s)
+        rep = verify_graph(ni, pilots=pi, budgets=vb, peaks=pk)
+        assert rep.ok, (nodes, devs, rep.issues[:5])
+
+
+def test_budgeted_spill_static_clean():
+    """Half-working-set device budget: the spill/reload traffic and its
+    eager-reuse ordering verify clean, budget replay included."""
+    for ren in (False, True):
+        _ni, _pi, _vb, pk = _lower(_wave_tdag(), 1, 1, renaming=ren)
+        hwm = pk[0].get(device_memory(0), 0)
+        assert hwm > 0
+        budgets = {device_memory(0): max(hwm // 2, 512)}
+        ni, pi, vb, pk = _lower(_wave_tdag(), 1, 1, renaming=ren,
+                                budgets=budgets)
+        assert any(i.itype in (_IT.SPILL, _IT.RELOAD) for s in ni for i in s)
+        rep = verify_graph(ni, pilots=pi, budgets=vb, peaks=pk)
+        assert rep.ok, (ren, rep.issues[:5])
+
+
+# --------------------------------------------------------------------------
+# true negatives: end to end under Runtime(verify=...)
+# --------------------------------------------------------------------------
+def _wave_program(q, steps=4):
+    rng = np.random.default_rng(11)
+    u0 = q.buffer((N,), init=rng.normal(size=N), name="u0")
+    u1 = q.buffer((N,), init=np.zeros(N), name="u1")
+    E = q.buffer((1,), init=np.zeros(1), name="E")
+    cur, nxt = u0, u1
+    for s in range(steps):
+        def step(chunk, uc, un, _s=s):
+            ua = uc.get(Box((0,), (N,)))
+            lo, hi = chunk.min[0], chunk.max[0]
+            lap = np.roll(ua, 1) + np.roll(ua, -1) - 2.0 * ua
+            un.set(chunk, (ua + 0.1 * lap + 0.01 * _s)[lo:hi])
+
+        q.submit(f"step{s}", (N,), [read(cur, all_range()),
+                                    write(nxt, one_to_one())], step)
+
+        def esum(chunk, un, red):
+            red.contribute(un.get(chunk))
+
+        q.submit(f"E{s}", (N,), [read(nxt, one_to_one()),
+                                 reduction(E, "sum")], esum)
+        cur, nxt = nxt, cur
+    return q.gather(cur)
+
+
+def test_runtime_end_to_end_clean():
+    """verify='final' and the concurrent 'window' mode pass on every grid;
+    sync() would raise VerificationError otherwise."""
+    for nodes, devs in GRIDS:
+        for mode, ren in (("final", False), ("window", True)):
+            with Runtime(nodes, devs, renaming=ren, verify=mode,
+                         issue_width=8 if ren else None,
+                         max_inflight_windows=4 if ren else None) as q:
+                _wave_program(q)
+                q.sync()
+                assert q.warnings == [], q.warnings
+
+
+def test_runtime_chaos_clean():
+    """Chaos transport faults (drops/dups/delays + retries) must not change
+    the lowered schedule's invariants."""
+    for seed in (5, 7):
+        plan = FaultPlan(seed=seed, drop=0.4, duplicate=0.2, delay=0.2)
+        with Runtime(2, 2, fault_plan=plan, verify="final") as q:
+            _wave_program(q)
+            q.sync()
+
+
+def test_runtime_budget_spill_clean():
+    with Runtime(1, 1) as probe:
+        _wave_program(probe)
+        probe.sync()
+        hwm = max(probe.memory_report()[0]["real_peak"].values())
+    for ren in (False, True):
+        with Runtime(1, 1, device_memory_budget=max(hwm // 2, 1024),
+                     renaming=ren, verify="final") as q:
+            _wave_program(q)
+            q.sync()
+
+
+def test_window_mode_emits_metrics():
+    with Runtime(1, 1, verify="window") as q:
+        _wave_program(q)
+        q.sync()
+        snap = q.metrics_registry.snapshot()
+    hist = snap.get("histograms", {})
+    assert "verify.window_us" in hist, sorted(hist)
+    assert snap.get("counters", {}).get("verify.windows", 0) > 0
+
+
+def test_serving_replay_verifies_clean():
+    """Memo-replay clone windows (incl. cross-window re-anchored deps and
+    pipelined depth >= 2) pass verification after drain."""
+    for depth in (1, 3):
+        with ServingRuntime(1, 1, max_inflight_windows=depth,
+                            renaming=depth > 1, verify="final") as srv:
+            t = srv.tenant("t0")
+            u = t.buffer((N,), init=np.arange(N, dtype=float), name="u")
+            for _w in range(8):
+                def bump(chunk, uv):
+                    uv.set(chunk, uv.get(chunk) + 1.0)
+
+                t.submit("bump", (N,), [read_write(u, one_to_one())], bump)
+                t.run()
+            t.drain()
+            rep = srv.verify_now()
+            assert rep.ok and rep.instructions > 0
+            assert srv.memo_stats()["hits"] > 0   # replays really happened
+            out = t.gather(u)
+        np.testing.assert_allclose(out, np.arange(N, dtype=float) + 8.0)
+
+
+# --------------------------------------------------------------------------
+# mutation self-test: the sanitizer is not vacuous
+# --------------------------------------------------------------------------
+def test_mutation_campaign():
+    """>= 200 single-defect mutants over the corpus: >= 95% must be detected
+    AND attributed (an issue names a mutated instruction), and every
+    mutation operator must have fired."""
+    configs = []
+    for name, builder in CORPUS:
+        grids = GRIDS if name != "wave" else [(2, 2), (3, 1)]
+        per = 13 if name != "wave" else 8
+        for nodes, devs in grids:
+            for ren in (False, True):
+                configs.append((f"{name}-{nodes}x{devs}-r{int(ren)}", per,
+                                lambda b=builder, n=nodes, d=devs, r=ren:
+                                _lower(b(), n, d, renaming=r)))
+    for nodes, devs in [(2, 2), (3, 1)]:
+        configs.append((f"coll-{nodes}x{devs}", 8,
+                        lambda n=nodes, d=devs:
+                        _lower(_wave_tdag(), n, d, collectives=True)))
+
+    total = detected = attributed = 0
+    ops: dict[str, int] = {}
+    miss_log = []
+    for k, (tag, per, build) in enumerate(configs):
+        res = run_mutation_campaign(build, mutants=per, seed=1000 + 17 * k)
+        assert res.skipped == 0, tag
+        total += res.total
+        detected += res.detected
+        attributed += res.attributed
+        for op, (t_, _a) in res.by_op().items():
+            ops[op] = ops.get(op, 0) + t_
+        miss_log += [f"{tag}: {m.mutation.op} {m.mutation.detail[:90]} -> "
+                     f"{[str(i)[:90] for i in m.issues[:2]]}"
+                     for m in res.misses()]
+    assert total >= 200, total
+    assert detected / total >= 0.95, (detected, total, miss_log[:10])
+    assert attributed / total >= 0.95, (attributed, total, miss_log[:10])
+    fired = set(ops)
+    expect = {"drop-edge", "retarget-edge", "cycle-edge", "drop-free",
+              "double-free", "drop-alloc", "drop-frag", "retarget-send",
+              "drop-pilot"}
+    assert expect <= fired, sorted(expect - fired)
